@@ -1,0 +1,80 @@
+"""Paper Figs 6–7: fib — recursive tasks, unroll-then-offload, imbalance.
+
+The host expands fib's recursion until ≥1 task per device (paper §5.5), then
+offloads the subtrees.  Each leaf's *work* is proportional to its subtree
+size (≈ φⁿ), reproducing the paper's imbalance: for small n (paper: fib 35)
+there isn't enough work and offload loses to a single node; for larger n
+(fib 45) speedups appear but stay modest because the frontier tasks are
+unequal (fib(n−1) vs fib(n−2) subtrees).
+
+Communication is two integers per task — the workload with the highest
+compute/comm ratio, but the worst balance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ClusterRuntime, KernelTable, MapSpec,
+                        recursive_offload)
+
+_WORK_PER_CALL = 600        # inner flops per simulated recursive call
+
+
+def _make_table() -> KernelTable:
+    table = KernelTable()
+
+    @table.kernel("fib_subtree")
+    def fib_subtree(n):
+        """Computes fib(n) the recursive-work way: calls(n) ≈ 2·fib(n)−1
+        busy-loop units, so leaf compute matches the subtree it replaces."""
+        def fib_pair(k):
+            def step(_, ab):
+                return ab[1], ab[0] + ab[1]
+            return jax.lax.fori_loop(0, k, step,
+                                     (jnp.zeros((), jnp.float32),
+                                      jnp.ones((), jnp.float32)))
+
+        fib_n, _ = fib_pair(n.astype(jnp.int32))
+        calls = 2.0 * fib_n - 1.0                 # recursion tree size
+        iters = (calls * _WORK_PER_CALL).astype(jnp.int32)
+
+        def busy(i, acc):                          # VPU busy work
+            return acc * 1.0000001 + 1e-7
+        acc = jax.lax.fori_loop(0, iters, busy, jnp.ones((128,)))
+        # fold the busy result into the output so XLA cannot DCE the loop
+        # (acc is finite, so the correction term is exactly 0)
+        return {"out": fib_n + jnp.where(jnp.isinf(acc.sum()), 1.0, 0.0)}
+
+    return table
+
+
+def run(size: str = "small", device_counts=(1, 2, 4, 8)):
+    from .common import run_curve
+    n = {"small": 8, "large": 21}[size]          # paper: 35 vs 45, scaled
+    table = _make_table()
+
+    def split(k):
+        return [k - 1, k - 2] if k > 2 else None
+
+    def combine(_k, kids):
+        return kids[0] + kids[1]
+
+    def make_maps(k):
+        return MapSpec(to={"n": jnp.asarray(k, jnp.int32)},
+                       from_={"out": jax.ShapeDtypeStruct((), jnp.float32)})
+
+    def workload(rt: ClusterRuntime, n_dev: int):
+        return recursive_offload(rt.ex, "fib_subtree", n, split, combine,
+                                 make_maps, nowait=False)
+
+    def serial(rt: ClusterRuntime):
+        return rt.target("fib_subtree", 0, make_maps(n))
+
+    return run_curve("fib", size, table, workload, serial=serial,
+                     device_counts=device_counts)
+
+
+if __name__ == "__main__":
+    for size in ("small", "large"):
+        print(run(size).render())

@@ -1,0 +1,81 @@
+"""Paper Figs 4–5: mandelbrot — compute ∝ pixels·iter, comm ∝ pixels.
+
+Each device renders a strip of rows (paper §5.4); the only communication is
+the strip coming back (`map(from:...)`), so speedup improves with image size
+exactly as the paper reports (2600² → 1.85×, 4600² → 3.18×: "the work load
+increases significantly but the amount of communications does not increase
+as dramatically").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ClusterRuntime, KernelTable, MapSpec, offload_strips
+from repro.kernels.mandelbrot.ref import mandelbrot_ref
+
+
+def _make_table(width: int, total_height: int, max_iter: int) -> KernelTable:
+    """One compiled kernel serves every strip: global row ids are a traced
+    input (vs. the Pallas kernel's static row_offset used on TPU)."""
+    table2 = KernelTable()
+
+    @table2.kernel("mandel_strip")
+    def mandel_strip2(rows):
+        """rows [n] int32 (global row ids) → {"out": [n, width] counts}."""
+        xmin, xmax, ymin, ymax = -2.0, 0.6, -1.3, 1.3
+        cols = jnp.arange(width)[None, :]
+        cx = xmin + cols.astype(jnp.float32) * ((xmax - xmin) / (width - 1))
+        cy = (ymin + rows[:, None].astype(jnp.float32)
+              * ((ymax - ymin) / (total_height - 1)))
+
+        def body(_, state):
+            zx, zy, count, alive = state
+            zx2, zy2 = zx * zx, zy * zy
+            alive = alive & (zx2 + zy2 <= 4.0)
+            nzx = zx2 - zy2 + cx
+            nzy = 2.0 * zx * zy + cy
+            zx = jnp.where(alive, nzx, zx)
+            zy = jnp.where(alive, nzy, zy)
+            return zx, zy, count + alive.astype(jnp.int32), alive
+
+        z = jnp.zeros_like(cy * cx)
+        init = (z, z, jnp.zeros(z.shape, jnp.int32), jnp.ones(z.shape, bool))
+        _, _, count, _ = jax.lax.fori_loop(0, max_iter, body, init)
+        return {"out": count}
+
+    return table2
+
+
+def run(size: str = "small", device_counts=(1, 2, 4, 8)):
+    from .common import run_curve
+    H = W = {"small": 416, "large": 832}[size]
+    max_iter = 300
+    table = _make_table(W, H, max_iter)
+    all_rows = jnp.arange(H, dtype=jnp.int32)
+
+    def workload(rt: ClusterRuntime, n: int):
+        from repro.core import sec
+
+        def make_maps(start, length):
+            return MapSpec(
+                to={"rows": sec(all_rows, start, length)},
+                from_={"out": jax.ShapeDtypeStruct((length, W), jnp.int32)})
+
+        return offload_strips(rt.ex, "mandel_strip", H, make_maps,
+                              nowait=False)
+
+    def serial(rt: ClusterRuntime):
+        return rt.target("mandel_strip", 0, MapSpec(
+            to={"rows": all_rows},
+            from_={"out": jax.ShapeDtypeStruct((H, W), jnp.int32)}))
+
+    return run_curve("mandelbrot", size, table, workload, serial=serial,
+                     device_counts=device_counts)
+
+
+if __name__ == "__main__":
+    for size in ("small", "large"):
+        print(run(size).render())

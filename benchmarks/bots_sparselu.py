@@ -1,0 +1,162 @@
+"""Paper Figs 8–9: sparselu — comm-bound block LU, the workload that loses.
+
+Block LU over a K×K grid of B×B blocks with the BOTS task kernels
+(lu0/fwd/bdiv/bmod).  Every inter-task dependency crosses the host (OpenMP
+forbids device↔device transfers), so each factorization step re-sends
+block operands and fetches block results: the whole matrix crosses the
+network multiple times (paper: "in essence, the whole array must be
+transferred two times" — that is the *lower* bound; the task DAG moves
+more).  Expected result, as in the paper: no speedup on the Ethernet-class
+link, *regardless* of device count.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ClusterRuntime, DagTask, KernelTable, MapSpec,
+                        RuntimeConfig, wavefront_offload)
+from repro.kernels.block_lu.ref import bdiv_ref, bmod_ref, fwd_ref, lu0_ref
+
+
+def _make_table(K: int) -> KernelTable:
+    table = KernelTable()
+    table.register("lu0", lambda a: {"out": lu0_ref(a)})
+    table.register("fwd", lambda lu, a: {"out": fwd_ref(lu, a)})
+    table.register("bdiv", lambda lu, a: {"out": bdiv_ref(lu, a)})
+    table.register("bmod", lambda a, l, u: {"out": bmod_ref(a, l, u)})
+
+    def serial(mat):
+        """Whole factorization as one kernel (the single-node original)."""
+        blocks = {(i, j): mat[i, j] for i in range(K) for j in range(K)}
+        for k in range(K):
+            blocks[(k, k)] = lu0_ref(blocks[(k, k)])
+            for j in range(k + 1, K):
+                blocks[(k, j)] = fwd_ref(blocks[(k, k)], blocks[(k, j)])
+            for i in range(k + 1, K):
+                blocks[(i, k)] = bdiv_ref(blocks[(k, k)], blocks[(i, k)])
+            for i in range(k + 1, K):
+                for j in range(k + 1, K):
+                    blocks[(i, j)] = bmod_ref(blocks[(i, j)],
+                                              blocks[(i, k)], blocks[(k, j)])
+        out = jnp.stack([jnp.stack([blocks[(i, j)] for j in range(K)])
+                         for i in range(K)])
+        return {"out": out}
+
+    table.register("sparselu_serial", serial)
+    return table
+
+
+def _matrix(K: int, B: int, seed: int = 0) -> jax.Array:
+    rng = np.random.default_rng(seed)
+    m = rng.standard_normal((K, K, B, B)).astype(np.float32)
+    for i in range(K):
+        m[i, i] += np.eye(B) * (4 * B)          # diagonally dominant
+    return jnp.asarray(m)
+
+
+def _build_dag(mat: jax.Array, K: int, B: int):
+    sds = jax.ShapeDtypeStruct((B, B), jnp.float32)
+
+    def blk(i, j, k):
+        """Name of the task producing block (i,j) entering step k."""
+        if k == 0:
+            return None                          # initial matrix block
+        if i == k - 1 and j == k - 1:
+            return f"lu0_{k-1}"
+        if i == k - 1:
+            return f"fwd_{k-1}_{j}"
+        if j == k - 1:
+            return f"bdiv_{k-1}_{i}"
+        return f"bmod_{k-1}_{i}_{j}"
+
+    tasks = []
+    for k in range(K):
+        dep = blk(k, k, k)
+        tasks.append(DagTask(
+            f"lu0_{k}", "lu0", tuple(d for d in (dep,) if d),
+            (lambda dep=dep, k=k: lambda deps: MapSpec(
+                to={"a": deps[dep] if dep else mat[k, k]}, from_={"out": sds}))()))
+        for j in range(k + 1, K):
+            dep = blk(k, j, k)
+            tasks.append(DagTask(
+                f"fwd_{k}_{j}", "fwd", tuple(d for d in (f"lu0_{k}", dep) if d),
+                (lambda dep=dep, k=k, j=j: lambda deps: MapSpec(
+                    to={"lu": deps[f"lu0_{k}"],
+                        "a": deps[dep] if dep else mat[k, j]},
+                    from_={"out": sds}))()))
+        for i in range(k + 1, K):
+            dep = blk(i, k, k)
+            tasks.append(DagTask(
+                f"bdiv_{k}_{i}", "bdiv", tuple(d for d in (f"lu0_{k}", dep) if d),
+                (lambda dep=dep, k=k, i=i: lambda deps: MapSpec(
+                    to={"lu": deps[f"lu0_{k}"],
+                        "a": deps[dep] if dep else mat[i, k]},
+                    from_={"out": sds}))()))
+        for i in range(k + 1, K):
+            for j in range(k + 1, K):
+                dep = blk(i, j, k)
+                deps_t = tuple(d for d in (f"bdiv_{k}_{i}", f"fwd_{k}_{j}", dep) if d)
+                tasks.append(DagTask(
+                    f"bmod_{k}_{i}_{j}", "bmod", deps_t,
+                    (lambda dep=dep, k=k, i=i, j=j: lambda deps: MapSpec(
+                        to={"a": deps[dep] if dep else mat[i, j],
+                            "l": deps[f"bdiv_{k}_{i}"],
+                            "u": deps[f"fwd_{k}_{j}"]},
+                        from_={"out": sds}))()))
+    return tasks
+
+
+def run(size: str = "small", device_counts=(1, 2, 4, 8)):
+    from .common import run_curve
+    K, B = {"small": (4, 64), "large": (5, 96)}[size]
+    mat = _matrix(K, B)
+    table = _make_table(K)
+    tasks = _build_dag(mat, K, B)
+
+    def workload(rt: ClusterRuntime, n: int):
+        return wavefront_offload(rt.ex, tasks, nowait=False)
+
+    def serial(rt: ClusterRuntime):
+        return rt.target("sparselu_serial", 0, MapSpec(
+            to={"mat": mat},
+            from_={"out": jax.ShapeDtypeStruct((K, K, B, B), jnp.float32)}))
+
+    return run_curve("sparselu", size, table, workload, serial=serial,
+                     device_counts=device_counts)
+
+
+def verify(size: str = "small") -> float:
+    """Distributed factorization == serial kernel (max abs diff)."""
+    K, B = {"small": (4, 64), "large": (5, 96)}[size]
+    mat = _matrix(K, B)
+    table = _make_table(K)
+    rt = ClusterRuntime(RuntimeConfig(n_virtual=3), table=table)
+    res = wavefront_offload(rt.ex, _build_dag(mat, K, B), nowait=False)
+    serial = rt.target("sparselu_serial", 0, MapSpec(
+        to={"mat": mat},
+        from_={"out": jax.ShapeDtypeStruct((K, K, B, B), jnp.float32)}))["out"]
+    rt.shutdown()
+
+    def final(i, j):
+        k_last = min(i, j)
+        if i == j:
+            return res[f"lu0_{i}"]
+        if i < j:
+            return res[f"fwd_{i}_{j}"]
+        return res[f"bdiv_{j}_{i}"]
+
+    err = 0.0
+    for i in range(K):
+        for j in range(K):
+            err = max(err, float(jnp.abs(final(i, j) - serial[i, j]).max()))
+    return err
+
+
+if __name__ == "__main__":
+    print("verify err:", verify("small"))
+    for size in ("small", "large"):
+        print(run(size).render())

@@ -1,0 +1,111 @@
+"""Shared benchmark harness: paper-style speedup curves over device counts.
+
+Timing model (documented in EXPERIMENTS.md §Repro): this container has one
+CPU core, so per-task *compute* seconds are measured with serial dispatch
+(uncontended), and the parallel makespan comes from the runtime's CostModel —
+devices modeled concurrent, all host↔device transfers serialized through the
+host NIC at the paper's link speed (Gbit Ethernet, 125 MB/s + 50 µs/message).
+This mirrors the paper's §5 setup: compute scales with devices, communication
+does not.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.core import ClusterRuntime, KernelTable, RuntimeConfig
+from repro.core.costmodel import PAPER_ETHERNET, LinkModel
+
+
+@dataclass
+class CurvePoint:
+    devices: int
+    compute_s: float
+    comm_s: float
+    makespan_s: float
+    makespan_overlap_s: float
+    bytes_to: float
+    bytes_from: float
+    speedup: float
+    speedup_overlap: float
+
+
+@dataclass
+class Curve:
+    name: str
+    size: str
+    serial_s: float
+    points: List[CurvePoint] = field(default_factory=list)
+
+    def to_dict(self):
+        return {"name": self.name, "size": self.size, "serial_s": self.serial_s,
+                "points": [vars(p) for p in self.points]}
+
+    def render(self) -> str:
+        hdr = (f"## {self.name} ({self.size})  serial={self.serial_s:.3f}s\n"
+               f"{'devs':>5} {'compute_s':>10} {'comm_s':>9} {'makespan':>9} "
+               f"{'speedup':>8} {'overlap':>8} {'MB_to':>8} {'MB_from':>8}")
+        rows = [f"{p.devices:>5} {p.compute_s:>10.3f} {p.comm_s:>9.3f} "
+                f"{p.makespan_s:>9.3f} {p.speedup:>8.2f} "
+                f"{p.speedup_overlap:>8.2f} {p.bytes_to/1e6:>8.2f} "
+                f"{p.bytes_from/1e6:>8.2f}"
+                for p in self.points]
+        return "\n".join([hdr] + rows)
+
+
+def run_curve(name: str, size: str, table: KernelTable,
+              workload: Callable[[ClusterRuntime, int], Any], *,
+              serial: Callable[[ClusterRuntime], Any],
+              device_counts=(1, 2, 4, 8),
+              link: LinkModel = PAPER_ETHERNET,
+              comm_mode: str = "host-mediated",
+              warmup: bool = True, repeats: int = 3) -> Curve:
+    """``workload(rt, n_devices)`` runs the offloaded program; ``serial(rt)``
+    runs the single-device original (the paper's baseline).  Each point is
+    the median of ``repeats`` runs (1-core wall-clock noise)."""
+    def median_run(rt, fn):
+        sums = []
+        for _ in range(max(repeats, 1)):
+            rt.cost.reset()
+            fn()
+            sums.append(rt.cost.summary())
+        sums.sort(key=lambda s: s["makespan_s"])
+        return sums[len(sums) // 2]
+
+    # serial baseline on a 1-device pool
+    rt = ClusterRuntime(RuntimeConfig(n_virtual=1, link=link,
+                                      comm_mode=comm_mode), table=table)
+    if warmup:
+        serial(rt)
+    s0 = median_run(rt, lambda: serial(rt))
+    rt.shutdown()
+    serial_s = s0["compute_s"]
+
+    curve = Curve(name=name, size=size, serial_s=serial_s)
+    for n in device_counts:
+        rt = ClusterRuntime(RuntimeConfig(n_virtual=n, link=link,
+                                          comm_mode=comm_mode), table=table)
+        if warmup:
+            workload(rt, n)        # jit-warm every device's kernel cache
+        s = median_run(rt, lambda: workload(rt, n))
+        rt.shutdown()
+        curve.points.append(CurvePoint(
+            devices=n, compute_s=s["compute_s"], comm_s=s["comm_s"],
+            makespan_s=s["makespan_s"],
+            makespan_overlap_s=s["makespan_overlap_s"],
+            bytes_to=s["bytes_to"], bytes_from=s["bytes_from"],
+            speedup=serial_s / s["makespan_s"] if s["makespan_s"] else 0.0,
+            speedup_overlap=(serial_s / s["makespan_overlap_s"]
+                             if s["makespan_overlap_s"] else 0.0)))
+    return curve
+
+
+def save_results(path: str, curves: List[Curve]) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump([c.to_dict() for c in curves], f, indent=1)

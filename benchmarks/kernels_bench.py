@@ -1,0 +1,89 @@
+"""Kernel microbench: XLA-path wall time + analytic VMEM/intensity table.
+
+Real TPU timing is unavailable here; this bench (a) times the *oracle* XLA
+paths on CPU as a regression canary, and (b) derives the Pallas kernels'
+static tile economics — VMEM working set per grid step and arithmetic
+intensity — which is how the BlockSpecs were chosen (DESIGN.md §kernels).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, reps: int = 5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def flash_tile_stats(block_q=128, block_kv=128, d=128, dtype_bytes=2) -> Dict:
+    vmem = (block_q * d + 2 * block_kv * d) * dtype_bytes \
+        + block_q * d * 4 + 2 * block_q * 4          # q,k,v + f32 acc,m,l
+    flops = 2 * block_q * block_kv * d * 2           # qk^T + pv
+    hbm = (block_q * d + 2 * block_kv * d) * dtype_bytes
+    return {"kernel": "flash_attention", "vmem_KB": vmem / 1024,
+            "flops_per_byte": flops / hbm}
+
+
+def ssd_tile_stats(chunk=128, N=128, P=64, dtype_bytes=2) -> Dict:
+    vmem = (chunk * P + 2 * chunk * N + chunk) * dtype_bytes + N * P * 4
+    flops = 2 * chunk * chunk * N + 2 * chunk * chunk * P + 4 * chunk * N * P
+    hbm = (chunk * P + 2 * chunk * N) * dtype_bytes
+    return {"kernel": "ssd_scan", "vmem_KB": vmem / 1024,
+            "flops_per_byte": flops / hbm}
+
+
+def gmm_tile_stats(bc=128, bf=128, bd=512, dtype_bytes=2) -> Dict:
+    vmem = (bc * bd + bd * bf) * dtype_bytes + bc * bf * 4
+    flops = 2 * bc * bf * bd
+    hbm = (bc * bd + bd * bf) * dtype_bytes
+    return {"kernel": "grouped_matmul", "vmem_KB": vmem / 1024,
+            "flops_per_byte": flops / hbm}
+
+
+def run() -> List[Dict]:
+    rows = [flash_tile_stats(), ssd_tile_stats(), gmm_tile_stats()]
+
+    # CPU oracle timings (regression canary, small shapes)
+    from repro.models.attention import blockwise_attention
+    from repro.models.ssm import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = jax.random.normal(ks[0], (1, 512, 8, 64))
+    k = jax.random.normal(ks[1], (1, 512, 2, 64))
+    v = jax.random.normal(ks[2], (1, 512, 2, 64))
+    attn = jax.jit(lambda q, k, v: blockwise_attention(q, k, v, causal=True))
+    rows.append({"kernel": "blockwise_attention(XLA,cpu)",
+                 "wall_ms": 1e3 * _time(attn, q, k, v)})
+
+    x = jax.random.normal(ks[0], (1, 512, 8, 32))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 512, 8)))
+    A = -jnp.exp(jax.random.normal(ks[2], (8,)) * 0.3)
+    B = jax.random.normal(ks[3], (1, 512, 2, 16))
+    C = jax.random.normal(ks[4], (1, 512, 2, 16))
+    ssd = jax.jit(lambda *a: ssd_chunked(*a, chunk=128))
+    rows.append({"kernel": "ssd_chunked(XLA,cpu)",
+                 "wall_ms": 1e3 * _time(ssd, x, dt, A, B, C)})
+    return rows
+
+
+def render(rows: List[Dict]) -> str:
+    out = ["## kernel tile economics + oracle timings"]
+    for r in rows:
+        parts = [f"{k}={v:.2f}" if isinstance(v, float) else f"{k}={v}"
+                 for k, v in r.items() if k != "kernel"]
+        out.append(f"  {r['kernel']:<32} " + "  ".join(parts))
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(render(run()))

@@ -1,0 +1,80 @@
+"""Aggregate the dry-run artifacts into the §Roofline table (deliverable g).
+
+Reads every ``artifacts/dryrun/*.json`` written by ``repro.launch.dryrun``
+and renders the per-(arch × shape × mesh) three-term roofline table plus the
+bottleneck and MODEL_FLOPS/HLO_FLOPs ratio, in the exact form EXPERIMENTS.md
+§Roofline embeds.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+
+def load(art_dir: str = "artifacts/dryrun",
+         rules: Optional[str] = None) -> List[Dict]:
+    out = []
+    for fn in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        base = os.path.basename(fn)[:-5]
+        parts = base.split("__")
+        variant = parts[3] if len(parts) > 3 else "default"
+        if rules is not None and variant != rules:
+            continue
+        with open(fn) as f:
+            rec = json.load(f)
+        rec["rules"] = variant
+        out.append(rec)
+    return out
+
+
+def render_table(recs: List[Dict], *, mesh: str = "single",
+                 rules: str = "default") -> str:
+    rows = [r for r in recs if r["mesh"] == mesh and r["rules"] == rules]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = ("| arch | shape | t_compute | t_memory | t_collective | bottleneck "
+           "| useful ratio | roofline frac | GB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        gb = (r["memory_analysis"].get("argument_bytes", 0)
+              + r["memory_analysis"].get("temp_bytes", 0)
+              + r["memory_analysis"].get("output_bytes", 0)
+              - r["memory_analysis"].get("alias_bytes", 0)) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f}s "
+            f"| {r['t_memory_s']:.4f}s | {r['t_collective_s']:.4f}s "
+            f"| **{r['bottleneck']}** | {r['useful_flops_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.3f} | {gb:.2f} |")
+    return "\n".join(lines)
+
+
+def summarize(recs: List[Dict]) -> Dict[str, List[str]]:
+    """Pick the hillclimb cells: worst fraction, most collective-bound."""
+    single = [r for r in recs if r["mesh"] == "single" and r["rules"] == "default"]
+    trains = [r for r in single if r["kind"] == "train"]
+    worst = min(trains, key=lambda r: r["roofline_fraction"])
+    coll = max(single, key=lambda r: (r["t_collective_s"] /
+                                      max(r["t_compute_s"], 1e-12)))
+    return {"worst_fraction": [worst["arch"], worst["shape"]],
+            "most_collective": [coll["arch"], coll["shape"]]}
+
+
+def main() -> int:
+    recs = load()
+    for mesh in ("single", "multi"):
+        n = sum(1 for r in recs if r["mesh"] == mesh and r["rules"] == "default")
+        print(f"\n### mesh={mesh} (default rules, {n} cells)\n")
+        print(render_table(recs, mesh=mesh))
+    print("\nhillclimb candidates:", json.dumps(summarize(recs)))
+    os.makedirs("artifacts", exist_ok=True)
+    with open("artifacts/roofline_table.md", "w") as f:
+        for mesh in ("single", "multi"):
+            f.write(f"\n### mesh={mesh} (default rules)\n\n")
+            f.write(render_table(recs, mesh=mesh) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,100 @@
+"""Benchmark driver (deliverable d): one benchmark per paper table/figure.
+
+  Figs 2–3  alignment   (strip offload, one-shot broadcast — scales)
+  Figs 4–5  mandelbrot  (strip offload, result strips — scales with size)
+  Figs 6–7  fib         (recursive unroll-then-offload — imbalance-limited)
+  Figs 8–9  sparselu    (host-mediated wavefront — comm-bound, no speedup)
+  §6        comm modes  (host-funnel vs direct vs int8 — future work, done)
+  —         kernels     (Pallas tile economics + oracle canaries)
+  §Roofline roofline    (aggregates artifacts/dryrun if present)
+
+`python -m benchmarks.run` runs everything at quick sizes and writes
+artifacts/bench/results.json; exit code 1 if any paper-claim check fails.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from . import (bots_alignment, bots_fib, bots_mandelbrot, bots_sparselu,
+               comm_modes, kernels_bench, roofline)
+from .common import save_results
+
+
+def check_paper_claims(curves) -> list:
+    """The qualitative findings of §5, asserted on our curves."""
+    by = {(c.name, c.size): c for c in curves}
+    failures = []
+
+    def sp(name, size, devs):
+        c = by[(name, size)]
+        return next(p.speedup for p in c.points if p.devices == devs)
+
+    # Figs 2–3: alignment scales with devices; large ≥ 4× at 8 devices
+    if not (sp("alignment", "large", 8) > sp("alignment", "large", 2) > 1.2):
+        failures.append("alignment does not scale with devices")
+    if sp("alignment", "large", 8) < 4.0:
+        failures.append("alignment large-input speedup below linear-ish")
+    # Figs 4–5: mandelbrot speedup grows with image size (at 8 devices)
+    if not sp("mandelbrot", "large", 8) >= sp("mandelbrot", "small", 8) * 0.9:
+        failures.append("mandelbrot speedup does not grow with image size")
+    # Figs 6–7: fib small has ~no speedup (≤1.5); large positive but < ideal
+    if sp("fib", "small", 8) > 1.5:
+        failures.append("fib small-input should not benefit (paper: 0.91)")
+    if not (1.2 < sp("fib", "large", 8) < 7.5):
+        failures.append("fib large should give modest (imbalance-limited) speedup")
+    # Figs 8–9: sparselu gains nothing at any device count
+    if any(sp("sparselu", s, d) > 1.0 for s in ("small", "large")
+           for d in (2, 4, 8)):
+        failures.append("sparselu should be comm-bound (no speedup)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--out", default="artifacts/bench")
+    args = ap.parse_args(argv)
+
+    curves = []
+    for mod in (bots_alignment, bots_mandelbrot, bots_fib, bots_sparselu):
+        for size in ("small", "large"):
+            c = mod.run(size)
+            curves.append(c)
+            print(c.render(), flush=True)
+            print()
+
+    err = bots_sparselu.verify("small")
+    print(f"sparselu distributed == serial: max abs err {err:.2e}\n", flush=True)
+
+    cm = comm_modes.run()
+    print(comm_modes.render(cm), flush=True)
+    print()
+    kb = kernels_bench.run()
+    print(kernels_bench.render(kb), flush=True)
+
+    os.makedirs(args.out, exist_ok=True)
+    save_results(os.path.join(args.out, "results.json"), curves)
+    with open(os.path.join(args.out, "comm_modes.json"), "w") as f:
+        json.dump(cm, f, indent=1)
+
+    if not args.skip_roofline and os.path.isdir("artifacts/dryrun"):
+        print("\n(roofline table from dry-run artifacts)", flush=True)
+        roofline.main()
+
+    failures = check_paper_claims(curves)
+    if err > 1e-3:
+        failures.append(f"sparselu verification error {err}")
+    if failures:
+        print("\nPAPER-CLAIM CHECK FAILURES:", flush=True)
+        for f in failures:
+            print("  -", f)
+        return 1
+    print("\nall paper-claim checks PASSED", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

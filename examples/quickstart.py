@@ -1,0 +1,79 @@
+"""Quickstart: the paper's Listings 1 & 2 in this framework.
+
+Listing 1 — array addition on ONE device, with map(to/from) clauses.
+Listing 2 — the same addition strip-partitioned across 8 devices with array
+sections and nowait, exactly the multi-device restructuring of §5.1.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ClusterRuntime, MapSpec, RuntimeConfig, kernel, sec,
+                        offload_strips)
+
+SIZE = 1024
+
+
+# --- the "kernel function" OMPi would outline from the target block --------
+@kernel("add_arrays")
+def add_arrays(a, b):
+    return {"c": a + b}
+
+
+def listing1(rt: ClusterRuntime, a, b):
+    """#pragma omp target map(to:a,b) map(from:c) — one device."""
+    out = rt.target("add_arrays", device=0, maps=MapSpec(
+        to={"a": a, "b": b},
+        from_={"c": jax.ShapeDtypeStruct((SIZE,), jnp.float32)}))
+    return out["c"]
+
+
+def listing2(rt: ClusterRuntime, a, b):
+    """One nowait target region per device, array sections (paper Listing 2)."""
+    futs = []
+    n_dev = len(rt.pool)
+    chunk = SIZE // n_dev
+    for d in range(n_dev):
+        start = d * chunk
+        futs.append(rt.target("add_arrays", device=d, maps=MapSpec(
+            to={"a": sec(a, start, chunk), "b": sec(b, start, chunk)},
+            from_={"c": jax.ShapeDtypeStruct((chunk,), jnp.float32)}),
+            nowait=True))
+    parts = rt.taskwait()
+    return jnp.concatenate([p["c"] for p in parts])
+
+
+def main():
+    a = jnp.arange(SIZE, dtype=jnp.float32)
+    b = jnp.ones(SIZE, dtype=jnp.float32)
+
+    rt = ClusterRuntime(RuntimeConfig(n_virtual=8))
+    c1 = listing1(rt, a, b)
+    c2 = listing2(rt, a, b)
+    np.testing.assert_allclose(c1, a + b)
+    np.testing.assert_allclose(c2, a + b)
+
+    s = rt.cost.summary()
+    print("Listing 1 (1 device) + Listing 2 (8 devices) both correct.")
+    print(f"bytes host→device: {s['bytes_to']:.0f}  device→host: "
+          f"{s['bytes_from']:.0f}")
+    print("command trace (first 8):",
+          [f"{c.op}@{c.device}" for c in rt.pool.trace[:8]])
+    # the equivalent of offload_strips doing Listing 2 in one call:
+    c3 = offload_strips(
+        rt.ex, "add_arrays", SIZE,
+        lambda s0, ln: MapSpec(to={"a": sec(a, s0, ln), "b": sec(b, s0, ln)},
+                               from_={"c": jax.ShapeDtypeStruct((ln,), jnp.float32)}),
+        out_name="c")
+    np.testing.assert_allclose(c3, a + b)
+    print("offload_strips pattern: OK")
+    rt.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .manager import (CheckpointManager, CheckpointConfig, save_pytree,
+                      restore_pytree, latest_step)
+
+__all__ = ["CheckpointManager", "CheckpointConfig", "save_pytree",
+           "restore_pytree", "latest_step"]

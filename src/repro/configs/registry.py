@@ -1,0 +1,132 @@
+"""Architecture registry: ``--arch <id>`` lookup, shape cells, input specs.
+
+The 40-cell assignment matrix is ARCHS × SHAPES; :func:`shape_cells` marks
+the documented skips (``long_500k`` for non-sub-quadratic archs — DESIGN.md
+§Arch-applicability) so the dry-run driver, tests and EXPERIMENTS.md all
+enumerate the same cells.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import ModelConfig
+from . import (gemma3_4b, gemma_7b, internvl2_2b, kimi_k2_1t_a32b,
+               mamba2_130m, minitron_4b, moonshot_v1_16b_a3b, qwen2_72b,
+               seamless_m4t_large_v2, zamba2_2_7b)
+
+_MODULES = [zamba2_2_7b, seamless_m4t_large_v2, gemma_7b, qwen2_72b,
+            minitron_4b, gemma3_4b, internvl2_2b, moonshot_v1_16b_a3b,
+            kimi_k2_1t_a32b, mamba2_130m]
+
+ARCHS: Dict[str, Any] = {m.ARCH_ID: m for m in _MODULES}
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch].config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return ARCHS[arch].smoke()
+
+
+def shape_cells(arch: str) -> List[Tuple[str, str, str]]:
+    """[(shape_name, 'run'|'skip', reason)] for the 4 assigned shapes."""
+    cfg = get_config(arch)
+    out = []
+    for name, spec in SHAPES.items():
+        if name == "long_500k" and not cfg.sub_quadratic:
+            out.append((name, "skip",
+                        "full quadratic attention; sub-quadratic required "
+                        "(DESIGN.md §Arch-applicability)"))
+        else:
+            out.append((name, "run", ""))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — no allocation; dry-run contract)
+# ---------------------------------------------------------------------------
+def _i32(*shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.int32)
+
+
+def _emb(cfg: ModelConfig, *shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(cfg.compute_dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Batch-dict ShapeDtypeStructs for one (arch × shape) cell.
+
+    train/prefill return the full batch dict; decode returns
+    {token, pos} — the cache spec is derived by the driver via
+    ``jax.eval_shape`` over ``Model.make_cache`` (it depends on params for
+    enc-dec cross projections).
+    """
+    B, S = shape.batch, shape.seq
+    if shape.kind in ("train", "prefill"):
+        if cfg.is_encdec:
+            half = S // 2
+            d = {"enc_embeds": _emb(cfg, B, half, cfg.d_model),
+                 "tokens": _i32(B, half)}
+            if shape.kind == "train":
+                d["labels"] = _i32(B, half)
+            return d
+        if cfg.family == "vlm":
+            text = S - cfg.frontend_seq
+            d = {"embeds": _emb(cfg, B, cfg.frontend_seq, cfg.d_model),
+                 "tokens": _i32(B, text)}
+            if shape.kind == "train":
+                d["labels"] = _i32(B, text)
+            return d
+        d = {"tokens": _i32(B, S)}
+        if shape.kind == "train":
+            d["labels"] = _i32(B, S)
+        return d
+    if shape.kind == "decode":
+        return {"token": _i32(B, 1), "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def smoke_batch(cfg: ModelConfig, rng: Optional[jax.Array] = None,
+                batch: int = 2, seq: int = 32) -> Dict[str, jax.Array]:
+    """A real (allocated) tiny batch for a *smoke* config."""
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    ks = jax.random.split(rng, 3)
+    d: Dict[str, jax.Array] = {}
+    if cfg.is_encdec:
+        d["enc_embeds"] = jax.random.normal(
+            ks[2], (batch, seq // 2, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+        text = seq // 2
+    elif cfg.family == "vlm":
+        d["embeds"] = jax.random.normal(
+            ks[2], (batch, cfg.frontend_seq, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype))
+        text = seq
+    else:
+        text = seq
+    d["tokens"] = jax.random.randint(ks[0], (batch, text), 0, cfg.vocab)
+    d["labels"] = jax.random.randint(ks[1], (batch, text), 0, cfg.vocab)
+    return d

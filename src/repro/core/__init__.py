@@ -1,0 +1,31 @@
+"""repro.core — the paper's contribution: cluster nodes as OpenMP-style devices.
+
+Public API:
+  KernelTable / kernel         stable-integer kernel registry (paper §4.1)
+  MediaryStore / HostMirror    buffer-handle indirection (paper §4.2)
+  NodeDevice / DevicePool      devices over nodes / mesh slices / virtual shares
+  MapSpec / sec / TargetExecutor   target regions with map(to/from/tofrom/alloc)
+  strip_partition / offload_strips / recursive_offload / wavefront_offload
+  ClusterRuntime / RuntimeConfig   deployable runtime, comm modes, cost model
+"""
+from .costmodel import (CostModel, LinkModel, PAPER_ETHERNET, TPU_DCN, TPU_ICI,
+                        PEAK_FLOPS_BF16, HBM_BW_Bps, ICI_BW_Bps)
+from .device import Command, DevicePool, NodeDevice
+from .kernel_table import GLOBAL_KERNEL_TABLE, KernelTable, kernel
+from .mediary import RESERVED, HostMirror, MediaryStore
+from .runtime import ClusterRuntime, RuntimeConfig
+from .scheduler import (DagTask, offload_strips, recursive_offload,
+                        strip_partition, wavefront_offload)
+from .target import MapSpec, Section, TargetExecutor, TargetFuture, sec
+
+__all__ = [
+    "KernelTable", "kernel", "GLOBAL_KERNEL_TABLE",
+    "MediaryStore", "HostMirror", "RESERVED",
+    "NodeDevice", "DevicePool", "Command",
+    "MapSpec", "Section", "sec", "TargetExecutor", "TargetFuture",
+    "strip_partition", "offload_strips", "recursive_offload",
+    "wavefront_offload", "DagTask",
+    "ClusterRuntime", "RuntimeConfig",
+    "CostModel", "LinkModel", "PAPER_ETHERNET", "TPU_ICI", "TPU_DCN",
+    "PEAK_FLOPS_BF16", "HBM_BW_Bps", "ICI_BW_Bps",
+]

@@ -1,0 +1,83 @@
+"""Gradient compression for slow links (beyond-paper distributed-opt trick).
+
+The paper's bottleneck is the host funnel on a Gbit link; its future work asks
+"to find ways to reduce the overheads".  One standard lever at 1000-node scale
+is compressing the gradient exchange on the slow (DCN / host) axis.  We
+implement int8 uniform quantization with per-block scales and *error
+feedback* (the residual of each round is added back before the next), which
+preserves convergence for SGD-family optimizers.
+
+Pure-JAX, jit-friendly; used by the DP trainer fabric and tested for the
+error-feedback contract (compressed-sum + residual == true value).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Compressed(NamedTuple):
+    q: jax.Array        # int8 payload
+    scale: jax.Array    # f32 per-block scales
+
+
+def _pad_to(x: jax.Array, multiple: int) -> Tuple[jax.Array, int]:
+    n = x.size
+    pad = (-n) % multiple
+    flat = jnp.pad(x.reshape(-1), (0, pad))
+    return flat, pad
+
+
+def compress(x: jax.Array, block: int = 256) -> Compressed:
+    """Symmetric int8 quantization with one scale per ``block`` values."""
+    flat, _ = _pad_to(x.astype(jnp.float32), block)
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return Compressed(q=q, scale=scale[:, 0])
+
+
+def decompress(c: Compressed, shape: Tuple[int, ...], dtype: Any = jnp.float32) -> jax.Array:
+    flat = (c.q.astype(jnp.float32) * c.scale[:, None]).reshape(-1)
+    n = int(np.prod(shape)) if shape else 1
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compressed_nbytes(c: Compressed) -> int:
+    return c.q.size * 1 + c.scale.size * 4
+
+
+def ef_compress(x: jax.Array, residual: jax.Array, block: int = 256
+                ) -> Tuple[Compressed, jax.Array]:
+    """Error-feedback step: compress (x + residual), return new residual."""
+    corrected = x.astype(jnp.float32) + residual
+    c = compress(corrected, block)
+    recon = decompress(c, x.shape)
+    return c, corrected - recon
+
+
+def ef_init(x: jax.Array) -> jax.Array:
+    return jnp.zeros(x.shape, jnp.float32)
+
+
+def tree_ef_compress(grads: Any, residuals: Any, block: int = 256):
+    """Error-feedback compression over a gradient pytree."""
+    flat, treedef = jax.tree.flatten(grads)
+    res_flat = jax.tree.leaves(residuals)
+    out_c, out_r = [], []
+    for g, r in zip(flat, res_flat):
+        c, nr = ef_compress(g, r, block)
+        out_c.append(c)
+        out_r.append(nr)
+    return jax.tree.unflatten(treedef, out_c), jax.tree.unflatten(treedef, out_r)
+
+
+def tree_decompress(comp: Any, template: Any, dtype: Any = jnp.float32):
+    c_flat, treedef = jax.tree.flatten(comp, is_leaf=lambda x: isinstance(x, Compressed))
+    t_flat = jax.tree.leaves(template)
+    out = [decompress(c, t.shape, dtype) for c, t in zip(c_flat, t_flat)]
+    return jax.tree.unflatten(treedef, out)

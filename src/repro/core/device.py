@@ -1,0 +1,272 @@
+"""NodeDevice / DevicePool: cluster nodes as offload devices (paper §4).
+
+An ``mpinode`` device in the paper is "simply a computer with MPI installed",
+listed in a configuration file; listing a node with a multiplier ``D`` starts
+``D`` devices on it.  Here a :class:`NodeDevice` wraps either
+
+* a real ``jax.Device``,
+* a mesh *sub-slice* (a set of chips acting as one device — the natural
+  granularity on a TPU pod), or
+* a *virtual* share of one device (the paper's ``D``-per-node feature; also how
+  we simulate an N-device cluster on this CPU-only container).
+
+Each device owns a :class:`MediaryStore`; the host side owns one
+:class:`HostMirror` per device plus a per-device mutex (paper §4.2: "we lock a
+mutex dedicated to the device we want to use").  Every transfer is accounted
+in a :class:`CostModel`.
+"""
+from __future__ import annotations
+
+import inspect
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .costmodel import CostModel, LinkModel, PAPER_ETHERNET
+from .kernel_table import GLOBAL_KERNEL_TABLE, KernelTable
+from .mediary import HostMirror, MediaryStore
+
+
+# ---------------------------------------------------------------------------
+# Command stream (paper §4.1: the four command types + STOP)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Command:
+    op: str                 # ALLOC | FREE | XFER_TO | XFER_FROM | EXEC | STOP
+    device: int
+    handle: Optional[int] = None
+    nbytes: int = 0
+    kernel_index: Optional[int] = None
+    tag: str = ""
+
+
+class NodeDevice:
+    """One offload device: buffer store + kernel executor on its sharding."""
+
+    def __init__(self, index: int, *, jax_device: Optional[jax.Device] = None,
+                 sharding: Optional[jax.sharding.Sharding] = None,
+                 hostname: str = "localhost") -> None:
+        self.index = index
+        self.hostname = hostname
+        self.jax_device = jax_device
+        self.sharding = sharding
+        self.store = MediaryStore(sharding=sharding)
+        self.stopped = False
+        self._jit_cache: Dict[int, Callable] = {}
+
+    def _place(self, value: jax.Array) -> jax.Array:
+        if self.sharding is not None:
+            return jax.device_put(value, self.sharding)
+        if self.jax_device is not None:
+            return jax.device_put(value, self.jax_device)
+        return value
+
+    # -- the device-side command loop (paper §4.1) --------------------------
+    def execute(self, cmd: Command, table: KernelTable,
+                payload: Optional[Dict[str, Any]] = None):
+        if self.stopped:
+            raise RuntimeError(f"device {self.index} is stopped")
+        if cmd.op == "ALLOC":
+            handle = self.store.alloc(payload["shape"], payload["dtype"])
+            assert handle == cmd.handle, (
+                f"mediary desync: device allocated slot {handle}, host "
+                f"reserved {cmd.handle}")
+            return handle
+        if cmd.op == "FREE":
+            self.store.free(cmd.handle)
+            return None
+        if cmd.op == "XFER_TO":
+            self.store.write(cmd.handle, self._place(payload["value"]),
+                             section=payload.get("section"))
+            return None
+        if cmd.op == "XFER_FROM":
+            return self.store.read(cmd.handle, section=payload.get("section"))
+        if cmd.op == "EXEC":
+            entry = table.lookup(cmd.kernel_index)
+            fn = self._jit_cache.get(cmd.kernel_index)
+            if fn is None:
+                fn = jax.jit(entry.fn, static_argnames=payload.get("static_argnames", ()))
+                self._jit_cache[cmd.kernel_index] = fn
+            # buffers: name -> handle, or name -> [handles] for pytree-valued
+            # maps; the treedef travels in the EXEC message (paper §4.2: "the
+            # host creates a struct in which it places the mediary address
+            # for each variable ... and sends the struct to the device").
+            trees = payload.get("trees", {})
+            kwargs = {}
+            for name, h in payload["buffers"].items():
+                if isinstance(h, (list, tuple)):
+                    leaves = [self.store.device_address(x) for x in h]
+                    kwargs[name] = jax.tree.unflatten(trees[name], leaves)
+                else:
+                    kwargs[name] = self.store.device_address(h)
+            kwargs.update(payload.get("firstprivate", {}))
+            # OpenMP kernels mutate mapped buffers in place; JAX kernels are
+            # functional, so a kernel only *receives* the mapped names it
+            # declares as parameters (a pure-``from`` output buffer need not
+            # be an input) and *returns* the from/tofrom values.
+            params = inspect.signature(entry.fn).parameters
+            if not any(p.kind == inspect.Parameter.VAR_KEYWORD for p in params.values()):
+                kwargs = {k: v for k, v in kwargs.items() if k in params}
+            return fn(**kwargs)
+        if cmd.op == "STOP":
+            self.stopped = True
+            return None
+        raise ValueError(f"unknown command {cmd.op}")
+
+
+class DevicePool:
+    """Host view of all devices (paper: the parsed configuration file).
+
+    ``DevicePool.from_config(["node0 2", "node1"])`` yields 3 devices, the
+    first two being virtual shares of node0 — the paper's multiplier feature.
+    On this CPU container, every hostname resolves to the single CpuDevice;
+    on a pod, pass explicit shardings (one mesh sub-slice per device).
+    """
+
+    def __init__(self, devices: Sequence[NodeDevice], *,
+                 table: Optional[KernelTable] = None,
+                 link: LinkModel = PAPER_ETHERNET) -> None:
+        self.devices = list(devices)
+        self.table = table or GLOBAL_KERNEL_TABLE
+        self.cost = CostModel(link)
+        self.mirrors = [HostMirror() for _ in self.devices]
+        self.locks = [threading.Lock() for _ in self.devices]
+        self.trace: List[Command] = []
+        self.globals: Dict[str, int] = {}    # name -> handle, identical per dev
+        self._trace_lock = threading.Lock()
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_config(cls, lines: Sequence[str], **kw) -> "DevicePool":
+        devices: List[NodeDevice] = []
+        local = jax.devices()[0]
+        for line in lines:
+            parts = line.split()
+            if not parts or parts[0].startswith("#"):
+                continue
+            host = parts[0]
+            mult = int(parts[1]) if len(parts) > 1 else 1
+            for _ in range(mult):
+                devices.append(NodeDevice(len(devices), jax_device=local, hostname=host))
+        return cls(devices, **kw)
+
+    @classmethod
+    def virtual(cls, n: int, **kw) -> "DevicePool":
+        """n virtual devices on the local chip (cluster simulation)."""
+        return cls.from_config([f"vnode{i}" for i in range(n)], **kw)
+
+    @classmethod
+    def from_mesh_slices(cls, mesh: jax.sharding.Mesh, axis: str, **kw) -> "DevicePool":
+        """One NodeDevice per index along ``axis`` of ``mesh`` (pod rows)."""
+        import numpy as _np
+        devs = _np.moveaxis(mesh.devices, mesh.axis_names.index(axis), 0)
+        out = []
+        for i in range(devs.shape[0]):
+            sub = jax.sharding.Mesh(devs[i], tuple(a for a in mesh.axis_names if a != axis))
+            sharding = jax.sharding.NamedSharding(sub, jax.sharding.PartitionSpec())
+            out.append(NodeDevice(i, sharding=sharding, hostname=f"slice{i}"))
+        return cls(out, **kw)
+
+    def __len__(self) -> int:
+        return len(self.devices)
+
+    # -- command issue (host side) -------------------------------------------
+    def _log(self, cmd: Command) -> None:
+        with self._trace_lock:
+            self.trace.append(cmd)
+
+    def alloc(self, device: int, shape: Sequence[int], dtype: Any, tag: str = "") -> int:
+        with self.locks[device]:
+            handle = self.mirrors[device].reserve(shape, dtype)  # 0x999 mark
+            cmd = Command("ALLOC", device, handle=handle,
+                          nbytes=self.mirrors[device].nbytes(handle), tag=tag)
+            self._log(cmd)
+            self.devices[device].execute(cmd, self.table,
+                                         {"shape": tuple(shape), "dtype": dtype})
+            return handle
+
+    def free(self, device: int, handle: int) -> None:
+        with self.locks[device]:
+            self.mirrors[device].free(handle)
+            cmd = Command("FREE", device, handle=handle)
+            self._log(cmd)
+            self.devices[device].execute(cmd, self.table)
+
+    def transfer_to(self, device: int, handle: int, value: Any,
+                    section: Optional[slice] = None, tag: str = "") -> None:
+        value = jnp.asarray(value)
+        nbytes = value.size * value.dtype.itemsize
+        with self.locks[device]:
+            cmd = Command("XFER_TO", device, handle=handle, nbytes=nbytes, tag=tag)
+            self._log(cmd)
+            self.cost.record_transfer("to", device, nbytes, tag=tag)
+            self.devices[device].execute(cmd, self.table,
+                                         {"value": value, "section": section})
+
+    def transfer_from(self, device: int, handle: int,
+                      section: Optional[slice] = None, tag: str = "") -> jax.Array:
+        with self.locks[device]:
+            cmd = Command("XFER_FROM", device, handle=handle, tag=tag)
+            self._log(cmd)
+            out = self.devices[device].execute(cmd, self.table, {"section": section})
+            out = jax.block_until_ready(out)
+            nbytes = out.size * out.dtype.itemsize
+            self.cost.record_transfer("from", device, nbytes, tag=tag)
+            return out
+
+    def exec_kernel(self, device: int, kernel_name: str,
+                    buffers: Dict[str, Any],
+                    firstprivate: Optional[Dict[str, Any]] = None,
+                    trees: Optional[Dict[str, Any]] = None,
+                    static_argnames: Sequence[str] = (), tag: str = "") -> Any:
+        index = self.table.index_of(kernel_name)   # name → wire integer
+        with self.locks[device]:
+            cmd = Command("EXEC", device, kernel_index=index, tag=tag or kernel_name)
+            self._log(cmd)
+            t0 = time.perf_counter()
+            out = self.devices[device].execute(
+                cmd, self.table,
+                {"buffers": buffers, "firstprivate": firstprivate or {},
+                 "trees": trees or {},
+                 "static_argnames": tuple(static_argnames)})
+            out = jax.block_until_ready(out)
+            self.cost.record_compute(device, time.perf_counter() - t0, tag=kernel_name)
+            return out
+
+    def stop_all(self) -> None:
+        for d in self.devices:
+            self._log(Command("STOP", d.index))
+            d.execute(Command("STOP", d.index), self.table)
+
+    # -- declare-target globals (paper §4.2 last ¶) ---------------------------
+    def install_global(self, name: str, value: Any, tag: str = "") -> int:
+        """Install a global on EVERY device at the same handle, pre-user-code.
+
+        Paper: "All nodes place the addresses of global variables in their
+        arrays at the beginning of the execution and in the same order."
+        The one-shot broadcast cost is recorded (it is what makes the
+        alignment workload scale: invariant data moves once).
+        """
+        value = jnp.asarray(value)
+        if name in self.globals:            # idempotent re-install (re-runs)
+            old = self.globals.pop(name)
+            for i in range(len(self.devices)):
+                self.free(i, old)
+        handles = []
+        for i in range(len(self.devices)):
+            with self.locks[i]:
+                h = self.mirrors[i].reserve(value.shape, value.dtype)
+                self._log(Command("ALLOC", i, handle=h, tag=f"global:{name}"))
+                self.devices[i].execute(
+                    Command("ALLOC", i, handle=h), self.table,
+                    {"shape": value.shape, "dtype": value.dtype})
+            self.transfer_to(i, h, value, tag=tag or f"global:{name}")
+            handles.append(h)
+        assert len(set(handles)) == 1, "global handle mismatch across devices"
+        self.globals[name] = handles[0]
+        return handles[0]

@@ -1,0 +1,150 @@
+"""Mediary addresses: host↔device buffer-handle indirection (paper §4.2).
+
+The host cannot know remote virtual addresses, so OMPi maps a host address to
+an abstract *mediary address* — here, an integer slot in a per-device dynamic
+array.  The device stores the real buffer at that slot; the host keeps a
+*mirror* of the array (marking reserved slots with the sentinel ``0x999``) so
+it can assign the next handle without a network round trip.
+
+JAX adaptation: the "real buffer" is a ``jax.Array`` placed on the device's
+sharding; the host mirror stores only ``ShapeDtypeStruct`` metadata (zero
+allocation — the paper: "the host does not need to allocate any memory, it
+only needs to remember which elements are in use").  Global variables (paper:
+``declare target``) are installed at slot-table construction time, in the same
+deterministic order on host and device.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: Paper §4.2: "marks it with the special (and arbitrary) value of 0x999".
+RESERVED = 0x999
+
+
+class SlotTableBase:
+    """First-fit slot allocator shared by device store and host mirror."""
+
+    def __init__(self) -> None:
+        self._slots: List[Any] = []  # None = unused (paper: NULL address)
+
+    def _first_free(self) -> int:
+        for i, v in enumerate(self._slots):
+            if v is None:
+                return i
+        self._slots.append(None)
+        return len(self._slots) - 1
+
+    def free(self, handle: int) -> None:
+        if not (0 <= handle < len(self._slots)) or self._slots[handle] is None:
+            raise KeyError(f"mediary handle {handle} is not live")
+        self._slots[handle] = None
+
+    def live_handles(self) -> List[int]:
+        return [i for i, v in enumerate(self._slots) if v is not None]
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+
+class MediaryStore(SlotTableBase):
+    """Device-side mediary array: handle → actual buffer (paper: calloc'd ptr)."""
+
+    def __init__(self, sharding: Optional[jax.sharding.Sharding] = None) -> None:
+        super().__init__()
+        self._sharding = sharding
+
+    # -- commands from the host (paper §4.1 command types) -----------------
+    def alloc(self, shape: Sequence[int], dtype: Any) -> int:
+        """ALLOC: zero-initialized, as OMPi uses ``calloc()``."""
+        handle = self._first_free()
+        buf = jnp.zeros(tuple(shape), dtype=dtype)
+        if self._sharding is not None:
+            buf = jax.device_put(buf, self._sharding)
+        self._slots[handle] = buf
+        return handle
+
+    def install(self, handle: int, value: jax.Array) -> None:
+        """Place an existing array at a specific slot (global-variable setup)."""
+        while len(self._slots) <= handle:
+            self._slots.append(None)
+        if self._slots[handle] is not None:
+            raise KeyError(f"mediary handle {handle} already live")
+        self._slots[handle] = value
+
+    def write(self, handle: int, value: jax.Array, section: Optional[slice] = None) -> None:
+        """TRANSFER_TO: host → device (optionally into an array section)."""
+        cur = self._lookup(handle)
+        value = jnp.asarray(value, dtype=cur.dtype)
+        if section is not None:
+            cur = cur.at[section].set(value)
+        else:
+            if value.shape != cur.shape:
+                raise ValueError(f"shape mismatch {value.shape} vs {cur.shape}")
+            cur = value
+        if self._sharding is not None:
+            cur = jax.device_put(cur, self._sharding)
+        self._slots[handle] = cur
+
+    def read(self, handle: int, section: Optional[slice] = None) -> jax.Array:
+        """TRANSFER_FROM: device → host."""
+        cur = self._lookup(handle)
+        return cur[section] if section is not None else cur
+
+    def _lookup(self, handle: int) -> jax.Array:
+        if not (0 <= handle < len(self._slots)) or self._slots[handle] is None:
+            raise KeyError(f"mediary handle {handle} is not live")
+        return self._slots[handle]
+
+    # Device addresses (paper fig. 1 right column) — for tracing/debugging.
+    def device_address(self, handle: int):
+        return self._lookup(handle)
+
+
+@dataclass(frozen=True)
+class MirrorEntry:
+    spec: jax.ShapeDtypeStruct
+    nbytes: int
+
+
+class HostMirror(SlotTableBase):
+    """Host-side mirror (paper §4.2 optimization): predicts handles, holds no data.
+
+    ``reserve()`` returns the handle the device *will* use for its next alloc,
+    marking the slot with ``RESERVED`` semantics; the runtime then issues the
+    actual ALLOC command.  Because both sides run first-fit over identical
+    op sequences, handles always agree (property-tested).
+    """
+
+    def reserve(self, shape: Sequence[int], dtype: Any) -> int:
+        handle = self._first_free()
+        spec = jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+        nbytes = int(np.prod(spec.shape, dtype=np.int64)) * spec.dtype.itemsize
+        # The slot value *is* the 0x999 marker until the device confirms; we
+        # keep the spec alongside so transfers can be size-checked host-side.
+        self._slots[handle] = MirrorEntry(spec=spec, nbytes=nbytes)
+        return handle
+
+    def install(self, handle: int, spec: jax.ShapeDtypeStruct) -> None:
+        while len(self._slots) <= handle:
+            self._slots.append(None)
+        if self._slots[handle] is not None:
+            raise KeyError(f"mirror handle {handle} already live")
+        nbytes = int(np.prod(spec.shape, dtype=np.int64)) * jnp.dtype(spec.dtype).itemsize
+        self._slots[handle] = MirrorEntry(spec=spec, nbytes=nbytes)
+
+    def spec(self, handle: int) -> jax.ShapeDtypeStruct:
+        entry = self._slots[handle]
+        if entry is None:
+            raise KeyError(f"mirror handle {handle} is not live")
+        return entry.spec
+
+    def nbytes(self, handle: int) -> int:
+        entry = self._slots[handle]
+        if entry is None:
+            raise KeyError(f"mirror handle {handle} is not live")
+        return entry.nbytes

@@ -1,0 +1,236 @@
+"""Task-restructuring patterns from the paper's evaluation (§5).
+
+The paper's methodology for porting task-based OpenMP programs to cluster
+devices distills into three reusable scheduling patterns, implemented here on
+top of :class:`TargetExecutor`:
+
+* **Strip partitioning** (alignment §5.3, mandelbrot §5.4): split an index
+  space into per-device strips, offload each as a ``nowait`` target region
+  with array sections, stitch the results.
+* **Recursive unroll-then-offload** (fib §5.5): OpenMP forbids device→device
+  work forwarding, so the host expands the task recursion until the frontier
+  has (at least) one task per device, offloads the subtrees, and combines.
+* **Wavefront with host-mediated dependencies** (sparselu §5.6): a task DAG
+  where every inter-device dependency must round-trip through the host —
+  the pattern the paper shows does NOT pay on a slow link.
+
+Beyond-paper: speculative re-dispatch of straggler strips (the paper observes
+fib's imbalance but offers no mitigation), and comm-aware device selection.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .target import MapSpec, TargetExecutor, TargetFuture
+
+
+# ---------------------------------------------------------------------------
+# Strip partitioning
+# ---------------------------------------------------------------------------
+def strip_partition(total: int, n_devices: int) -> List[Tuple[int, int]]:
+    """Split ``range(total)`` into ≤n_devices contiguous (start, length) strips.
+
+    Remainder elements go to the leading strips, so strip lengths differ by at
+    most 1 (paper Listing 2 uses equal strips; we generalize to any total).
+    """
+    if total <= 0 or n_devices <= 0:
+        return []
+    n = min(total, n_devices)
+    base, rem = divmod(total, n)
+    strips, start = [], 0
+    for i in range(n):
+        length = base + (1 if i < rem else 0)
+        strips.append((start, length))
+        start += length
+    return strips
+
+
+def offload_strips(ex: TargetExecutor, kernel: str, total: int,
+                   make_maps: Callable[[int, int], MapSpec], *,
+                   combine_axis: int = 0, out_name: str = "out",
+                   speculate: bool = False, nowait: bool = True,
+                   tag: str = "strips") -> jax.Array:
+    """The alignment/mandelbrot pattern: one nowait region per device strip.
+
+    ``make_maps(start, length)`` builds the MapSpec for a strip (only the
+    needed sections move — paper Listing 2).  With ``speculate=True``, once
+    every strip has been dispatched the host re-dispatches not-yet-finished
+    strips onto devices that already returned (straggler mitigation;
+    first-completed result wins).
+    """
+    strips = strip_partition(total, len(ex.pool))
+    if not nowait:
+        # serial dispatch: used by the benchmarks so per-task compute times
+        # are uncontended on this 1-core container; the CostModel supplies
+        # the parallel makespan (devices modeled concurrent).
+        parts = [ex.target(kernel, dev, make_maps(start, length), nowait=False,
+                           tag=f"{tag}[{start}:{start+length}]")[out_name]
+                 for dev, (start, length) in enumerate(strips)]
+        return jnp.concatenate(parts, axis=combine_axis)
+    futs: List[TargetFuture] = []
+    for dev, (start, length) in enumerate(strips):
+        futs.append(ex.target(kernel, dev, make_maps(start, length),
+                              nowait=True, tag=f"{tag}[{start}:{start+length}]"))
+    if not speculate:
+        results = [f.result() for f in futs]
+        ex._inflight.clear()
+    else:
+        results: List[Optional[Dict[str, jax.Array]]] = [None] * len(strips)
+        pending = set(range(len(strips)))
+        # First pass: harvest whatever is done; then re-dispatch stragglers on
+        # freed devices (round-robin over finished devices).
+        done_devices: List[int] = []
+        for i in list(pending):
+            if futs[i].done():
+                results[i] = futs[i].result()
+                pending.discard(i)
+                done_devices.append(i)
+        respawned: Dict[int, TargetFuture] = {}
+        for j, i in enumerate(list(pending)):
+            if done_devices:
+                dev = done_devices[j % len(done_devices)]
+                start, length = strips[i]
+                respawned[i] = ex.target(kernel, dev, make_maps(start, length),
+                                         nowait=True, tag=f"{tag}:spec[{i}]")
+        for i in list(pending):
+            # take whichever copy finishes first; futures are thread-backed so
+            # .result() on the original is the fallback
+            if i in respawned and respawned[i].done():
+                results[i] = respawned[i].result()
+            else:
+                results[i] = futs[i].result()
+        ex._inflight.clear()
+    parts = [r[out_name] for r in results]
+    return jnp.concatenate(parts, axis=combine_axis)
+
+
+# ---------------------------------------------------------------------------
+# Recursive unroll-then-offload (fib pattern)
+# ---------------------------------------------------------------------------
+@dataclass
+class RecursiveTask:
+    payload: Any
+    depth: int = 0
+
+
+def recursive_offload(ex: TargetExecutor, kernel: str,
+                      root: Any,
+                      split: Callable[[Any], Optional[List[Any]]],
+                      host_combine: Callable[[Any, List[Any]], Any],
+                      make_maps: Callable[[Any], MapSpec], *,
+                      out_name: str = "out", nowait: bool = True,
+                      tag: str = "rec") -> Any:
+    """Expand the recursion on the host until ≥1 task per device, then offload.
+
+    Paper §5.5: "the host executes the first recursive calls. When the
+    recursion unwinds to the point where the number of generated tasks is
+    equal to the number of available devices, the host can offload the tasks
+    to the devices and wait for their results."
+
+    ``split(payload)`` returns child payloads (or None at a leaf);
+    ``host_combine(payload, child_results)`` folds children back up the tree.
+    """
+    n_dev = len(ex.pool)
+
+    # BFS frontier expansion, tracking the tree for the combine phase.
+    class _Node:
+        __slots__ = ("payload", "children", "result")
+
+        def __init__(self, payload):
+            self.payload, self.children, self.result = payload, [], None
+
+    root_node = _Node(root)
+    frontier = [root_node]
+    while len(frontier) < n_dev:
+        # expand the node whose subtree is largest — payload-agnostic: FIFO
+        node = frontier.pop(0)
+        kids = split(node.payload)
+        if kids is None:           # leaf reached before enough parallelism
+            node.result = None
+            frontier.append(node)  # will be offloaded as-is
+            if all(split(n.payload) is None for n in frontier):
+                break
+            continue
+        node.children = [_Node(k) for k in kids]
+        frontier.extend(node.children)
+
+    # Offload the frontier round-robin (paper: one task per device; if the
+    # tree yields more tasks than devices we round-robin — imbalance noted).
+    if nowait:
+        futs: List[Tuple[_Node, TargetFuture]] = []
+        for i, node in enumerate(frontier):
+            futs.append((node, ex.target(kernel, i % n_dev, make_maps(node.payload),
+                                         nowait=True, tag=f"{tag}[{i}]")))
+        for node, f in futs:
+            node.result = f.result()[out_name]
+        ex._inflight.clear()
+    else:
+        for i, node in enumerate(frontier):
+            node.result = ex.target(kernel, i % n_dev, make_maps(node.payload),
+                                    nowait=False, tag=f"{tag}[{i}]")[out_name]
+
+    # Host-side combine, bottom-up.
+    def fold(node: _Node) -> Any:
+        if not node.children:
+            return node.result
+        return host_combine(node.payload, [fold(c) for c in node.children])
+
+    return fold(root_node)
+
+
+# ---------------------------------------------------------------------------
+# Wavefront DAG with host-mediated dependencies (sparselu pattern)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class DagTask:
+    name: str
+    kernel: str
+    deps: Tuple[str, ...]
+    make_maps: Callable[[Dict[str, Any]], MapSpec]   # dep results -> maps
+    device: Optional[int] = None                      # None = scheduler picks
+
+
+def wavefront_offload(ex: TargetExecutor, tasks: Sequence[DagTask], *,
+                      out_name: str = "out", nowait: bool = True,
+                      tag: str = "dag") -> Dict[str, Any]:
+    """Run a dependency DAG where every edge crosses the host (OpenMP rule).
+
+    Tasks whose dependencies are satisfied run as concurrent nowait regions,
+    one wave at a time.  Each inter-device value is fetched to the host and
+    re-sent to the consumer — the comm pattern that makes sparselu lose
+    (paper §5.6: "the whole array must be transferred two times").
+    """
+    results: Dict[str, Any] = {}
+    remaining = {t.name: t for t in tasks}
+    wave_idx = 0
+    while remaining:
+        ready = [t for t in remaining.values() if all(d in results for d in t.deps)]
+        if not ready:
+            raise ValueError(f"dependency cycle among {sorted(remaining)}")
+        if nowait:
+            futs = []
+            for j, t in enumerate(ready):
+                dev = t.device if t.device is not None else j % len(ex.pool)
+                dep_vals = {d: results[d] for d in t.deps}
+                futs.append((t, ex.target(t.kernel, dev, t.make_maps(dep_vals),
+                                          nowait=True, tag=f"{tag}:w{wave_idx}:{t.name}")))
+            for t, f in futs:
+                results[t.name] = f.result()[out_name]
+                del remaining[t.name]
+            ex._inflight.clear()
+        else:
+            for j, t in enumerate(ready):
+                dev = t.device if t.device is not None else j % len(ex.pool)
+                dep_vals = {d: results[d] for d in t.deps}
+                results[t.name] = ex.target(
+                    t.kernel, dev, t.make_maps(dep_vals), nowait=False,
+                    tag=f"{tag}:w{wave_idx}:{t.name}")[out_name]
+                del remaining[t.name]
+        wave_idx += 1
+    return results

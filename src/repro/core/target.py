@@ -1,0 +1,210 @@
+"""``target()`` offload regions with OpenMP ``map`` semantics (paper §3).
+
+An OpenMP target region names a kernel, a device, and a set of ``map``
+clauses.  We mirror that exactly:
+
+* ``map(to=...)``      — value copied host → device before execution,
+* ``map(from_=...)``   — value copied device → host after execution,
+* ``map(tofrom=...)``  — both,
+* ``map(alloc=...)``   — device allocation, no transfer either way,
+* ``firstprivate``     — small scalars passed by value in the EXEC message,
+* array *sections* — ``sec(array, start, length)`` moves only a sub-array
+  (paper Listing 2: "only the required 128 elements of each array are copied
+  per device, using appropriate array sections").
+
+JAX is functional, so instead of mutating mapped buffers the kernel returns a
+dict ``{name: new_value}`` for every ``from_``/``tofrom`` name; the runtime
+writes results back into the mediary store and transfers them to the host.
+
+``nowait=True`` returns a :class:`TargetFuture`; the host thread continues and
+may offload to *other* devices concurrently (paper §4.2's per-device mutex
+discipline is enforced by the pool).  ``taskwait()`` joins everything.
+"""
+from __future__ import annotations
+
+import concurrent.futures as _cf
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .device import DevicePool
+
+
+@dataclass(frozen=True)
+class Section:
+    """An OpenMP array section ``a[start:start+length]`` along axis 0."""
+
+    array: Any
+    start: int
+    length: int
+
+    @property
+    def value(self):
+        return jnp.asarray(self.array)[self.start:self.start + self.length]
+
+    @property
+    def slice(self) -> slice:
+        return slice(self.start, self.start + self.length)
+
+
+def sec(array: Any, start: int, length: int) -> Section:
+    return Section(array, start, length)
+
+
+@dataclass
+class MapSpec:
+    """The map clauses of one target region."""
+
+    to: Dict[str, Any] = field(default_factory=dict)
+    from_: Dict[str, Any] = field(default_factory=dict)     # name -> ShapeDtypeStruct | array template
+    tofrom: Dict[str, Any] = field(default_factory=dict)
+    alloc: Dict[str, jax.ShapeDtypeStruct] = field(default_factory=dict)
+    firstprivate: Dict[str, Any] = field(default_factory=dict)
+    use_globals: Tuple[str, ...] = ()                       # declare-target vars, no transfer
+
+    def all_names(self) -> List[str]:
+        return (list(self.to) + list(self.from_) + list(self.tofrom)
+                + list(self.alloc) + list(self.use_globals))
+
+
+class TargetFuture:
+    """Handle to an in-flight ``nowait`` region."""
+
+    def __init__(self, fut: _cf.Future) -> None:
+        self._fut = fut
+
+    def result(self) -> Dict[str, jax.Array]:
+        return self._fut.result()
+
+    def done(self) -> bool:
+        return self._fut.done()
+
+
+def _as_spec(x: Any) -> jax.ShapeDtypeStruct:
+    if isinstance(x, jax.ShapeDtypeStruct):
+        return x
+    a = jnp.asarray(x)
+    return jax.ShapeDtypeStruct(a.shape, a.dtype)
+
+
+class TargetExecutor:
+    """Executes target regions against a :class:`DevicePool`."""
+
+    def __init__(self, pool: DevicePool, max_host_threads: int = 16) -> None:
+        self.pool = pool
+        self._tp = _cf.ThreadPoolExecutor(max_workers=max_host_threads,
+                                          thread_name_prefix="omp-host")
+        self._inflight: List[TargetFuture] = []
+
+    # -- the target construct -------------------------------------------------
+    def target(self, kernel: str, device: int, maps: MapSpec, *,
+               nowait: bool = False, tag: str = "") -> Union[Dict[str, jax.Array], TargetFuture]:
+        if nowait:
+            fut = TargetFuture(self._tp.submit(self._run, kernel, device, maps, tag))
+            self._inflight.append(fut)
+            return fut
+        return self._run(kernel, device, maps, tag)
+
+    def taskwait(self) -> List[Dict[str, jax.Array]]:
+        out = [f.result() for f in self._inflight]
+        self._inflight.clear()
+        return out
+
+    # -- region lifecycle (paper §4.1/§4.2) ------------------------------------
+    def _run(self, kernel: str, device: int, maps: MapSpec, tag: str) -> Dict[str, jax.Array]:
+        pool = self.pool
+        handles: Dict[str, Any] = {}   # name -> handle | [handles] (pytree)
+        trees: Dict[str, Any] = {}     # name -> treedef for pytree maps
+        owned: List[int] = []   # handles to free at region end (not globals)
+
+        def flatten(val):
+            """(leaves, treedef|None): None treedef = plain single array."""
+            if isinstance(val, (Section, jax.ShapeDtypeStruct)) or hasattr(val, "shape"):
+                return [val], None
+            leaves, treedef = jax.tree.flatten(
+                val, is_leaf=lambda x: isinstance(x, (Section, jax.ShapeDtypeStruct)))
+            if treedef.num_leaves == 1 and jax.tree.structure(0) == treedef:
+                return leaves, None
+            return leaves, treedef
+
+        # 1) ALLOC + XFER_TO for to/tofrom; ALLOC only for alloc/from_.
+        for name, val in {**maps.to, **maps.tofrom}.items():
+            leaves, treedef = flatten(val)
+            hs = []
+            for leaf in leaves:
+                v = leaf.value if isinstance(leaf, Section) else jnp.asarray(leaf)
+                h = pool.alloc(device, v.shape, v.dtype, tag=f"{tag}:{name}")
+                pool.transfer_to(device, h, v, tag=f"{tag}:{name}")
+                hs.append(h)
+                owned.append(h)
+            handles[name] = hs[0] if treedef is None else hs
+            if treedef is not None:
+                trees[name] = treedef
+        for name, spec in {**maps.alloc, **maps.from_}.items():
+            leaves, treedef = flatten(spec)
+            hs = []
+            for leaf in leaves:
+                s = _as_spec(leaf)
+                h = pool.alloc(device, s.shape, s.dtype, tag=f"{tag}:{name}")
+                hs.append(h)
+                owned.append(h)
+            handles[name] = hs[0] if treedef is None else hs
+            if treedef is not None:
+                trees[name] = treedef
+        for name in maps.use_globals:
+            handles[name] = pool.globals[name]
+
+        # 2) EXEC — kernel sees device-resident buffers as kwargs, returns
+        #    replacements for from_/tofrom names.
+        result = pool.exec_kernel(device, kernel, buffers=handles, trees=trees,
+                                  firstprivate=maps.firstprivate, tag=tag)
+        returned: Dict[str, Any] = {}
+        if result is not None:
+            if not isinstance(result, Mapping):
+                raise TypeError(
+                    f"kernel {kernel!r} must return a dict of mapped outputs, "
+                    f"got {type(result)}")
+            returned = dict(result)
+
+        # 3) write-back + XFER_FROM for from_/tofrom.
+        out: Dict[str, jax.Array] = {}
+        for name in list(maps.from_) + list(maps.tofrom):
+            if name not in returned:
+                raise KeyError(f"kernel {kernel!r} did not return mapped output {name!r}")
+            h = handles[name]
+            if isinstance(h, list):
+                ret_leaves, ret_def = jax.tree.flatten(returned[name])
+                if len(ret_leaves) != len(h):
+                    raise ValueError(
+                        f"kernel {kernel!r} returned {len(ret_leaves)} leaves "
+                        f"for {name!r}, mapped {len(h)}")
+                fetched = []
+                for hh, leaf in zip(h, ret_leaves):
+                    pool.transfer_to_writeback(device, hh, leaf)
+                    fetched.append(pool.transfer_from(device, hh, tag=f"{tag}:{name}"))
+                out[name] = jax.tree.unflatten(ret_def, fetched)
+            else:
+                pool.transfer_to_writeback(device, h, returned[name])
+                out[name] = pool.transfer_from(device, h, tag=f"{tag}:{name}")
+
+        # 4) region end: free owned handles on both device and host mirror
+        #    (paper: "allocated variables are freed from the device's mediary
+        #    address array and their positions are marked as unused").
+        for h in owned:
+            pool.free(device, h)
+        return out
+
+
+def _transfer_to_writeback(self, device: int, handle: int, value: Any) -> None:
+    """Device-local write-back of a kernel result (no host↔device traffic)."""
+    value = jnp.asarray(value)
+    with self.locks[device]:
+        self.devices[device].store.free(handle)
+        self.devices[device].store.install(handle, self.devices[device]._place(value))
+
+
+# Installed on DevicePool here to keep device.py free of target-layer concepts.
+DevicePool.transfer_to_writeback = _transfer_to_writeback

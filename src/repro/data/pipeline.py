@@ -1,0 +1,157 @@
+"""Deterministic, shardable synthetic data pipeline with prefetch.
+
+Production posture:
+
+* **Step-seeded determinism** — batch ``i`` is a pure function of
+  ``(seed, i)``, independent of how many batches were drawn before it, so a
+  job restored from a step-``k`` checkpoint consumes exactly the batches it
+  would have seen without the failure (tested).
+* **Host-sharded** — each process generates only its slice of the global
+  batch (``process_index/process_count``); at 1000-node scale no host ever
+  materializes the global batch.
+* **Prefetch** — a daemon thread keeps ``depth`` batches ahead, with
+  ``jax.device_put`` onto the target sharding so host→HBM transfer of batch
+  ``i+1`` overlaps step ``i``'s compute (the paper's "communication hidden
+  behind computation" future-work item, applied to the input pipeline).
+
+The synthetic stream is a order-5 LCG-mixed token sequence with a learnable
+structure (token ``t+1`` correlates with token ``t``), so a ~100M-param
+example run shows a real, monotone loss drop rather than memorizing noise.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq: int
+    global_batch: int
+    seed: int = 0
+    # modality-stub dims (vlm/audio archs): frontend embeddings per example
+    frontend_seq: int = 0
+    d_model: int = 0
+    encdec: bool = False
+
+
+class SyntheticLM:
+    """Deterministic synthetic LM batches, host-sharded.
+
+    ``batch(i)`` returns the host-local slice of global batch ``i``:
+    ``{"tokens": [b, S], "labels": [b, S]}`` (+ ``embeds``/``enc_embeds``
+    stubs per ``DataConfig``), where ``b = global_batch / process_count``.
+    """
+
+    def __init__(self, cfg: DataConfig,
+                 process_index: Optional[int] = None,
+                 process_count: Optional[int] = None) -> None:
+        self.cfg = cfg
+        self.pidx = jax.process_index() if process_index is None else process_index
+        self.pcount = jax.process_count() if process_count is None else process_count
+        if cfg.global_batch % self.pcount:
+            raise ValueError(
+                f"global_batch {cfg.global_batch} not divisible by "
+                f"process_count {self.pcount}")
+        self.local_batch = cfg.global_batch // self.pcount
+
+    def _tokens(self, step: int) -> np.ndarray:
+        cfg = self.cfg
+        # per-(step, example) seeds; examples are globally indexed so each
+        # host generates a disjoint, reproducible slice.
+        ex0 = self.pidx * self.local_batch
+        rows = []
+        for e in range(ex0, ex0 + self.local_batch):
+            rng = np.random.default_rng((cfg.seed, step, e))
+            # correlated walk over the vocab: learnable bigram structure
+            steps = rng.integers(-3, 4, size=cfg.seq + 1)
+            walk = np.cumsum(steps) + rng.integers(0, cfg.vocab)
+            rows.append(np.mod(walk, cfg.vocab))
+        return np.stack(rows).astype(np.int32)
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        toks = self._tokens(step)
+        out: Dict[str, np.ndarray] = {
+            "tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if cfg.frontend_seq and cfg.d_model:
+            rng = np.random.default_rng((cfg.seed, step, 999_983, self.pidx))
+            emb = rng.standard_normal(
+                (self.local_batch, cfg.frontend_seq, cfg.d_model),
+                dtype=np.float32)
+            out["enc_embeds" if cfg.encdec else "embeds"] = emb
+        return out
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        i = 0
+        while True:
+            yield self.batch(i)
+            i += 1
+
+
+class Prefetcher:
+    """Background-thread prefetch + device placement, ``depth`` deep."""
+
+    _DONE = object()
+
+    def __init__(self, source: "SyntheticLM", start_step: int = 0, *,
+                 depth: int = 2, shardings: Optional[Any] = None,
+                 max_steps: Optional[int] = None) -> None:
+        self.source = source
+        self.shardings = shardings
+        self._q: "queue.Queue[Any]" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._worker, args=(start_step, max_steps), daemon=True)
+        self._thread.start()
+
+    def _place(self, batch: Dict[str, np.ndarray]):
+        if self.shardings is None:
+            return jax.tree.map(jnp.asarray, batch)
+        return {k: jax.device_put(v, self.shardings[k])
+                if k in self.shardings else jnp.asarray(v)
+                for k, v in batch.items()}
+
+    def _worker(self, start_step: int, max_steps: Optional[int]) -> None:
+        step = start_step
+        while not self._stop.is_set():
+            if max_steps is not None and step >= start_step + max_steps:
+                self._q.put(self._DONE)
+                return
+            try:
+                self._q.put(self._place(self.source.batch(step)), timeout=0.5)
+            except queue.Full:
+                continue
+            step += 1
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._DONE:
+            raise StopIteration
+        return item
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)
+
+
+def make_pipeline(cfg: DataConfig, *, start_step: int = 0,
+                  shardings: Optional[Any] = None, depth: int = 2,
+                  max_steps: Optional[int] = None) -> Prefetcher:
+    return Prefetcher(SyntheticLM(cfg), start_step, depth=depth,
+                      shardings=shardings, max_steps=max_steps)

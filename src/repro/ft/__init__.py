@@ -1,0 +1,5 @@
+from .failures import FlakyDevice, inject_flaky, DeviceFailure
+from .elastic import elastic_shardings, rescale_pool
+
+__all__ = ["FlakyDevice", "inject_flaky", "DeviceFailure",
+           "elastic_shardings", "rescale_pool"]

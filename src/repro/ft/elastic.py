@@ -1,0 +1,45 @@
+"""Elastic rescale: continue a job on a different device count / mesh shape.
+
+Two layers, matching the two runtimes:
+
+* **pjit path** — :func:`elastic_shardings` rebuilds the parameter /
+  optimizer shardings for a new mesh from the same logical-axis rules; the
+  checkpoint manager's ``restore(..., shardings=...)`` then places the saved
+  global arrays onto the new mesh.  Losing a pod means restoring yesterday's
+  16×16×2 checkpoint onto 16×16 — no format change, no re-partition tool.
+* **pool path** — :func:`rescale_pool` re-derives the strip partition for a
+  grown/shrunk DevicePool; offload patterns in ``core.scheduler`` take the
+  pool size per call, so elasticity is a restart-free re-dispatch.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from ..parallel.sharding import AxisRules
+from ..train.specs import param_names
+from ..train.steps import _shardings_for, opt_state_shardings
+
+
+def elastic_shardings(abstract_params: Any, rules: AxisRules, mesh,
+                      with_opt: bool = True):
+    """(param_shardings, opt_shardings) for ``mesh`` under ``rules``."""
+    p_sh = _shardings_for(abstract_params, param_names(abstract_params),
+                          rules, mesh)
+    if not with_opt:
+        return p_sh, None
+    return p_sh, opt_state_shardings(p_sh, mesh)
+
+
+def rescale_pool(runtime, n_virtual: int):
+    """Replace the runtime's pool with a resized one (virtual devices)."""
+    from ..core.device import DevicePool
+    from ..core.target import TargetExecutor
+    old_cost = runtime.pool.cost
+    runtime.pool = DevicePool.virtual(n_virtual, table=runtime.pool.table,
+                                      link=runtime.pool.cost.link)
+    runtime.pool.cost = old_cost            # keep cumulative accounting
+    runtime.ex = TargetExecutor(runtime.pool,
+                                max_host_threads=runtime.cfg.max_host_threads)
+    return runtime

@@ -1,0 +1,82 @@
+"""Failure injection + retry/blacklist policy for the offload runtime.
+
+At 1000-node scale, EXEC commands fail (preempted node, flaky NIC, ECC
+error).  The paper's runtime has no story for this; ours does:
+
+* :class:`FlakyDevice` wraps a :class:`NodeDevice` and fails a configurable
+  fraction of EXEC commands (deterministic, seeded) — the chaos-monkey used
+  by the fault-tolerance tests.
+* :func:`with_retry` re-issues a failed target region on the next healthy
+  device (round-robin), blacklisting devices that exceed ``max_failures``.
+  Because every region's data movement is declared in its MapSpec, a retry
+  is a pure re-execution — no partial state can leak (the mediary handles of
+  the failed attempt are freed by the region teardown).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.device import Command, NodeDevice
+from ..core.target import MapSpec, TargetExecutor
+
+
+class DeviceFailure(RuntimeError):
+    pass
+
+
+class FlakyDevice:
+    """Proxy over NodeDevice failing EXECs with probability ``p`` (seeded)."""
+
+    def __init__(self, inner: NodeDevice, p: float, seed: int = 0) -> None:
+        self._inner = inner
+        self._p = p
+        self._rng = np.random.default_rng((seed, inner.index))
+        self.failures = 0
+
+    def execute(self, cmd: Command, table, payload=None):
+        if cmd.op == "EXEC" and self._rng.random() < self._p:
+            self.failures += 1
+            raise DeviceFailure(
+                f"injected failure on device {self._inner.index} "
+                f"(kernel index {cmd.kernel_index})")
+        return self._inner.execute(cmd, table, payload)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def inject_flaky(pool, p: float, seed: int = 0,
+                 devices: Optional[Sequence[int]] = None) -> None:
+    """Wrap (some of) a pool's devices with failure injection, in place."""
+    for i, d in enumerate(pool.devices):
+        if devices is None or i in devices:
+            pool.devices[i] = FlakyDevice(d, p, seed)
+
+
+def with_retry(ex: TargetExecutor, kernel: str, device: int, maps: MapSpec, *,
+               max_retries: int = 3, blacklist: Optional[set] = None,
+               tag: str = "") -> Dict[str, Any]:
+    """Run a target region, retrying on other devices on failure.
+
+    Returns the region outputs; raises the last error if every candidate
+    device fails.  ``blacklist`` (shared across calls) accumulates devices
+    that failed, implementing a simple health registry.
+    """
+    blacklist = blacklist if blacklist is not None else set()
+    n = len(ex.pool)
+    last: Optional[BaseException] = None
+    candidates = [device] + [d for d in range(n) if d != device]
+    tried = 0
+    for d in candidates:
+        if d in blacklist or tried > max_retries:
+            continue
+        tried += 1
+        try:
+            return ex.target(kernel, d, maps, nowait=False, tag=tag or kernel)
+        except DeviceFailure as e:
+            last = e
+            blacklist.add(d)
+            continue
+    raise last if last is not None else RuntimeError("no healthy devices")

@@ -1,0 +1,67 @@
+"""Block-LU update (bmod) Pallas kernel — sparselu's hot op (paper §5.6).
+
+BOTS sparselu factors a blocked sparse matrix with four task kernels:
+``lu0`` (diagonal block LU), ``fwd`` (L-solve), ``bdiv`` (U-solve) and
+``bmod`` (trailing update  A ← A − L·U).  ``bmod`` is the GEMM-shaped hot
+spot (O(n³) of the factorization); this kernel computes one [bm, bn] tile of
+A − L·U with the contraction dimension sequential and a float32 accumulator.
+The triangular solves stay in jnp (``ref.py``) — they are O(n²) and
+latency-, not throughput-, bound.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bmod_kernel(a_ref, l_ref, u_ref, o_ref, acc_ref):
+    kd = pl.program_id(2)
+    nd = pl.num_programs(2)
+
+    @pl.when(kd == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        l_ref[...], u_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(kd == nd - 1)
+    def _done():
+        o_ref[...] = (a_ref[...].astype(jnp.float32) - acc_ref[...]).astype(o_ref.dtype)
+
+
+def bmod(a: jax.Array, l: jax.Array, u: jax.Array, *, block_m: int = 128,
+         block_n: int = 128, block_k: int = 256,
+         interpret: bool = False) -> jax.Array:
+    """a [M,N] − l [M,K] @ u [K,N]."""
+    M, N = a.shape
+    K = l.shape[1]
+
+    def fit(b, d):
+        b = min(b, d)
+        while d % b:
+            b -= 1
+        return b
+
+    bm, bn, bk = fit(block_m, M), fit(block_n, N), fit(block_k, K)
+    return pl.pallas_call(
+        _bmod_kernel,
+        grid=(M // bm, N // bn, K // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ) if not interpret else None,
+        interpret=interpret,
+    )(a, l, u)

@@ -1,0 +1,19 @@
+"""jit'd wrappers for the sparselu block ops (bmod = Pallas, solves = jnp)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .block_lu import bmod
+from .ref import bdiv_ref, fwd_ref, lu0_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bmod_op(a, l, u, *, interpret: bool = False):
+    return bmod(a, l, u, interpret=interpret)
+
+
+lu0_op = jax.jit(lu0_ref)
+fwd_op = jax.jit(fwd_ref)
+bdiv_op = jax.jit(bdiv_ref)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the sparselu block kernels (BOTS semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bmod_ref(a: jax.Array, l: jax.Array, u: jax.Array) -> jax.Array:
+    """Trailing update A − L·U."""
+    return (a.astype(jnp.float32)
+            - l.astype(jnp.float32) @ u.astype(jnp.float32)).astype(a.dtype)
+
+
+def lu0_ref(a: jax.Array) -> jax.Array:
+    """Unpivoted dense LU of a diagonal block, packed L\\U in one matrix."""
+    n = a.shape[0]
+
+    def col(k, m):
+        piv = m[k, k]
+        below = jnp.arange(n) > k
+        factors = jnp.where(below, m[:, k] / piv, 0.0)
+        m = m - jnp.where(below[:, None] & (jnp.arange(n)[None, :] > k),
+                          jnp.outer(factors, m[k, :]), 0.0)
+        m = m.at[:, k].set(jnp.where(below, factors, m[:, k]))
+        return m
+
+    return jax.lax.fori_loop(0, n, col, a.astype(jnp.float32)).astype(a.dtype)
+
+
+def _unpack(lu: jax.Array):
+    l = jnp.tril(lu, -1) + jnp.eye(lu.shape[0], dtype=lu.dtype)
+    u = jnp.triu(lu)
+    return l, u
+
+
+def fwd_ref(diag_lu: jax.Array, a: jax.Array) -> jax.Array:
+    """Forward solve: L · X = A (L unit-lower from packed LU)."""
+    l, _ = _unpack(diag_lu.astype(jnp.float32))
+    return jax.scipy.linalg.solve_triangular(
+        l, a.astype(jnp.float32), lower=True, unit_diagonal=True).astype(a.dtype)
+
+
+def bdiv_ref(diag_lu: jax.Array, a: jax.Array) -> jax.Array:
+    """Right solve: X · U = A (U upper from packed LU)."""
+    _, u = _unpack(diag_lu.astype(jnp.float32))
+    return jax.scipy.linalg.solve_triangular(
+        u.T, a.astype(jnp.float32).T, lower=True).T.astype(a.dtype)

@@ -1,0 +1,118 @@
+"""Flash attention Pallas TPU kernel.
+
+TPU-native design (not a CUDA port): the grid is (batch·kv_heads, q_group,
+num_q_blocks, num_kv_blocks) with the KV dimension *sequential* ("arbitrary"
+semantics) so the online-softmax accumulators (o, m, l) live in VMEM scratch
+across KV steps — the systolic MXU sees [block_q, d] × [d, block_kv] matmuls
+with both matmul dims padded to hardware tiles by construction (block sizes
+are multiples of 128 where the head dim allows).  GQA is expressed in the
+grid (q_group axis) so KV tiles are fetched once per group, never repeated in
+memory.
+
+HBM→VMEM traffic per (bq, bk) tile: q once per kv sweep, k/v once per q
+block — the standard flash IO complexity O(S²d/VMEM-block) with no score
+materialization.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  sm_scale: float, causal: bool, window: int,
+                  block_q: int, block_kv: int, kv_len: int):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                                   # [bq, d]
+    k = k_ref[0]                                      # [bk, d]
+    v = v_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+    k_pos = ik * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot_general(p.astype(v.dtype), v,
+                                          (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: [BK, r, Sq, d]; k, v: [BK, Skv, d]  (BK = batch·kv_heads, r = H/K).
+
+    Returns [BK, r, Sq, d].
+    """
+    BK, r, Sq, d = q.shape
+    Skv = k.shape[1]
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    while Sq % block_q:
+        block_q //= 2
+    while Skv % block_kv:
+        block_kv //= 2
+    nq, nk = Sq // block_q, Skv // block_kv
+    sm_scale = 1.0 / np.sqrt(d)
+
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, kv_len=Skv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BK, r, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, g, i, j: (b, g, i, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, g, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, g, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b, g, i, j: (b, g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+            pltpu.VMEM((block_q,), jnp.float32),     # m (running max)
+            pltpu.VMEM((block_q,), jnp.float32),     # l (running denom)
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+        ) if not interpret else None,
+        interpret=interpret,
+    )(q, k, v)

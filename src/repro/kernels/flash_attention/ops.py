@@ -1,0 +1,33 @@
+"""jit'd public wrapper: model-layout GQA attention over the Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def gqa_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        block_q: int = 128, block_kv: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """Model layout: q [B, S, H, d]; k, v [B, S, K, d] → [B, S, H, d].
+
+    Rearranges to the kernel's (batch·kv_heads, group) layout so KV is
+    fetched once per group (never head-repeated), calls the Pallas kernel,
+    and restores the model layout.
+    """
+    B, Sq, H, d = q.shape
+    K = k.shape[2]
+    r = H // K
+    qk = q.reshape(B, Sq, K, r, d).transpose(0, 2, 3, 1, 4).reshape(B * K, r, Sq, d)
+    kk = k.transpose(0, 2, 1, 3).reshape(B * K, -1, d)
+    vk = v.transpose(0, 2, 1, 3).reshape(B * K, -1, d)
+    o = flash_attention(qk, kk, vk, causal=causal, window=window,
+                        block_q=block_q, block_kv=block_kv, interpret=interpret)
+    return (o.reshape(B, K, r, Sq, d).transpose(0, 3, 1, 2, 4)
+            .reshape(B, Sq, H, d))

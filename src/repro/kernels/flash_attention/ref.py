@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """q: [BK, r, Sq, d]; k, v: [BK, Skv, d] → [BK, r, Sq, d]."""
+    BK, r, Sq, d = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("brqd,bsd->brqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(d)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("brqs,bsd->brqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,29 @@
+"""jit'd model-layout wrapper for the flash-decode kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_decode import flash_decode
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
+def gqa_flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_len: jax.Array, *, block_kv: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """Model layout: q [B, 1, H, d]; caches [B, S, K, d]; kv_len scalar/[B].
+
+    Returns [B, 1, H, d] — drop-in for models.attention.decode_attention.
+    """
+    B, _, H, d = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    r = H // K
+    qk = q.reshape(B, K, r, d).reshape(B * K, r, d)
+    kk = k_cache.transpose(0, 2, 1, 3).reshape(B * K, S, d)
+    vk = v_cache.transpose(0, 2, 1, 3).reshape(B * K, S, d)
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1, 1),
+                            (B, K)).reshape(B * K)
+    o = flash_decode(qk, kk, vk, lens, block_kv=block_kv, interpret=interpret)
+    return o.reshape(B, K, r, d).reshape(B, 1, H, d)

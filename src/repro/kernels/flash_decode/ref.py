@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash decode (delegates to the model's decode path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def flash_decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_len: jax.Array) -> jax.Array:
+    """q [BK, r, d]; caches [BK, S, d]; kv_len [BK] → [BK, r, d]."""
+    BK, r, d = q.shape
+    S = k_cache.shape[1]
+    s = jnp.einsum("brd,bsd->brs", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / np.sqrt(d)
+    mask = jnp.arange(S)[None, None, :] < kv_len[:, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("brs,bsd->brd", p,
+                      v_cache.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,66 @@
+"""Grouped (per-expert) matmul Pallas TPU kernel for MoE FFNs.
+
+out[e] = x[e] @ w[e] for e in experts, where x is the capacity-dispatched
+token buffer [E, C, D] and w the stacked expert weights [E, D, F].  The grid
+is (E, C/bc, F/bf, D/bd) with the contraction dimension sequential and a
+float32 VMEM accumulator — each expert's tile stream hits the MXU back to
+back, and experts with empty capacity slots simply multiply zero rows (the
+dispatch buffer zero-fills), so no scalar control flow is needed on-core.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref):
+    kd = pl.program_id(3)
+    nd = pl.num_programs(3)
+
+    @pl.when(kd == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0], w_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(kd == nd - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array, *, block_c: int = 128,
+                   block_f: int = 128, block_d: int = 512,
+                   interpret: bool = False) -> jax.Array:
+    """x: [E, C, D] @ w: [E, D, F] → [E, C, F]."""
+    E, C, D = x.shape
+    F = w.shape[-1]
+
+    def fit(block, dim):
+        b = min(block, dim)
+        while dim % b:
+            b -= 1
+        return b
+
+    bc, bf, bd = fit(block_c, C), fit(block_f, F), fit(block_d, D)
+    grid = (E, C // bc, F // bf, D // bd)
+    return pl.pallas_call(
+        functools.partial(_gmm_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bd, bf), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+        ) if not interpret else None,
+        interpret=interpret,
+    )(x, w)

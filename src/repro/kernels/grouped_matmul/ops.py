@@ -1,0 +1,17 @@
+"""jit'd wrapper for the grouped-matmul kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .grouped_matmul import grouped_matmul
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d",
+                                             "interpret"))
+def expert_ffn_matmul(x: jax.Array, w: jax.Array, *, block_c: int = 128,
+                      block_f: int = 128, block_d: int = 512,
+                      interpret: bool = False) -> jax.Array:
+    return grouped_matmul(x, w, block_c=block_c, block_f=block_f,
+                          block_d=block_d, interpret=interpret)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for grouped matmul."""
+import jax
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: [E, C, D] @ w: [E, D, F] → [E, C, F]."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

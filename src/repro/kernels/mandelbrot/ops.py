@@ -1,0 +1,19 @@
+"""jit'd wrapper for the mandelbrot strip kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .mandelbrot import mandelbrot
+
+
+@functools.partial(jax.jit, static_argnames=("height", "width", "max_iter",
+                                             "row_offset", "total_height",
+                                             "block_h", "interpret"))
+def mandelbrot_strip(height: int, width: int, *, max_iter: int = 100,
+                     row_offset: int = 0, total_height: int = 0,
+                     block_h: int = 64, interpret: bool = False) -> jax.Array:
+    return mandelbrot(height, width, max_iter=max_iter, row_offset=row_offset,
+                      total_height=total_height, block_h=block_h,
+                      interpret=interpret)

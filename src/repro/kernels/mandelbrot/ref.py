@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the mandelbrot kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mandelbrot_ref(height: int, width: int, *, xmin: float = -2.0,
+                   xmax: float = 0.6, ymin: float = -1.3, ymax: float = 1.3,
+                   max_iter: int = 100, row_offset: int = 0,
+                   total_height: int = 0) -> jax.Array:
+    th = total_height or height
+    rows = row_offset + jnp.arange(height)[:, None]
+    cols = jnp.arange(width)[None, :]
+    cx = xmin + cols.astype(jnp.float32) * ((xmax - xmin) / (width - 1))
+    cy = ymin + rows.astype(jnp.float32) * ((ymax - ymin) / (th - 1))
+
+    def body(_, state):
+        zx, zy, count, alive = state
+        zx2, zy2 = zx * zx, zy * zy
+        alive_new = alive & (zx2 + zy2 <= 4.0)
+        nzx = zx2 - zy2 + cx
+        nzy = 2.0 * zx * zy + cy
+        zx = jnp.where(alive_new, nzx, zx)
+        zy = jnp.where(alive_new, nzy, zy)
+        return zx, zy, count + alive_new.astype(jnp.int32), alive_new
+
+    zx = jnp.zeros((height, width), jnp.float32)
+    zy = jnp.zeros((height, width), jnp.float32)
+    count = jnp.zeros((height, width), jnp.int32)
+    alive = jnp.ones((height, width), bool)
+    _, _, count, _ = jax.lax.fori_loop(0, max_iter, body, (zx, zy, count, alive))
+    return count

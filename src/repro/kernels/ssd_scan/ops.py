@@ -1,0 +1,33 @@
+"""jit'd wrapper: model-layout SSD over the Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ssd_scan import ssd_scan
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked_pallas(x: jax.Array, dt: jax.Array, A: jax.Array,
+                       B: jax.Array, C: jax.Array, *, chunk: int = 128,
+                       interpret: bool = False):
+    """Model layout: x [b,S,H,P], dt [b,S,H], A [H], B/C [b,S,G,N].
+
+    Maps the grouped (G) projections onto per-head rows and flattens
+    (batch, head) into the kernel grid. Returns (y [b,S,H,P], h [b,H,N,P]).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2)          # [b,S,H,N]
+    Ch = jnp.repeat(C, rep, axis=2)
+    xk = x.transpose(0, 2, 1, 3).reshape(b * H, S, P)
+    dtk = dt.transpose(0, 2, 1).reshape(b * H, S)
+    Ak = jnp.broadcast_to(A[None], (b, H)).reshape(b * H)
+    Bk = Bh.transpose(0, 2, 1, 3).reshape(b * H, S, N)
+    Ck = Ch.transpose(0, 2, 1, 3).reshape(b * H, S, N)
+    y, h = ssd_scan(xk, dtk, Ak, Bk, Ck, chunk=chunk, interpret=interpret)
+    return (y.reshape(b, H, S, P).transpose(0, 2, 1, 3),
+            h.reshape(b, H, N, P))

@@ -1,0 +1,113 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel.
+
+Streaming design for the TPU memory hierarchy: the grid is
+(batch·heads, num_chunks) with the chunk dimension sequential, so the running
+[N, P] state lives in VMEM scratch and HBM sees each sequence element exactly
+once.  Within a chunk everything is dense [Q,·] matmul work for the MXU:
+
+  intra:   y += (C Bᵀ ⊙ L) · (dt ⊙ x)         L = exp(segsum(dt·A))
+  inter:   y += (C h_in) ⊙ exp(cumsum dt·A)
+  state:   h_out = h_in · exp(Σ dt·A) + Σ_t exp(Σ_{>t}) · dt_t B_t ⊗ x_t
+
+The decay/cumsum vectors are [Q]-sized VPU work; the three einsums map to
+[Q,N]×[N,Q], [Q,Q]×[Q,P] and [Q,N]ᵀ×[Q,P] MXU contractions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref, *,
+                chunk: int):
+    ic = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # [Q, P]
+    dt = dt_ref[0].astype(jnp.float32)      # [Q]
+    A = a_ref[0].astype(jnp.float32)        # [] scalar decay (negative)
+    B = b_ref[0].astype(jnp.float32)        # [Q, N]
+    C = c_ref[0].astype(jnp.float32)        # [Q, N]
+
+    log_a = dt * A                           # [Q]
+    cum = jnp.cumsum(log_a)                  # inclusive
+    # L[i,j] = exp(sum_{j<t<=i}) for j<=i
+    seg = cum[:, None] - cum[None, :]
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(li >= lj, jnp.exp(seg), 0.0)
+
+    xdt = x * dt[:, None]                    # [Q, P]
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [Q,Q]
+    y = jax.lax.dot_general(scores * L, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)       # [Q,P]
+
+    # inter-chunk: h_in contribution
+    h_in = h_ref[...]                        # [N, P]
+    a_in = jnp.exp(cum)                      # decay start->t inclusive
+    y += (jax.lax.dot_general(C, h_in, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+          * a_in[:, None])
+
+    # state update
+    a_end = jnp.exp(cum[-1] - cum)           # decay t->chunk end (exclusive of t)
+    h_new = (h_in * jnp.exp(cum[-1])
+             + jax.lax.dot_general(B * a_end[:, None], xdt,
+                                   (((0,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32))
+    h_ref[...] = h_new
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _final():
+        hout_ref[0] = h_new.astype(hout_ref.dtype)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, *, chunk: int = 128, interpret: bool = False):
+    """Kernel layout: x [BH, S, P]; dt [BH, S]; A [BH]; B, C [BH, S, N].
+
+    Returns (y [BH, S, P], h_final [BH, N, P]).
+    """
+    BH, S, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+            pl.BlockSpec((1,), lambda b, c: (b,)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, N, P), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")) if not interpret else None,
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y, h

@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# The two lines above MUST run before any jax-importing module: jax locks the
+# device count at first init, and the dry-run needs 512 placeholder devices.
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every assigned (architecture × input shape) cell, lower + compile the
+appropriate step (train_step / prefill / serve_step) for the production
+single-pod mesh (16×16 = 256 chips) and the multi-pod mesh (2×16×16 = 512
+chips), print ``memory_analysis()`` / ``cost_analysis()``, and write one JSON
+artifact per cell with the §Roofline terms (compute / memory / collective).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # full matrix
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+  ... --rules <variant>      # §Perf hillclimb sharding variants
+"""
+import argparse
+import gzip
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.registry import (ARCHS, SHAPES, ShapeSpec, get_config,
+                                input_specs, shape_cells)
+from ..models.config import param_count
+from ..models.model import Model
+from ..optim import AdamW, AdamWConfig
+from ..parallel.sharding import AxisRules, axis_rules, logical_sharding
+from ..train.specs import batch_names, cache_names, param_names
+from ..train.steps import (auto_policy, default_rules, make_train_step,
+                           opt_state_shardings, rules_variant, _shardings_for)
+from .analytic_cost import step_cost
+from .hlo_analysis import analyze_compiled, model_flops_for
+from .mesh import make_production_mesh
+
+
+def _opt_for(cfg) -> AdamW:
+    """fp32 moments by default; bf16 for the ≥100B cells (kimi-k2, qwen2-72b
+    would still fit fp32 at 256 chips, kimi would not — DESIGN.md §memory)."""
+    total, _ = param_count(cfg)
+    dtype = "bfloat16" if total > 100e9 else "float32"
+    return AdamW(AdamWConfig(state_dtype=dtype))
+
+
+def _replicated(mesh):
+    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+
+#: variant-specific ModelConfig overrides (applied when --rules <name>)
+CFG_OVERRIDES = {
+    "moe-ep": dict(moe_shard_dispatch=True),
+    "moe-ep2": dict(moe_shard_dispatch=True, moe_dispatch_groups=16),
+    "moe-ep3": dict(moe_shard_dispatch=True, moe_dispatch_groups=16,
+                    moe_combine_replicated=True),
+    "moe-ep4": dict(moe_shard_dispatch=True, moe_dispatch_groups=16,
+                    moe_combine_replicated=True),
+    "moe-ep4x32": dict(moe_shard_dispatch=True, moe_dispatch_groups=32,
+                       moe_combine_replicated=True),
+    "padvocab": "padvocab",          # round vocab up to a 256 multiple
+}
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+               rules: AxisRules, *, save_hlo_dir: Optional[str] = None,
+               rules_name: str = "default") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if rules_name == "auto":
+        spec0 = SHAPES[shape_name]
+        chips0 = int(np.prod(list(mesh.shape.values())))
+        rules_name = auto_policy(cfg, spec0.kind, spec0.batch, chips0)
+        rules = rules_variant(rules_name)
+    ov = CFG_OVERRIDES.get(rules_name)
+    if ov == "padvocab":
+        cfg = cfg.replace(vocab=((cfg.vocab + 255) // 256) * 256)
+    elif isinstance(ov, dict):
+        cfg = cfg.replace(**ov)
+    spec = SHAPES[shape_name]
+    model = Model(cfg)
+    chips = int(np.prod(list(mesh.shape.values())))
+    total, active = param_count(cfg)
+    rng = jax.random.PRNGKey(0)
+
+    t0 = time.time()
+    abstract_params = jax.eval_shape(model.init, rng)
+    p_sh = _shardings_for(abstract_params, param_names(abstract_params),
+                          rules, mesh)
+
+    with axis_rules(rules, mesh):
+        if spec.kind == "train":
+            opt = _opt_for(cfg)
+            abstract_opt = jax.eval_shape(opt.init, abstract_params)
+            o_sh = opt_state_shardings(p_sh, mesh)
+            batch = input_specs(cfg, spec)
+            b_sh = _shardings_for(batch, batch_names(batch), rules, mesh)
+            step = make_train_step(model, opt)
+            jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(abstract_params, abstract_opt, batch)
+        elif spec.kind == "prefill":
+            batch = input_specs(cfg, spec)
+            b_sh = _shardings_for(batch, batch_names(batch), rules, mesh)
+
+            def prefill_step(params, batch):
+                return model.prefill(params, batch)
+
+            jitted = jax.jit(prefill_step, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(abstract_params, batch)
+        elif spec.kind == "decode":
+            B, S = spec.batch, spec.seq
+            memory = None
+            if cfg.is_encdec:
+                memory = jax.ShapeDtypeStruct((B, S // 2, cfg.d_model),
+                                              jnp.dtype(cfg.compute_dtype))
+            if memory is not None:
+                abstract_cache = jax.eval_shape(
+                    lambda p, m: model.make_cache(p, B, S, m),
+                    abstract_params, memory)
+            else:
+                abstract_cache = jax.eval_shape(
+                    lambda p: model.make_cache(p, B, S), abstract_params)
+            c_sh = _shardings_for(abstract_cache, cache_names(abstract_cache),
+                                  rules, mesh)
+            io = input_specs(cfg, spec)
+            tok_sh = logical_sharding(io["token"].shape, ("batch", None),
+                                      rules, mesh)
+
+            def serve_step(params, token, cache, pos):
+                return model.decode_step(params, token, cache, pos)
+
+            jitted = jax.jit(serve_step,
+                             in_shardings=(p_sh, tok_sh, c_sh, _replicated(mesh)),
+                             out_shardings=(None, c_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(abstract_params, io["token"], abstract_cache,
+                                   io["pos"])
+        else:
+            raise ValueError(spec.kind)
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mf = model_flops_for(cfg, spec.kind, spec.seq, spec.batch, total, active)
+    ac = step_cost(cfg, spec.kind, spec.seq, spec.batch,
+                   opt_bytes=2 if total > 100e9 else 4)
+    rf = analyze_compiled(compiled, arch=arch, shape=shape_name,
+                          mesh_name=mesh_name, chips=chips, model_flops=mf,
+                          flops_override=ac.flops, bytes_override=ac.hbm_bytes)
+
+    mem_lines = {}
+    try:
+        ma = compiled.memory_analysis()
+        mem_lines = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "generated_code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+    except Exception as e:                                   # pragma: no cover
+        mem_lines = {"error": str(e)}
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+
+    if save_hlo_dir:
+        os.makedirs(save_hlo_dir, exist_ok=True)
+        path = os.path.join(save_hlo_dir,
+                            f"{arch}__{shape_name}__{mesh_name}.hlo.txt.gz")
+        with gzip.open(path, "wt") as f:
+            f.write(compiled.as_text())
+
+    out = {
+        **rf.to_dict(),
+        "kind": spec.kind,
+        "params_total": total, "params_active": active,
+        "memory_analysis": mem_lines,
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "lower_s": t_lower, "compile_s": t_compile,
+        "hbm_budget_ok": (mem_lines.get("argument_bytes") is not None and
+                          (mem_lines.get("argument_bytes", 0)
+                           + mem_lines.get("temp_bytes", 0)
+                           + mem_lines.get("output_bytes", 0)
+                           - mem_lines.get("alias_bytes", 0)) < 16e9),
+    }
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, choices=sorted(ARCHS) + [None])
+    ap.add_argument("--shape", default=None, choices=sorted(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="full assignment matrix")
+    ap.add_argument("--rules", default="default",
+                    help="sharding-rules variant (§Perf hillclimb)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    args = ap.parse_args(argv)
+
+    rules = (default_rules() if args.rules == "auto"
+             else rules_variant(args.rules))
+    archs = sorted(ARCHS) if args.all or args.arch is None else [args.arch]
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = []
+    for arch in archs:
+        cells = shape_cells(arch)
+        for shape_name, status, reason in cells:
+            if args.shape and shape_name != args.shape:
+                continue
+            if status == "skip":
+                print(f"[skip] {arch} × {shape_name}: {reason}", flush=True)
+                continue
+            for mesh_name in meshes:
+                mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+                tag = f"__{args.tag}" if args.tag else ""
+                rtag = f"__{args.rules}" if args.rules != "default" else ""
+                fn = os.path.join(
+                    args.out, f"{arch}__{shape_name}__{mesh_name}{rtag}{tag}.json")
+                if os.path.exists(fn):
+                    print(f"[cached] {fn}", flush=True)
+                    continue
+                print(f"[lower+compile] {arch} × {shape_name} × {mesh_name} "
+                      f"(rules={args.rules})", flush=True)
+                try:
+                    rec = lower_cell(arch, shape_name, mesh, mesh_name, rules,
+                                     rules_name=args.rules,
+                                     save_hlo_dir=(args.out + "/hlo"
+                                                   if args.save_hlo else None))
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape_name, mesh_name, str(e)))
+                    continue
+                with open(fn, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"  flops={rec['hlo_flops']:.3e} "
+                      f"bytes={rec['hlo_bytes']:.3e} "
+                      f"coll={rec['collective_bytes']:.3e} "
+                      f"bottleneck={rec['bottleneck']} "
+                      f"frac={rec['roofline_fraction']:.3f} "
+                      f"mem/dev={rec['memory_analysis'].get('argument_bytes', -1)/1e9:.2f}GB(args) "
+                      f"compile={rec['compile_s']:.1f}s", flush=True)
+
+    if failures:
+        print("\nFAILURES:", flush=True)
+        for f in failures:
+            print(" ", f, flush=True)
+        return 1
+    print("\ndry-run complete.", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,22 @@
+"""Production mesh builders.
+
+Functions, not module-level constants, so importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.  Multi-pod adds a leading
+    pod axis: (pod=2, data=16, model=16) = 512 chips; ``pod`` maps to DCN,
+    ``data``/``model`` to ICI within a pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CI-scale dry-run tests (host platform devices)."""
+    return jax.make_mesh(shape, axes)

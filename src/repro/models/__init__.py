@@ -1,0 +1,2 @@
+from .config import ModelConfig, MoEConfig, SSMConfig, param_count
+from .model import Model, build_model

@@ -1,0 +1,286 @@
+"""Attention: GQA with blockwise (flash-style) training path and cached decode.
+
+The blockwise path never materializes the [Sq, Skv] score matrix: an outer
+``lax.scan`` over query blocks carries nothing; an inner scan over KV blocks
+carries the online-softmax state (m, l, o).  GQA is computed in grouped form
+(q reshaped to [B, S, K, H/K, Dh]) so KV heads are never repeated in memory.
+
+Sliding-window layers (gemma3) pass ``window > 0``; the mask is computed from
+traced position indices so a single compiled block body serves both local and
+global layers (the per-layer window rides the layer scan as an xs input).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import Params, apply_rope, normal_init, zeros_init
+
+NEG_INF = -1e30
+
+
+def _pallas_interpret() -> bool:
+    """Pallas kernels run natively on TPU, interpreted elsewhere (CPU CI)."""
+    import jax
+    return jax.default_backend() != "tpu"
+
+
+def _pick_block(seq: int, block: int) -> int:
+    """Largest divisor of ``seq`` that is ≤ ``block`` (static)."""
+    b = min(block, seq)
+    while seq % b:
+        b -= 1
+    return b
+
+
+def _mask(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
+          window: jax.Array, kv_len: Optional[jax.Array]) -> jax.Array:
+    """[*,Sq,Sk] boolean validity mask from position vectors."""
+    m = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    # window: valid iff q - k < window (window<=0 disables; traced-friendly)
+    w = jnp.asarray(window, jnp.int32)
+    m &= (w <= 0) | (q_pos[:, None] - k_pos[None, :] < w)
+    if kv_len is not None:
+        m &= k_pos[None, :] < kv_len
+    return m
+
+
+def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Any = 0, q_offset: Any = 0,
+                    kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Materialized-score reference path. q:[B,Sq,H,Dh] k,v:[B,Sk,K,Dh]."""
+    B, Sq, H, Dh = q.shape
+    K = k.shape[2]
+    r = H // K
+    qg = q.reshape(B, Sq, K, r, Dh)
+    scale = 1.0 / np.sqrt(Dh)
+    s = jnp.einsum("bqkrd,bskd->bkrqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    q_pos = jnp.asarray(q_offset, jnp.int32) + jnp.arange(Sq, dtype=jnp.int32)
+    k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    m = _mask(q_pos, k_pos, causal=causal, window=window, kv_len=kv_len)
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrqs,bskd->bqkrd", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, Dh)
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Any = 0, q_offset: Any = 0,
+                        kv_len: Optional[jax.Array] = None,
+                        block_q: int = 512, block_kv: int = 1024,
+                        skip_blocks: bool = False) -> jax.Array:
+    """Flash-style attention via nested lax.scan; O(block_q·block_kv) memory.
+
+    ``skip_blocks=True`` wraps each KV-block update in ``lax.cond`` so fully
+    masked (future, for causal) blocks skip their matmuls — a §Perf lever that
+    halves causal attention FLOPs at the cost of a branch per block.
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    r = H // K
+    bq, bk = _pick_block(Sq, block_q), _pick_block(Sk, block_kv)
+    nq, nk = Sq // bq, Sk // bk
+    scale = 1.0 / np.sqrt(Dh)
+
+    qg = q.reshape(B, nq, bq, K, r, Dh)
+    kb = k.reshape(B, nk, bk, K, Dh)
+    vb = v.reshape(B, nk, bk, K, Dh)
+    q_off = jnp.asarray(q_offset, jnp.int32)
+
+    def q_block(_, iq):
+        qi = qg[:, iq] * scale                       # [B,bq,K,r,Dh]
+        q_pos = q_off + iq * bq + jnp.arange(bq, dtype=jnp.int32)
+
+        def kv_block(carry, jk):
+            o, m, l = carry
+            k_pos = jk * bk + jnp.arange(bk, dtype=jnp.int32)
+
+            def update(o, m, l):
+                kj, vj = kb[:, jk], vb[:, jk]
+                s = jnp.einsum("bqkrd,bskd->bkrqs", qi, kj,
+                               preferred_element_type=jnp.float32)
+                valid = _mask(q_pos, k_pos, causal=causal, window=window,
+                              kv_len=kv_len)
+                s = jnp.where(valid[None, None, None], s, NEG_INF)
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                alpha = jnp.exp(m - m_new)
+                l_new = l * alpha + p.sum(axis=-1)
+                pv = jnp.einsum("bkrqs,bskd->bkrqd", p.astype(vj.dtype), vj,
+                                preferred_element_type=jnp.float32)
+                o_new = o * alpha[..., None] + pv
+                return o_new, m_new, l_new
+
+            if skip_blocks and causal:
+                # whole block in the future for every query row -> skip
+                needed = (jk * bk) <= (q_off + iq * bq + bq - 1)
+                o, m, l = jax.lax.cond(needed, update, lambda o, m, l: (o, m, l),
+                                       o, m, l)
+            else:
+                o, m, l = update(o, m, l)
+            return (o, m, l), None
+
+        o0 = jnp.zeros((B, K, r, bq, Dh), jnp.float32)
+        m0 = jnp.full((B, K, r, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, r, bq), jnp.float32)
+        (o, m, l), _ = jax.lax.scan(kv_block, (o0, m0, l0),
+                                    jnp.arange(nk, dtype=jnp.int32))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        # [B,K,r,bq,Dh] -> [B,bq,K,r,Dh]
+        return None, jnp.moveaxis(o, 3, 1)
+
+    _, blocks = jax.lax.scan(q_block, None, jnp.arange(nq, dtype=jnp.int32))
+    # blocks: [nq, B, bq, K, r, Dh] -> [B, Sq, H, Dh]
+    o = jnp.moveaxis(blocks, 0, 1).reshape(B, Sq, K, r, Dh)
+    return o.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
+                     kv_len: jax.Array, window: Any = 0) -> jax.Array:
+    """Single-token attention against a cache. q:[B,1,H,Dh] cache:[B,S,K,Dh].
+
+    Softmax statistics are computed over the full logical KV axis; under a
+    sequence-sharded cache the SPMD partitioner lowers the max/sum/contract
+    into psum-combined partials (flash-decoding on TPU for free).
+    """
+    B, _, H, Dh = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    r = H // K
+    qg = q.reshape(B, K, r, Dh)
+    scale = 1.0 / np.sqrt(Dh)
+    s = jnp.einsum("bkrd,bskd->bkrs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    k_pos = jnp.arange(S, dtype=jnp.int32)
+    valid = k_pos[None, :] < kv_len                      # [1,S] or [B,S]
+    w = jnp.asarray(window, jnp.int32)
+    valid = valid & ((w <= 0) | (k_pos[None, :] >= kv_len - w))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrs,bskd->bkrd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, 1, H, Dh)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (projection + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+def attn_init(key, cfg: ModelConfig, n_layers: Optional[int] = None,
+              dtype=None) -> Params:
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    lead = () if n_layers is None else (n_layers,)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": normal_init(ks[0], (*lead, d, h * dh), dtype),
+        "wk": normal_init(ks[1], (*lead, d, kv * dh), dtype),
+        "wv": normal_init(ks[2], (*lead, d, kv * dh), dtype),
+        "wo": normal_init(ks[3], (*lead, h * dh, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((*lead, h * dh), dtype)
+        p["bk"] = jnp.zeros((*lead, kv * dh), dtype)
+        p["bv"] = jnp.zeros((*lead, kv * dh), dtype)
+    return p
+
+
+def attn_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
+               positions: jax.Array, window: Any = 0,
+               memory: Optional[jax.Array] = None,
+               cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+               cache_pos: Optional[jax.Array] = None,
+               causal: bool = True, is_cross: bool = False
+               ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """One attention sublayer.
+
+    * training/prefill self-attn: ``cache=None`` — blockwise/dense over x.
+    * decode self-attn: ``cache=(k,v)`` [B,S,K,Dh] + ``cache_pos`` — insert
+      the token's K/V at ``cache_pos``, attend over the cache.
+    * cross-attn (``is_cross``): keys/values come from ``memory`` (encoder
+      output) when given, else from a cache of the *projected* memory
+      (computed once at prefill via :func:`project_memory`).
+    """
+    B, S, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+
+    q = (x @ p["wq"] + p.get("bq", 0)).reshape(B, S, h, dh)
+    if not is_cross:
+        q = apply_rope(q, positions, cfg.rope_theta)
+
+    new_cache = None
+    if is_cross and cache is not None and memory is None:
+        # decode-time cross-attn: cached projected memory, full valid length
+        ck, cv = cache
+        o = decode_attention(q, ck, cv, kv_len=jnp.asarray(ck.shape[1], jnp.int32))
+        new_cache = cache
+    else:
+        kv_src = memory if is_cross else x
+        k = (kv_src @ p["wk"] + p.get("bk", 0)).reshape(B, kv_src.shape[1], kv, dh)
+        v = (kv_src @ p["wv"] + p.get("bv", 0)).reshape(B, kv_src.shape[1], kv, dh)
+        if not is_cross:
+            k = apply_rope(k, positions, cfg.rope_theta)
+        if cache is not None:
+            ck, cv = cache
+            ck = _cache_insert(ck, k, cache_pos)
+            cv = _cache_insert(cv, v, cache_pos)
+            new_cache = (ck, cv)
+            use_kernel = (cfg.use_pallas and not is_cross
+                          and not isinstance(window, jax.core.Tracer)
+                          and int(window) <= 0)
+            if use_kernel:
+                from ..kernels.flash_decode.ops import gqa_flash_decode
+                o = gqa_flash_decode(q, ck, cv, cache_pos + 1,
+                                     interpret=_pallas_interpret())
+            else:
+                o = decode_attention(q, ck, cv, kv_len=cache_pos + 1,
+                                     window=window)
+        else:
+            use_kernel = (cfg.use_pallas and not is_cross and causal
+                          and not isinstance(window, jax.core.Tracer))
+            if use_kernel:
+                from ..kernels.flash_attention.ops import gqa_flash_attention
+                o = gqa_flash_attention(
+                    q, k, v, causal=True, window=int(window),
+                    block_q=min(cfg.attn_block_q, 128),
+                    block_kv=min(cfg.attn_block_kv, 128),
+                    interpret=_pallas_interpret())
+            else:
+                fn = (blockwise_attention if cfg.attn_impl == "blockwise"
+                      else dense_attention)
+                kw = (dict(block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv)
+                      if cfg.attn_impl == "blockwise" else {})
+                o = fn(q, k, v, causal=causal and not is_cross, window=window,
+                       **kw)
+
+    out = o.reshape(B, S, h * dh) @ p["wo"]
+    return out, new_cache
+
+
+def project_memory(p: Params, memory: jax.Array, cfg: ModelConfig
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Precompute cross-attention K/V of the encoder memory (once per request)."""
+    B, Sm, _ = memory.shape
+    kv, dh = cfg.n_kv, cfg.head_dim
+    k = (memory @ p["wk"] + p.get("bk", 0)).reshape(B, Sm, kv, dh)
+    v = (memory @ p["wv"] + p.get("bv", 0)).reshape(B, Sm, kv, dh)
+    return k, v
+
+
+def _cache_insert(cache: jax.Array, kv_new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Insert kv_new [B,1,K,Dh] into cache [B,S,K,Dh] at position ``pos``."""
+    return jax.lax.dynamic_update_slice(
+        cache, kv_new.astype(cache.dtype),
+        (0, pos.astype(jnp.int32), 0, 0))
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  n_layers: Optional[int] = None, dtype=None) -> Tuple[jax.Array, jax.Array]:
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    lead = () if n_layers is None else (n_layers,)
+    shape = (*lead, batch, max_len, cfg.n_kv, cfg.head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)

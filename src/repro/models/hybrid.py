@@ -1,0 +1,183 @@
+"""Zamba2-style hybrid: Mamba2 backbone with a weight-SHARED attention block.
+
+Structure (arXiv:2411.15242, simplified — noted in DESIGN.md): the backbone is
+``n_layers`` Mamba2 blocks; after every ``hybrid_group`` blocks, one shared
+transformer block (attention + MLP, one set of weights reused at every
+invocation) runs on the residual stream.  We scan over G = n_layers /
+hybrid_group *groups*; each group scans its ``hybrid_group`` Mamba layers
+(params stacked [G, k, ...]) and then applies the shared block, whose weights
+are scan-invariant (closed over), i.e. genuinely shared.
+
+Decode caches: per-layer SSM/conv states stacked [G, k, ...] plus one KV cache
+per shared-block invocation, stacked [G, ...] — at 500k context this KV cache
+is the only sequence-length-proportional state, which is why zamba2 runs the
+``long_500k`` cell while pure-attention archs skip it.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import logical_constraint
+from .attention import attn_apply, attn_init, init_kv_cache
+from .config import ModelConfig
+from .layers import (Params, embed_apply, embed_init, mlp_apply, mlp_init,
+                     normal_init, rms_norm, unembed_apply)
+from .ssm import init_ssm_cache, mamba2_apply, mamba2_init
+
+
+def _shape(cfg: ModelConfig) -> Tuple[int, int]:
+    k = cfg.hybrid_group
+    assert k > 0 and cfg.n_layers % k == 0, (cfg.n_layers, k)
+    return cfg.n_layers // k, k             # (G groups, k per group)
+
+
+def hybrid_init(key, cfg: ModelConfig) -> Params:
+    G, k = _shape(cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    # mamba params stacked [G, k, ...]: init at [G*k, ...] then reshape
+    flat = mamba2_init(ks[1], cfg, n_layers=G * k)
+    mamba = jax.tree.map(lambda a: a.reshape(G, k, *a.shape[1:]), flat)
+    norms = jnp.zeros((G, k, cfg.d_model), dtype)
+    shared = {
+        "attn": attn_init(ks[2], cfg),
+        "mlp": mlp_init(ks[3], cfg.d_model, cfg.d_ff, cfg.act, dtype),
+        "norm1": jnp.zeros((cfg.d_model,), dtype),
+        "norm2": jnp.zeros((cfg.d_model,), dtype),
+    }
+    return {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "mamba": mamba,
+        "mamba_norm": norms,
+        "shared": shared,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def _shared_block(shared: Params, x: jax.Array, cfg: ModelConfig, *,
+                  positions, cache=None, cache_pos=None):
+    h, new_cache = attn_apply(shared["attn"],
+                              rms_norm(x, shared["norm1"], cfg.rms_eps), cfg,
+                              positions=positions, cache=cache,
+                              cache_pos=cache_pos)
+    x = x + h
+    x = x + mlp_apply(shared["mlp"], rms_norm(x, shared["norm2"], cfg.rms_eps),
+                      cfg.act)
+    return logical_constraint(x, "batch", "seq", "act_embed"), new_cache
+
+
+def hybrid_forward(params: Params, cfg: ModelConfig, tokens: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward → (logits, aux=0)."""
+    x = embed_apply(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+    x = logical_constraint(x, "batch", "seq", "act_embed")
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    shared = params["shared"]
+
+    def group(x, xs):
+        mamba_g, norm_g = xs                      # leaves lead with k
+
+        def mamba_layer(x, layer):
+            mp, nscale = layer
+            h, _ = mamba2_apply(mp, rms_norm(x, nscale, cfg.rms_eps), cfg)
+            return x + h, None
+
+        inner = jax.checkpoint(mamba_layer) if cfg.remat == "full" else mamba_layer
+        x, _ = jax.lax.scan(inner, x, (mamba_g, norm_g))
+        x, _ = _shared_block(shared, x, cfg, positions=positions)
+        return x, None
+
+    group_fn = jax.checkpoint(group) if cfg.remat == "full" else group
+    x, _ = jax.lax.scan(group_fn, x, (params["mamba"], params["mamba_norm"]))
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = unembed_apply(params["embed"], x, cfg.logit_softcap)
+    logits = logical_constraint(logits, "batch", "seq", "vocab")
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def hybrid_make_cache(cfg: ModelConfig, batch: int, max_len: int):
+    G, k = _shape(cfg)
+    conv, ssm = init_ssm_cache(cfg, batch)
+    conv = jnp.broadcast_to(conv, (G, k, *conv.shape)).copy()
+    ssm = jnp.broadcast_to(ssm, (G, k, *ssm.shape)).copy()
+    ck, cv = init_kv_cache(cfg, batch, max_len)
+    ck = jnp.broadcast_to(ck, (G, *ck.shape)).copy()
+    cv = jnp.broadcast_to(cv, (G, *cv.shape)).copy()
+    ck = logical_constraint(ck, "layers", "batch", "kv_seq", "kv", "head")
+    cv = logical_constraint(cv, "layers", "batch", "kv_seq", "kv", "head")
+    return {"conv": conv, "ssm": ssm, "attn_k": ck, "attn_v": cv}
+
+
+def hybrid_prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                   cache_len: Optional[int] = None):
+    """Prompt pass building all decode state (SSM states + shared-attn KV)."""
+    B, S = tokens.shape
+    max_len = cache_len or S
+    x = embed_apply(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+    positions = jnp.arange(S, dtype=jnp.int32)
+    shared = params["shared"]
+    k0, v0 = init_kv_cache(cfg, B, max_len)
+
+    def group(x, xs):
+        mamba_g, norm_g = xs
+
+        def mamba_layer(x, layer):
+            mp, nscale = layer
+            h, (conv_s, ssm_s) = mamba2_apply(
+                mp, rms_norm(x, nscale, cfg.rms_eps), cfg, return_state=True)
+            return x + h, (conv_s, ssm_s)
+
+        x, (conv_g, ssm_g) = jax.lax.scan(mamba_layer, x, (mamba_g, norm_g))
+        # shared attention with K/V capture
+        normed = rms_norm(x, shared["norm1"], cfg.rms_eps)
+        from .attention import apply_rope
+        kproj = (normed @ shared["attn"]["wk"]).reshape(B, S, cfg.n_kv, cfg.head_dim)
+        kproj = apply_rope(kproj, positions, cfg.rope_theta)
+        vproj = (normed @ shared["attn"]["wv"]).reshape(B, S, cfg.n_kv, cfg.head_dim)
+        ck = jax.lax.dynamic_update_slice(k0, kproj.astype(k0.dtype), (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(v0, vproj.astype(v0.dtype), (0, 0, 0, 0))
+        x, _ = _shared_block(shared, x, cfg, positions=positions)
+        return x, (conv_g, ssm_g, ck, cv)
+
+    x, (convs, ssms, cks, cvs) = jax.lax.scan(
+        group, x, (params["mamba"], params["mamba_norm"]))
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = unembed_apply(params["embed"], x[:, -1:], cfg.logit_softcap)
+    cache = {"conv": convs, "ssm": ssms, "attn_k": cks, "attn_v": cvs}
+    return logits, cache, jnp.asarray(S, jnp.int32)
+
+
+def hybrid_decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
+                       cache, pos: jax.Array):
+    x = embed_apply(params["embed"], token).astype(jnp.dtype(cfg.compute_dtype))
+    positions = pos[None]
+    shared = params["shared"]
+
+    def group(x, xs):
+        mamba_g, norm_g, conv_g, ssm_g, ck, cv = xs
+
+        def mamba_layer(x, layer):
+            mp, nscale, conv_s, ssm_s = layer
+            h, (conv_n, ssm_n) = mamba2_apply(
+                mp, rms_norm(x, nscale, cfg.rms_eps), cfg,
+                conv_state=conv_s, ssm_state=ssm_s)
+            return x + h, (conv_n, ssm_n)
+
+        x, (conv_n, ssm_n) = jax.lax.scan(mamba_layer, x,
+                                          (mamba_g, norm_g, conv_g, ssm_g))
+        x, new_kv = _shared_block(shared, x, cfg, positions=positions,
+                                  cache=(ck, cv), cache_pos=pos)
+        return x, (conv_n, ssm_n, new_kv[0], new_kv[1])
+
+    x, (conv, ssm, cks, cvs) = jax.lax.scan(
+        group, x, (params["mamba"], params["mamba_norm"],
+                   cache["conv"], cache["ssm"], cache["attn_k"], cache["attn_v"]))
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = unembed_apply(params["embed"], x, cfg.logit_softcap)
+    new_cache = {"conv": conv, "ssm": ssm, "attn_k": cks, "attn_v": cvs}
+    return logits, new_cache

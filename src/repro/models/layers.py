@@ -1,0 +1,136 @@
+"""Shared neural-net layers (pure functional, dict pytree params)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def normal_init(key, shape, dtype, std: float = 0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype, std: float = 0.0):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype, std: float = 0.0):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    normed = x32 * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rms_norm_gated(x: jax.Array, z: jax.Array, scale: jax.Array,
+                   eps: float = 1e-6) -> jax.Array:
+    """Mamba2's gated RMSNorm: norm(x * silu(z))."""
+    dt = x.dtype
+    x32 = (x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)).astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def activate(gate: jax.Array, up: Optional[jax.Array], act: str) -> jax.Array:
+    if act == "swiglu":
+        return jax.nn.silu(gate) * up
+    if act == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    if act == "gelu":
+        return jax.nn.gelu(gate, approximate=True)
+    if act == "relu2":                      # squared ReLU (nemotron/minitron)
+        r = jax.nn.relu(gate)
+        return r * r
+    raise ValueError(act)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype, n_layers: Optional[int] = None) -> Params:
+    lead = () if n_layers is None else (n_layers,)
+    ks = jax.random.split(key, 3)
+    gated = act in ("swiglu", "geglu")
+    p = {"w_in": normal_init(ks[0], (*lead, d_model, d_ff), dtype),
+         "w_out": normal_init(ks[2], (*lead, d_ff, d_model), dtype)}
+    if gated:
+        p["w_gate"] = normal_init(ks[1], (*lead, d_model, d_ff), dtype)
+    return p
+
+
+def mlp_apply(p: Params, x: jax.Array, act: str) -> jax.Array:
+    up = x @ p["w_in"]
+    gate = x @ p["w_gate"] if "w_gate" in p else up
+    h = activate(gate, up if "w_gate" in p else None, act)
+    return h @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                       # [Dh/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos = jnp.cos(angles)[..., None, :]                       # [..., S, 1, Dh/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def embed_init(key, vocab: int, d_model: int, dtype) -> Params:
+    return {"table": normal_init(key, (vocab, d_model), dtype, std=1.0 / np.sqrt(d_model))}
+
+
+def embed_apply(p: Params, tokens: jax.Array, scale: bool = True) -> jax.Array:
+    x = jnp.take(p["table"], tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(np.sqrt(x.shape[-1]), x.dtype)
+    return x
+
+
+def unembed_apply(p: Params, x: jax.Array, softcap: float = 0.0) -> jax.Array:
+    logits = x @ p["table"].T
+    if softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE in f32; labels [B,S], logits [B,S,V]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

@@ -1,0 +1,82 @@
+"""Pure Mamba2 LM (mamba2-130m): attention-free SSD stack."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import logical_constraint
+from .config import ModelConfig
+from .layers import Params, embed_apply, embed_init, rms_norm, unembed_apply
+from .ssm import init_ssm_cache, mamba2_apply, mamba2_init
+
+
+def mamba_lm_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    dtype = jnp.dtype(cfg.param_dtype)
+    return {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "mamba": mamba2_init(ks[1], cfg, n_layers=cfg.n_layers),
+        "norms": jnp.zeros((cfg.n_layers, cfg.d_model), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def mamba_lm_forward(params: Params, cfg: ModelConfig, tokens: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+    x = embed_apply(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+    x = logical_constraint(x, "batch", "seq", "act_embed")
+
+    def layer(x, xs):
+        mp, nscale = xs
+        h, _ = mamba2_apply(mp, rms_norm(x, nscale, cfg.rms_eps), cfg)
+        x = x + h
+        return logical_constraint(x, "batch", "seq", "act_embed"), None
+
+    layer_fn = jax.checkpoint(layer) if cfg.remat == "full" else layer
+    x, _ = jax.lax.scan(layer_fn, x, (params["mamba"], params["norms"]))
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = unembed_apply(params["embed"], x, cfg.logit_softcap)
+    return logical_constraint(logits, "batch", "seq", "vocab"), jnp.zeros((), jnp.float32)
+
+
+def mamba_lm_prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                     cache_len: Optional[int] = None):
+    """Prompt pass; cache is O(1) in sequence length (conv + SSM states)."""
+    x = embed_apply(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+
+    def layer(x, xs):
+        mp, nscale = xs
+        h, (conv_s, ssm_s) = mamba2_apply(mp, rms_norm(x, nscale, cfg.rms_eps),
+                                          cfg, return_state=True)
+        return x + h, (conv_s, ssm_s)
+
+    x, (convs, ssms) = jax.lax.scan(layer, x, (params["mamba"], params["norms"]))
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = unembed_apply(params["embed"], x[:, -1:], cfg.logit_softcap)
+    cache = {"conv": convs, "ssm": ssms}
+    return logits, cache, jnp.asarray(tokens.shape[1], jnp.int32)
+
+
+def mamba_lm_decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
+                         cache, pos: jax.Array):
+    x = embed_apply(params["embed"], token).astype(jnp.dtype(cfg.compute_dtype))
+
+    def layer(x, xs):
+        mp, nscale, conv_s, ssm_s = xs
+        h, (conv_n, ssm_n) = mamba2_apply(mp, rms_norm(x, nscale, cfg.rms_eps),
+                                          cfg, conv_state=conv_s, ssm_state=ssm_s)
+        return x + h, (conv_n, ssm_n)
+
+    x, (convs, ssms) = jax.lax.scan(
+        layer, x, (params["mamba"], params["norms"], cache["conv"], cache["ssm"]))
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = unembed_apply(params["embed"], x, cfg.logit_softcap)
+    return logits, {"conv": convs, "ssm": ssms}
+
+
+def mamba_lm_make_cache(cfg: ModelConfig, batch: int):
+    conv, ssm = init_ssm_cache(cfg, batch, n_layers=cfg.n_layers)
+    return {"conv": conv, "ssm": ssm}

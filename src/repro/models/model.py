@@ -1,0 +1,100 @@
+"""Unified model facade: one interface over every architecture family.
+
+``Model(cfg)`` exposes init / loss / forward / prefill / decode_step with a
+single batch dict convention, so the trainer, the server, the dry-run driver
+and the offload runtime never branch on family.
+
+Batch dict keys (all optional per family):
+  tokens      [B, S_text] int32       decoder token ids
+  labels      [B, S_text] int32       next-token targets (training)
+  mask        [B, S_text] f32         loss mask (optional)
+  embeds      [B, S_front, D]         frontend-stub embeddings (vlm)
+  enc_embeds  [B, S_enc, D]           encoder frontend embeddings (audio encdec)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hybrid, mamba_lm, transformer
+from .config import ModelConfig, param_count
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig) -> None:
+        self.cfg = cfg
+
+    # -- init ---------------------------------------------------------------
+    def init(self, rng: jax.Array) -> Any:
+        if self.cfg.family == "hybrid":
+            return hybrid.hybrid_init(rng, self.cfg)
+        if self.cfg.family == "ssm":
+            return mamba_lm.mamba_lm_init(rng, self.cfg)
+        return transformer.decoder_init(rng, self.cfg)
+
+    def init_abstract(self, rng: jax.Array) -> Any:
+        return jax.eval_shape(self.init, rng)
+
+    # -- training -------------------------------------------------------------
+    def loss(self, params: Any, batch: Dict[str, jax.Array]
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        if cfg.family in ("hybrid", "ssm"):
+            fwd = (hybrid.hybrid_forward if cfg.family == "hybrid"
+                   else mamba_lm.mamba_lm_forward)
+            logits, aux = fwd(params, cfg, batch["tokens"])
+            from .layers import cross_entropy_loss
+            ce = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+            return ce, {"ce": ce, "moe_aux": aux}
+        return transformer.loss_fn(params, cfg, batch)
+
+    def forward(self, params: Any, batch: Dict[str, jax.Array]):
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return hybrid.hybrid_forward(params, cfg, batch["tokens"])
+        if cfg.family == "ssm":
+            return mamba_lm.mamba_lm_forward(params, cfg, batch["tokens"])
+        return transformer.forward(params, cfg, tokens=batch.get("tokens"),
+                                   embeds=batch.get("embeds"),
+                                   enc_embeds=batch.get("enc_embeds"))
+
+    # -- serving ------------------------------------------------------------
+    def prefill(self, params: Any, batch: Dict[str, jax.Array],
+                cache_len: Optional[int] = None):
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return hybrid.hybrid_prefill(params, cfg, batch["tokens"], cache_len)
+        if cfg.family == "ssm":
+            return mamba_lm.mamba_lm_prefill(params, cfg, batch["tokens"], cache_len)
+        return transformer.prefill(params, cfg, tokens=batch.get("tokens"),
+                                   embeds=batch.get("embeds"),
+                                   enc_embeds=batch.get("enc_embeds"),
+                                   cache_len=cache_len)
+
+    def decode_step(self, params: Any, token: jax.Array, cache, pos: jax.Array):
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return hybrid.hybrid_decode_step(params, cfg, token, cache, pos)
+        if cfg.family == "ssm":
+            return mamba_lm.mamba_lm_decode_step(params, cfg, token, cache, pos)
+        return transformer.decode_step(params, cfg, token, cache, pos)
+
+    def make_cache(self, params: Any, batch_size: int, max_len: int,
+                   memory: Optional[jax.Array] = None):
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return hybrid.hybrid_make_cache(cfg, batch_size, max_len)
+        if cfg.family == "ssm":
+            return mamba_lm.mamba_lm_make_cache(cfg, batch_size)
+        return transformer.make_cache(params, cfg, batch_size, max_len, memory)
+
+    # -- accounting -----------------------------------------------------------
+    def n_params(self) -> Tuple[int, int]:
+        return param_count(self.cfg)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,178 @@
+"""Mixture-of-Experts FFN: token-choice top-k with sort-based dispatch.
+
+Dispatch is capacity-based and sort-free of giant one-hot tensors: tokens are
+ranked within their expert via a stable argsort of expert ids, gathered into
+an [E, C, D] buffer (overflow tokens drop, underflow slots zero), pushed
+through the stacked expert GEMMs (``repro.kernels.grouped_matmul`` is the
+Pallas TPU path; the einsum here is its oracle), and scattered back with the
+router combine weights.  Compiled FLOPs are ≈ 2·3·T·top_k·D·F·capacity_factor
+— the *active*-parameter compute the roofline expects, not the dense E× blowup.
+
+With experts sharded over the ``model`` mesh axis (EP), XLA lowers the
+gather/scatter into all-to-all exchanges on the token dimension.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import logical_constraint
+from .config import ModelConfig
+from .layers import Params, activate, normal_init
+
+
+def moe_init(key, cfg: ModelConfig, n_layers: Optional[int] = None,
+             dtype=None) -> Params:
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff_expert, m.n_experts
+    lead = () if n_layers is None else (n_layers,)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": normal_init(ks[0], (*lead, d, E), dtype, std=0.02),
+        "w_gate": normal_init(ks[1], (*lead, E, d, f), dtype),
+        "w_in": normal_init(ks[2], (*lead, E, d, f), dtype),
+        "w_out": normal_init(ks[3], (*lead, E, f, d), dtype),
+    }
+    if m.n_shared_experts:
+        fs = m.d_ff_expert * m.n_shared_experts
+        p["shared_gate"] = normal_init(ks[4], (*lead, d, fs), dtype)
+        p["shared_in"] = normal_init(ks[4], (*lead, d, fs), dtype)
+        p["shared_out"] = normal_init(ks[4], (*lead, fs, d), dtype)
+    return p
+
+
+def router_topk(logits: jax.Array, top_k: int) -> Tuple[jax.Array, jax.Array]:
+    """Softmax-then-topk router. logits [T,E] -> (weights [T,k], idx [T,k])."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(probs, top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)     # renormalize
+    return w, idx
+
+
+def _dispatch(p: Params, xt: jax.Array, idx: jax.Array, C: int,
+              cfg: ModelConfig):
+    """Sort-based dispatch → expert GEMMs for ONE token group.
+    xt [T, D]; idx [T, k]; returns (ye [E·C, D], dest [T·k], keep [T·k])."""
+    m = cfg.moe
+    T, D = xt.shape
+    E, k = m.n_experts, m.top_k
+
+    flat_e = idx.reshape(-1)                                  # [T*k]
+    order = jnp.argsort(flat_e, stable=True)                  # assignments by expert
+    counts = jnp.bincount(flat_e, length=E)                   # tokens per expert
+    starts = jnp.cumsum(counts) - counts                      # first rank per expert
+    ranks = jnp.zeros(T * k, jnp.int32).at[order].set(
+        jnp.arange(T * k, dtype=jnp.int32))                   # sorted rank
+    slot = ranks - starts[flat_e]                             # rank within expert
+    keep = slot < C                                           # capacity overflow drops
+    dest = jnp.where(keep, flat_e * C + slot, E * C)          # OOB sentinel -> drop
+
+    # gather tokens into [E*C, D] (duplicated per assignment)
+    token_of = jnp.arange(T * k) // k
+    buf = jnp.zeros((E * C, D), xt.dtype).at[dest].set(
+        xt[token_of], mode="drop")
+    xe = buf.reshape(E, C, D)
+    if cfg.moe_shard_dispatch:
+        # pin expert-parallel layout: the scatter above becomes a (sharded
+        # tokens -> expert-sharded capacity) exchange, not a replicated buffer
+        xe = logical_constraint(xe, "expert", None, "act_embed")
+
+    # ---- expert GEMMs (grouped matmul; see kernels/grouped_matmul) -------
+    gate = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", xe, p["w_in"])
+    h = activate(gate, up, cfg.act if cfg.act != "gelu" else "swiglu")
+    if cfg.moe_shard_dispatch:
+        h = logical_constraint(h, "expert", None, None)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_out"]).reshape(E * C, D)
+    return ye, dest, keep
+
+
+def _combine(ye: jax.Array, dest: jax.Array, keep: jax.Array,
+             weights: jax.Array, T: int, dtype) -> jax.Array:
+    """Weighted gather-back of expert outputs. ye [E·C, D] → y [T, D]."""
+    k = weights.shape[-1]
+    token_of = jnp.arange(T * k) // k
+    gathered = jnp.take(ye, jnp.clip(dest, 0, ye.shape[0] - 1), axis=0)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)        # dropped -> 0
+    contrib = gathered * weights.reshape(-1)[:, None].astype(gathered.dtype)
+    return jnp.zeros((T, ye.shape[1]), dtype).at[token_of].add(
+        contrib.astype(dtype))
+
+
+def _dispatch_combine(p: Params, xt: jax.Array, weights: jax.Array,
+                      idx: jax.Array, C: int, cfg: ModelConfig) -> jax.Array:
+    ye, dest, keep = _dispatch(p, xt, idx, C, cfg)
+    return _combine(ye, dest, keep, weights, xt.shape[0], xt.dtype)
+
+
+def moe_apply(p: Params, x: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (y [B, S, D], aux_loss scalar).
+
+    With ``cfg.moe_dispatch_groups = G > 1`` the token axis is split into G
+    independent dispatch groups (aligned to the data shards via the
+    ``moe_groups`` logical axis): the argsort/scatter never crosses a group,
+    capacity is enforced per group (C/G each — per-device capacity, standard
+    at scale), and only the [G, E, C/G, D] buffer moves between the
+    token-sharded and expert-sharded layouts (all-to-all).  G=1 reproduces
+    the global-dispatch reference semantics exactly.
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, k = m.n_experts, m.top_k
+    G = max(cfg.moe_dispatch_groups, 1)
+    if T % G:
+        G = 1                                     # smoke shapes: stay global
+    Tg = T // G
+    Cg = int(np.ceil(Tg * k / E * m.capacity_factor))
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.dtype(m.router_dtype)) @
+              p["router"].astype(jnp.dtype(m.router_dtype)))  # [T,E]
+    weights, idx = router_topk(logits, k)                     # [T,k]
+
+    # load-balancing auxiliary loss (Switch-style), always global
+    probs_mean = jax.nn.softmax(logits.astype(jnp.float32), -1).mean(0)  # [E]
+    frac = jnp.zeros(E, jnp.float32).at[idx.reshape(-1)].add(1.0) / (T * k)
+    aux = E * jnp.sum(frac * probs_mean)
+
+    if G == 1:
+        y = _dispatch_combine(p, xt, weights, idx, Cg, cfg)
+    else:
+        xg = logical_constraint(xt.reshape(G, Tg, D),
+                                "moe_groups", None, "act_embed")
+        wg = weights.reshape(G, Tg, k)
+        ig = idx.reshape(G, Tg, k)
+        if cfg.moe_combine_replicated:
+            # §Perf iteration 3 (kimi): the per-group combine gathers rows
+            # from the expert-sharded ye — left to the partitioner that is a
+            # masked f32 all-reduce of [Tg·k, D] per layer.  Instead,
+            # all-gather ye over the expert (model) axis ONCE (bf16, E·C·D
+            # bytes) and make the gather/scatter shard-local.
+            ye_g, dest_g, keep_g = jax.vmap(
+                lambda xi, ii: _dispatch(p, xi, ii, Cg, cfg))(xg, ig)
+            ye_g = ye_g.reshape(G, E, Cg, D)
+            ye_g = logical_constraint(ye_g, "moe_groups", None, None,
+                                      "act_embed")       # AG over model
+            ye_g = ye_g.reshape(G, E * Cg, D)
+            y = jax.vmap(lambda ye, de, ke, wi:
+                         _combine(ye, de, ke, wi, Tg, xt.dtype))(
+                ye_g, dest_g, keep_g, wg)
+            y = logical_constraint(y, "moe_groups", None, "act_embed")
+        else:
+            y = jax.vmap(lambda xi, wi, ii:
+                         _dispatch_combine(p, xi, wi, ii, Cg, cfg))(xg, wg, ig)
+            y = logical_constraint(y, "moe_groups", None, "act_embed")
+        y = y.reshape(T, D)
+
+    if m.n_shared_experts:
+        sg = xt @ p["shared_gate"]
+        su = xt @ p["shared_in"]
+        y = y + (activate(sg, su, "swiglu") @ p["shared_out"])
+
+    return y.reshape(B, S, D), aux

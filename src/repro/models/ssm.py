@@ -1,0 +1,243 @@
+"""Mamba2 blocks via SSD (state-space duality), arXiv:2405.21060.
+
+The SSD recurrence per head (scalar A per head, as in Mamba2):
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * (B_t ⊗ x_t)        h ∈ R^{N×P}
+    y_t = C_t · h_t + D * x_t
+
+Training/prefill uses the *chunked* SSD algorithm: within a chunk of length Q
+the output is a masked matmul (quadratic in Q, MXU-friendly); across chunks a
+short ``lax.scan`` carries the [N,P] state.  Decode is the O(1) recurrence.
+``repro.kernels.ssd_scan`` implements the same chunked algorithm as a Pallas
+TPU kernel; :func:`ssd_chunked` is its jnp oracle.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, SSMConfig
+from .layers import Params, normal_init, rms_norm_gated
+
+
+# ---------------------------------------------------------------------------
+# SSD core (shared with kernels/ssd_scan/ref.py)
+# ---------------------------------------------------------------------------
+def segsum(log_a: jax.Array) -> jax.Array:
+    """Lower-triangular segment sums: out[i,j] = sum_{j<t<=i} log_a[t] (j<=i).
+
+    log_a: [..., Q]; returns [..., Q, Q] with -inf above the diagonal.
+    """
+    Q = log_a.shape[-1]
+    cum = jnp.cumsum(log_a, axis=-1)                       # [..., Q]
+    diff = cum[..., :, None] - cum[..., None, :]           # sum_{j<t<=i}
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array,
+                B: jax.Array, C: jax.Array, *, chunk: int,
+                h0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x:  [b, S, H, P]   inputs per head
+    dt: [b, S, H]      positive step sizes (softplus'd)
+    A:  [H]            negative decay rates
+    B:  [b, S, G, N]   input projections (G groups, H % G == 0)
+    C:  [b, S, G, N]   output projections
+    h0: [b, H, N, P]   optional initial state
+    Returns (y [b,S,H,P], h_final [b,H,N,P]).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    if S % chunk:
+        # zero-pad the tail: dt=0 ⇒ a=1 and contribution 0, so the final
+        # state is exact; padded outputs are dropped below.
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S_pad = x.shape[1]
+    nc, Q = S_pad // chunk, chunk
+    rep = H // G
+
+    # reshape to chunks
+    xc = x.reshape(b, nc, Q, H, P)
+    dtc = dt.reshape(b, nc, Q, H)
+    Bc = B.reshape(b, nc, Q, G, N)
+    Cc = C.reshape(b, nc, Q, G, N)
+
+    log_a = dtc * A                                         # [b,nc,Q,H] (A<0)
+    seg = segsum(jnp.moveaxis(log_a, -1, -2))               # [b,nc,H,Q,Q]
+    L = jnp.exp(seg)                                        # decay matrix
+
+    Bh = jnp.repeat(Bc, rep, axis=3)                        # [b,nc,Q,H,N]
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    xdt = xc * dtc[..., None]                               # dt-weighted input
+
+    # intra-chunk (quadratic within chunk)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh,
+                        preferred_element_type=jnp.float32)
+    y_intra = jnp.einsum("bchqk,bchqk,bckhp->bcqhp", scores, L, xdt)
+
+    # chunk-final states: sum_j a(j->end) * B_j ⊗ xdt_j
+    a_end = jnp.exp(jnp.cumsum(log_a, axis=2)[:, :, -1:, :]
+                    - jnp.cumsum(log_a, axis=2))            # [b,nc,Q,H]
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchnp", Bh, a_end, xdt)
+
+    # inter-chunk recurrence over nc chunks
+    a_chunk = jnp.exp(jnp.sum(log_a, axis=2))               # [b,nc,H]
+
+    def step(h, inp):
+        a_c, s_c = inp                                      # [b,H], [b,H,N,P]
+        h_new = h * a_c[..., None, None] + s_c
+        return h_new, h
+
+    h_init = (jnp.zeros((b, H, N, P), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_last, h_prev = jax.lax.scan(
+        step, h_init,
+        (jnp.moveaxis(a_chunk, 1, 0), jnp.moveaxis(states.astype(jnp.float32), 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                     # [b,nc,H,N,P] states entering chunk
+
+    # inter-chunk contribution: C_t · (a(start->t) * h_prev)
+    a_in = jnp.exp(jnp.cumsum(log_a, axis=2))               # decay start->t inclusive
+    y_inter = jnp.einsum("bcqhn,bcqh,bchnp->bcqhp", Ch, a_in,
+                         h_prev.astype(Ch.dtype))
+    y = (y_intra + y_inter).reshape(b, S_pad, H, P)[:, :S]
+    return y.astype(x.dtype), h_last
+
+
+def ssd_decode_step(h: jax.Array, x: jax.Array, dt: jax.Array, A: jax.Array,
+                    B: jax.Array, C: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """O(1) single-token recurrence.
+
+    h: [b,H,N,P]; x: [b,H,P]; dt: [b,H]; B,C: [b,G,N].
+    Returns (y [b,H,P], h_new).
+    """
+    H = x.shape[1]
+    G = B.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=1)                          # [b,H,N]
+    Ch = jnp.repeat(C, rep, axis=1)
+    a = jnp.exp(dt * A)                                      # [b,H]
+    h_new = (h * a[..., None, None]
+             + jnp.einsum("bhn,bhp->bhnp", Bh, x * dt[..., None]))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h_new.astype(Ch.dtype))
+    return y, h_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (projections + causal conv + SSD + gated norm)
+# ---------------------------------------------------------------------------
+def mamba2_init(key, cfg: ModelConfig, n_layers: Optional[int] = None,
+                dtype=None) -> Params:
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    proj_out = 2 * di + 2 * s.n_groups * s.d_state + nh
+    lead = () if n_layers is None else (n_layers,)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": normal_init(ks[0], (*lead, d, proj_out), dtype),
+        "conv_w": normal_init(ks[1], (*lead, s.d_conv, conv_ch), dtype, std=0.1),
+        "conv_b": jnp.zeros((*lead, conv_ch), dtype),
+        "A_log": jnp.zeros((*lead, nh), jnp.float32),        # A = -exp(A_log)
+        "D": jnp.ones((*lead, nh), jnp.float32),
+        "dt_bias": jnp.zeros((*lead, nh), jnp.float32),
+        "norm_scale": jnp.zeros((*lead, di), dtype),
+        "out_proj": normal_init(ks[3], (*lead, di, d), dtype),
+    }
+
+
+def _split_proj(proj: jax.Array, cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    gN = s.n_groups * s.d_state
+    z, xbc_dt = jnp.split(proj, [di], axis=-1)
+    xbc, dt_raw = jnp.split(xbc_dt, [di + 2 * gN], axis=-1)
+    return z, xbc, dt_raw, di, nh, gN
+
+
+def mamba2_apply(p: Params, x_in: jax.Array, cfg: ModelConfig, *,
+                 conv_state: Optional[jax.Array] = None,
+                 ssm_state: Optional[jax.Array] = None,
+                 return_state: bool = False
+                 ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Mamba2 mixer. Train/prefill: states None. Decode: x_in [B,1,D] + states.
+
+    conv_state: [B, d_conv-1, conv_ch]; ssm_state: [B, H, N, P].
+    ``return_state=True`` (prefill) also returns the exact post-sequence
+    states so decode continues where the prompt left off.
+    Returns (out [B,S,D], new states or None).
+    """
+    s = cfg.ssm
+    B_, S, _ = x_in.shape
+    proj = x_in @ p["in_proj"]
+    z, xbc, dt_raw, di, nh, gN = _split_proj(proj, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    decode = conv_state is not None
+    if decode:
+        # causal depthwise conv via state buffer
+        window = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+        conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                              p["conv_w"].astype(jnp.float32))
+        xbc = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))[:, None]
+        new_conv_state = window[:, 1:]
+    else:
+        xbc_raw = xbc
+        pad = jnp.zeros((B_, s.d_conv - 1, xbc.shape[-1]), xbc.dtype)
+        seq = jnp.concatenate([pad, xbc], axis=1)
+        # depthwise causal conv: output[t] = sum_w w[w]*seq[t+w]
+        windows = jnp.stack([seq[:, i:i + S] for i in range(s.d_conv)], axis=2)
+        conv_out = jnp.einsum("bswc,wc->bsc", windows.astype(jnp.float32),
+                              p["conv_w"].astype(jnp.float32))
+        xbc = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+        # exact conv state for decode handoff: last d_conv-1 raw inputs
+        new_conv_state = xbc_raw[:, S - (s.d_conv - 1):] if return_state else None
+
+    xbc = xbc.astype(x_in.dtype)
+    xs, Bmat, Cmat = jnp.split(xbc, [di, di + gN], axis=-1)
+    P_ = s.head_dim
+    xh = xs.reshape(B_, -1, nh, P_)
+    Bh = Bmat.reshape(B_, -1, s.n_groups, s.d_state)
+    Ch = Cmat.reshape(B_, -1, s.n_groups, s.d_state)
+
+    if decode:
+        y, h_new = ssd_decode_step(ssm_state, xh[:, 0], dt[:, 0], A,
+                                   Bh[:, 0], Ch[:, 0])
+        y = y[:, None]                                       # [B,1,H,P]
+        new_states = (new_conv_state, h_new)
+    else:
+        y, h_last = ssd_chunked(xh, dt, A, Bh, Ch, chunk=min(s.chunk, S))
+        new_states = (new_conv_state, h_last) if return_state else None
+
+    y = y + xh[:, :y.shape[1]] * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B_, -1, di)
+    y = rms_norm_gated(y, z[:, :y.shape[1]], p["norm_scale"], cfg.rms_eps)
+    out = y @ p["out_proj"]
+    return out, new_states
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, n_layers: Optional[int] = None,
+                   dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    lead = () if n_layers is None else (n_layers,)
+    conv_state = jnp.zeros((*lead, batch, s.d_conv - 1, conv_ch),
+                           jnp.dtype(cfg.compute_dtype))
+    ssm_state = jnp.zeros((*lead, batch, nh, s.d_state, s.head_dim), dtype)
+    return conv_state, ssm_state

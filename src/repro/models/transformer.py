@@ -1,0 +1,312 @@
+"""Decoder-only and encoder-decoder transformer assembly.
+
+Layers are *stacked* (every layer param has a leading ``n_layers`` dim) and
+executed with ``jax.lax.scan`` — constant-size HLO regardless of depth, which
+keeps 80-layer dry-run compiles tractable and gives remat a natural
+per-layer boundary.  Heterogeneous attention patterns (gemma3's 5:1
+local:global) ride the scan as a per-layer ``window`` xs input, so one block
+body serves all layer kinds.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import logical_constraint
+from .attention import attn_apply, attn_init, init_kv_cache, project_memory
+from .config import ModelConfig
+from .layers import (Params, cross_entropy_loss, embed_apply, embed_init,
+                     mlp_apply, mlp_init, normal_init, rms_norm, unembed_apply)
+from .moe import moe_apply, moe_init
+
+
+def window_schedule(cfg: ModelConfig, n_layers: Optional[int] = None) -> np.ndarray:
+    """Per-layer sliding window (0 = global attention)."""
+    L = n_layers if n_layers is not None else cfg.n_layers
+    if cfg.global_every and cfg.global_every > 0:
+        w = np.full(L, cfg.local_window, np.int32)
+        w[cfg.global_every - 1::cfg.global_every] = 0   # every k-th layer global
+        return w
+    return np.zeros(L, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _layer_init(key, cfg: ModelConfig, n_layers: int, *, cross: bool) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "attn": attn_init(ks[0], cfg, n_layers),
+        "norm1": jnp.zeros((n_layers, cfg.d_model), dtype),
+        "norm2": jnp.zeros((n_layers, cfg.d_model), dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_init(ks[1], cfg, n_layers)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype, n_layers)
+    if cross:
+        p["cross"] = attn_init(ks[2], cfg, n_layers)
+        p["norm_cross"] = jnp.zeros((n_layers, cfg.d_model), dtype)
+    return p
+
+
+def decoder_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p: Params = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "layers": _layer_init(ks[1], cfg, cfg.n_layers, cross=cfg.is_encdec),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = {"table": normal_init(ks[3], (cfg.vocab, cfg.d_model), dtype)}
+    if cfg.is_encdec:
+        enc_cfg = cfg  # same width; encoder is bidirectional
+        p["enc_layers"] = _layer_init(ks[2], enc_cfg, cfg.encoder_layers, cross=False)
+        p["enc_final_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _ffn(p: Params, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    if cfg.family == "moe":
+        y, aux = moe_apply(p["moe"], x, cfg)
+        return y, aux
+    return mlp_apply(p["mlp"], x, cfg.act), jnp.zeros((), jnp.float32)
+
+
+def _block(p: Params, x: jax.Array, cfg: ModelConfig, *, positions, window,
+           memory=None, cache=None, cache_pos=None, causal=True):
+    """Pre-norm transformer block; returns (x, aux, new_cache)."""
+    h, new_self = attn_apply(p["attn"], rms_norm(x, p["norm1"], cfg.rms_eps),
+                             cfg, positions=positions, window=window,
+                             cache=None if cache is None else cache[0],
+                             cache_pos=cache_pos, causal=causal)
+    x = x + h
+    new_cross = None
+    if "cross" in p:
+        h, new_cross = attn_apply(
+            p["cross"], rms_norm(x, p["norm_cross"], cfg.rms_eps), cfg,
+            positions=positions, memory=memory, is_cross=True,
+            cache=None if cache is None else cache[1])
+        x = x + h
+    h, aux = _ffn(p, rms_norm(x, p["norm2"], cfg.rms_eps), cfg)
+    x = x + h
+    x = logical_constraint(x, "batch", "seq", "act_embed")
+    new_cache = None if cache is None else (new_self, new_cross)
+    return x, aux, new_cache
+
+
+def _scan_blocks(params_layers: Params, x: jax.Array, cfg: ModelConfig, *,
+                 windows: jax.Array, positions, memory=None, causal=True
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence pass (train / prefill without cache).
+
+    A uniform window schedule is passed statically (not as a scan xs), which
+    lets the Pallas flash-attention kernel engage under ``use_pallas`` and
+    removes the traced-window mask select for all-global archs.
+    """
+    ws = np.asarray(windows)
+    static_window = int(ws[0]) if ws.size and (ws == ws[0]).all() else None
+
+    def body(carry, xs):
+        x, aux = carry
+        if static_window is None:
+            layer_p, window = xs
+        else:
+            layer_p, window = xs, static_window
+        x, a, _ = _block(layer_p, x, cfg, positions=positions, window=window,
+                         memory=memory, causal=causal)
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    xs = (params_layers if static_window is not None
+          else (params_layers, jnp.asarray(windows)))
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, aux
+
+
+def _scan_blocks_cached(params_layers: Params, x: jax.Array, cfg: ModelConfig, *,
+                        windows: jax.Array, positions, caches, cache_pos,
+                        memory=None) -> Tuple[jax.Array, Any]:
+    """Single-token decode pass: caches ride the scan as xs/ys."""
+
+    def body(x, xs):
+        layer_p, window, cache = xs
+        x, _, new_cache = _block(layer_p, x, cfg, positions=positions,
+                                 window=window, memory=memory, cache=cache,
+                                 cache_pos=cache_pos)
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params_layers, jnp.asarray(windows), caches))
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# full model passes
+# ---------------------------------------------------------------------------
+def _input_embeds(params: Params, cfg: ModelConfig, tokens: Optional[jax.Array],
+                  embeds: Optional[jax.Array]) -> jax.Array:
+    """Token embeddings, optionally with frontend-stub embeddings prepended."""
+    parts = []
+    if embeds is not None:
+        parts.append(embeds.astype(jnp.dtype(cfg.compute_dtype)))
+    if tokens is not None:
+        parts.append(embed_apply(params["embed"], tokens)
+                     .astype(jnp.dtype(cfg.compute_dtype)))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return logical_constraint(x, "batch", "seq", "act_embed")
+
+
+def encode(params: Params, cfg: ModelConfig, enc_embeds: jax.Array) -> jax.Array:
+    """Bidirectional encoder over frontend embeddings (enc-dec archs)."""
+    x = logical_constraint(enc_embeds.astype(jnp.dtype(cfg.compute_dtype)),
+                           "batch", "seq", "act_embed")
+    S = x.shape[1]
+    x, _ = _scan_blocks(params["enc_layers"], x, cfg,
+                        windows=np.zeros(cfg.encoder_layers, np.int32),
+                        positions=jnp.arange(S, dtype=jnp.int32), causal=False)
+    return rms_norm(x, params["enc_final_norm"], cfg.rms_eps)
+
+
+def forward(params: Params, cfg: ModelConfig, *, tokens: Optional[jax.Array] = None,
+            embeds: Optional[jax.Array] = None,
+            enc_embeds: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward → (logits [B,S,V], moe_aux)."""
+    memory = None
+    if cfg.is_encdec:
+        assert enc_embeds is not None, "enc-dec arch needs encoder inputs"
+        memory = encode(params, cfg, enc_embeds)
+    x = _input_embeds(params, cfg, tokens, embeds)
+    S = x.shape[1]
+    x, aux = _scan_blocks(params["layers"], x, cfg,
+                          windows=window_schedule(cfg),
+                          positions=jnp.arange(S, dtype=jnp.int32),
+                          memory=memory)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    table = params.get("unembed", params["embed"])
+    logits = unembed_apply(table, x, cfg.logit_softcap)
+    logits = logical_constraint(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token CE (+ MoE aux). batch: tokens/labels (+embeds/enc_embeds)."""
+    logits, aux = forward(params, cfg, tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"),
+                          enc_embeds=batch.get("enc_embeds"))
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if logits.shape[1] != labels.shape[1]:      # frontend prefix: trim to text
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    ce = cross_entropy_loss(logits, labels, mask)
+    total = ce + 0.01 * aux
+    return total, {"ce": ce, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+def make_cache(params: Params, cfg: ModelConfig, batch: int, max_len: int,
+               memory: Optional[jax.Array] = None):
+    """Cache pytree: per-layer (self (k,v), cross (k,v) or None), stacked on L."""
+    self_kv = init_kv_cache(cfg, batch, max_len, cfg.n_layers)
+    self_kv = tuple(logical_constraint(c, "layers", "batch", "kv_seq", "kv", "head")
+                    for c in self_kv)
+    if not cfg.is_encdec:
+        return (self_kv, None)
+    assert memory is not None
+    proj = jax.vmap(lambda lp: project_memory(lp, memory, cfg))(params["layers"]["cross"])
+    return (self_kv, proj)
+
+
+def prefill(params: Params, cfg: ModelConfig, *, tokens=None, embeds=None,
+            enc_embeds=None, cache_len: Optional[int] = None):
+    """Run the full prompt, build the KV cache, return (last_logits, cache, pos).
+
+    The prompt K/V are produced by re-running projections into the cache via a
+    scan pass; for simplicity and HLO economy we compute the forward once and
+    fill the cache with a vmapped projection pass (cheap relative to attention).
+    """
+    memory = encode(params, cfg, enc_embeds) if cfg.is_encdec else None
+    x = _input_embeds(params, cfg, tokens, embeds)
+    B, S, _ = x.shape
+    max_len = cache_len or S
+    positions = jnp.arange(S, dtype=jnp.int32)
+    windows = window_schedule(cfg)
+
+    # forward pass capturing per-layer K/V into the cache
+    k0, v0 = init_kv_cache(cfg, B, max_len)     # single-layer template
+
+    def body(carry, xs):
+        x, = carry
+        layer_p, window = xs
+        # recompute K/V for the cache (same math as inside attn_apply)
+        normed = rms_norm(x, layer_p["norm1"], cfg.rms_eps)
+        from .attention import apply_rope  # local import to avoid cycle noise
+        kproj = (normed @ layer_p["attn"]["wk"] + layer_p["attn"].get("bk", 0)
+                 ).reshape(B, S, cfg.n_kv, cfg.head_dim)
+        kproj = apply_rope(kproj, positions, cfg.rope_theta)
+        vproj = (normed @ layer_p["attn"]["wv"] + layer_p["attn"].get("bv", 0)
+                 ).reshape(B, S, cfg.n_kv, cfg.head_dim)
+        ck = jax.lax.dynamic_update_slice(k0, kproj.astype(k0.dtype), (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(v0, vproj.astype(v0.dtype), (0, 0, 0, 0))
+        x, _, _ = _block(layer_p, x, cfg, positions=positions, window=window,
+                         memory=memory)
+        return (x,), (ck, cv)
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    (x,), self_kv = jax.lax.scan(body_fn, (x,),
+                                 (params["layers"], jnp.asarray(windows)))
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    table = params.get("unembed", params["embed"])
+    logits = unembed_apply(table, x[:, -1:], cfg.logit_softcap)
+
+    cross = None
+    if cfg.is_encdec:
+        cross = jax.vmap(lambda lp: project_memory(lp, memory, cfg))(
+            params["layers"]["cross"])
+    cache = (self_kv, cross)
+    return logits, cache, jnp.asarray(S, jnp.int32)
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
+                cache, pos: jax.Array):
+    """One token step. token [B,1] int32; pos scalar int32 (cache fill count)."""
+    x = embed_apply(params["embed"], token).astype(jnp.dtype(cfg.compute_dtype))
+    self_kv, cross = cache
+    positions = pos[None] if pos.ndim == 0 else pos
+
+    def body(x, xs):
+        layer_p, window, self_c, cross_c = xs
+        x, _, new_cache = _block(layer_p, x, cfg, positions=positions,
+                                 window=window, cache=(self_c, cross_c),
+                                 cache_pos=pos)
+        return x, new_cache
+
+    windows = jnp.asarray(window_schedule(cfg))
+    if cross is not None:
+        x, (new_self, new_cross) = jax.lax.scan(
+            body, x, (params["layers"], windows, self_kv, cross))
+    else:
+        def body2(x, xs):
+            layer_p, window, self_c = xs
+            x, _, new_cache = _block(layer_p, x, cfg, positions=positions,
+                                     window=window, cache=(self_c, None),
+                                     cache_pos=pos)
+            return x, new_cache[0]
+        x, new_self = jax.lax.scan(body2, x, (params["layers"], windows, self_kv))
+        new_cross = None
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    table = params.get("unembed", params["embed"])
+    logits = unembed_apply(table, x, cfg.logit_softcap)
+    return logits, (new_self, new_cross)

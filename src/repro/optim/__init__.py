@@ -1,0 +1,2 @@
+from .adamw import AdamW, AdamWConfig
+from .schedule import cosine_warmup

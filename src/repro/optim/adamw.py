@@ -1,0 +1,106 @@
+"""Sharded AdamW with selectable moment precision (fp32 / bf16 / int8).
+
+Moments inherit the parameter sharding (ZeRO-style when params are FSDP-
+sharded), so optimizer memory scales down with the mesh.  For the
+trillion-parameter cell (kimi-k2) fp32 moments alone would blow the 16 GB/chip
+HBM budget at 512 chips; ``state_dtype="bfloat16"`` or ``"int8"`` (blockwise
+scales via ``repro.core.compression``, bitsandbytes-style) brings the
+optimizer term under budget — the tradeoff is recorded in DESIGN.md and
+EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import compression as comp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: Any = 3e-4                  # float or callable(step) -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"    # float32 | bfloat16 | int8
+
+
+class _QMoment(NamedTuple):
+    q: jax.Array
+    scale: jax.Array
+    shape: Tuple[int, ...]
+
+
+def _encode(x: jax.Array, dtype: str):
+    if dtype == "int8":
+        c = comp.compress(x)
+        return _QMoment(c.q, c.scale, x.shape)
+    return x.astype(jnp.dtype(dtype))
+
+
+def _decode(m, dtype: str) -> jax.Array:
+    if dtype == "int8":
+        return comp.decompress(comp.Compressed(m.q, m.scale), m.shape)
+    return m.astype(jnp.float32)
+
+
+class AdamW:
+    def __init__(self, cfg: AdamWConfig) -> None:
+        self.cfg = cfg
+
+    def init(self, params: Any) -> Dict[str, Any]:
+        z = jax.tree.map(
+            lambda p: _encode(jnp.zeros(p.shape, jnp.float32), self.cfg.state_dtype),
+            params)
+        z2 = jax.tree.map(
+            lambda p: _encode(jnp.zeros(p.shape, jnp.float32), self.cfg.state_dtype),
+            params)
+        return {"mu": z, "nu": z2, "count": jnp.zeros((), jnp.int32)}
+
+    def _lr(self, step):
+        return self.cfg.lr(step) if callable(self.cfg.lr) else self.cfg.lr
+
+    def update(self, grads: Any, state: Dict[str, Any], params: Any
+               ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+        cfg = self.cfg
+        count = state["count"] + 1
+        gflat = jax.tree.leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in gflat))
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+            if cfg.clip_norm > 0 else 1.0
+        lr = self._lr(count)
+        b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+        b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+        is_q = lambda x: isinstance(x, _QMoment)
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32) * scale
+            m = cfg.b1 * _decode(mu, cfg.state_dtype) + (1 - cfg.b1) * g
+            v = cfg.b2 * _decode(nu, cfg.state_dtype) + (1 - cfg.b2) * g * g
+            mhat = m / b1c
+            vhat = v / b2c
+            step_dir = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            p32 = p.astype(jnp.float32)
+            new_p = p32 - lr * (step_dir + cfg.weight_decay * p32)
+            return (new_p.astype(p.dtype),
+                    _encode(m, cfg.state_dtype),
+                    _encode(v, cfg.state_dtype))
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["mu"], is_leaf=is_q)
+        flat_v = jax.tree.leaves(state["nu"], is_leaf=is_q)
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_mu = jax.tree.unflatten(tdef, [o[1] for o in out])
+        new_nu = jax.tree.unflatten(tdef, [o[2] for o in out])
+        return new_params, {"mu": new_mu, "nu": new_nu, "count": count}, \
+            {"grad_norm": gnorm, "lr": jnp.asarray(lr)}

@@ -1,0 +1,2 @@
+from .sharding import (AxisRules, axis_rules, current_rules, logical_constraint,
+                       logical_sharding, shard_params_like)

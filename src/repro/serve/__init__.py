@@ -1,0 +1,3 @@
+from .engine import ServeConfig, ServeEngine, Request, Result
+
+__all__ = ["ServeConfig", "ServeEngine", "Request", "Result"]

@@ -1,0 +1,3 @@
+from .specs import batch_names, cache_names, param_names
+from .steps import (default_rules, make_serve_prefill, make_serve_step,
+                    make_train_step)

@@ -1,0 +1,109 @@
+"""Logical-axis name trees for params / batches / caches.
+
+Names are resolved per-leaf from the parameter's dict key (the trailing
+dims) plus as many leading ``layers`` dims as the leaf's rank requires —
+this covers stacked layers [L, ...], hybrid groups [G, k, ...] and
+unstacked shared blocks uniformly.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+# trailing-dim logical names per parameter key; rank disambiguates overloads
+_TRAILING: Dict[str, Tuple[Tuple[Optional[str], ...], ...]] = {
+    "table": (("vocab", "embed"),),
+    "wq": (("embed", "heads"),),
+    "wk": (("embed", "kv"),),
+    "wv": (("embed", "kv"),),
+    "wo": (("heads", "embed"),),
+    "bq": (("heads",),),
+    "bk": (("kv",),),
+    "bv": (("kv",),),
+    "w_in": (("embed", "ff"), ("expert", "embed", "ff")),
+    "w_gate": (("embed", "ff"), ("expert", "embed", "ff")),
+    "w_out": (("ff", "embed"), ("expert", "ff", "embed")),
+    "router": (("embed", "expert"),),
+    "shared_gate": (("embed", "ff"),),
+    "shared_in": (("embed", "ff"),),
+    "shared_out": (("ff", "embed"),),
+    "in_proj": (("embed", "ssm_proj"),),
+    "conv_w": ((None, "ssm_ch"),),
+    "conv_b": (("ssm_ch",),),
+    "A_log": (("ssm_heads",),),
+    "D": (("ssm_heads",),),
+    "dt_bias": (("ssm_heads",),),
+    "norm_scale": (("ssm_inner",),),
+    "out_proj": (("ssm_inner", "embed"),),
+    "norm1": (("embed",),),
+    "norm2": (("embed",),),
+    "norm_cross": (("embed",),),
+    "final_norm": (("embed",),),
+    "enc_final_norm": (("embed",),),
+    "norms": (("embed",),),
+    "mamba_norm": (("embed",),),
+}
+
+
+def _leaf_names(path, leaf) -> Tuple[Optional[str], ...]:
+    key = None
+    for p in reversed(path):
+        if isinstance(p, jax.tree_util.DictKey):
+            key = p.key
+            break
+    rank = len(leaf.shape)
+    # longest trailing-name candidate that fits this leaf's rank
+    fits = [c for c in _TRAILING.get(key, ((),)) if len(c) <= rank]
+    if not fits:
+        return (None,) * rank
+    best = max(fits, key=len)
+    return ("layers",) * (rank - len(best)) + tuple(best)
+
+
+def param_names(params: Any) -> Any:
+    """Mirror tree of logical-name tuples for a params pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    names = [_leaf_names(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, names)
+
+
+_BATCH_NAMES = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "mask": ("batch", "seq"),
+    "embeds": ("batch", "seq", "embed"),
+    "enc_embeds": ("batch", "seq", "embed"),
+    "token": ("batch", None),
+}
+
+
+def batch_names(batch: Any) -> Any:
+    return {k: _BATCH_NAMES.get(k, (None,) * len(v.shape))
+            for k, v in batch.items()}
+
+
+_CACHE_KEY_NAMES = {
+    "conv": ("batch", None, "ssm_ch"),
+    "ssm": ("batch", "ssm_heads", None, None),
+    "attn_k": ("batch", "kv_seq", "kv_heads", "head"),
+    "attn_v": ("batch", "kv_seq", "kv_heads", "head"),
+}
+
+
+def cache_names(cache: Any) -> Any:
+    """Name tree for serve caches (transformer tuples or ssm/hybrid dicts)."""
+
+    def kv_leaf(leaf):
+        rank = len(leaf.shape)
+        tail = ("batch", "kv_seq", "kv_heads", "head")
+        return ("layers",) * (rank - len(tail)) + tail
+
+    if isinstance(cache, dict):
+        out = {}
+        for k, v in cache.items():
+            tail = _CACHE_KEY_NAMES[k]
+            out[k] = jax.tree.map(
+                lambda leaf: ("layers",) * (len(leaf.shape) - len(tail)) + tail, v)
+        return out
+    return jax.tree.map(kv_leaf, cache)

@@ -1,0 +1,215 @@
+"""Distributed train / serve step builders (the pjit path).
+
+``default_rules`` is the shipping sharding policy: activations batch-sharded
+over (pod, data); parameters tensor-parallel over ``model`` on their
+heads/ff/expert/vocab dims and FSDP over ``data`` on the embed dim; KV caches
+sequence-sharded over ``data`` for long-context decode.  All rules degrade
+per-tensor via the divisibility fallback in ``parallel.sharding``, which is
+what lets a single policy compile every assigned arch × mesh cell; per-cell
+overrides are the §Perf hillclimb levers.
+
+Comm-mode vocabulary (ties back to the paper):
+* the pool runtime (repro.core) realizes the *host-mediated* topology — the
+  OpenMP restriction the paper works under;
+* this pjit path is the *direct* mode (XLA collectives over ICI), the paper's
+  stated future work, and the one the dry-run/roofline measures.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model
+from ..optim import AdamW
+from ..parallel.sharding import (AxisRules, axis_rules, logical_sharding,
+                                 spec_for)
+from .specs import batch_names, cache_names, param_names
+
+
+def default_rules() -> AxisRules:
+    return AxisRules.of(
+        batch=("pod", "data"),
+        seq=None,
+        embed="data",            # FSDP: param embed dims shard over data
+        vocab="model",
+        heads="model", kv="model", head=None,
+        ff="model", expert="model",
+        ssm_proj="model", ssm_ch="model", ssm_heads="model", ssm_inner="model",
+        kv_seq="data",           # sequence-sharded KV cache (flash-decode)
+        kv_heads=None,
+        layers=None,
+        act_embed=None,          # activation d_model dim (sp variant: model)
+        moe_groups="data",       # grouped-local MoE dispatch (moe-ep2)
+    )
+
+
+def rules_variant(name: str) -> AxisRules:
+    """Named sharding-policy variants — the §Perf hillclimb levers.
+
+    default      shipping policy (FSDP over data + TP over model + EP)
+    dp-only      paper-faithful pure data parallelism: params replicated,
+                 the gradient exchange is the only collective (what the
+                 paper's one-target-region-per-device trainer implies)
+    tp-heavy     no FSDP; all parameter sharding on the model axis
+    seq-model    long-context: activations sequence-sharded over model
+    kv-model     decode: KV-cache sequence axis on the model axis (wider
+                 flash-decode partial-softmax) instead of data
+    zero-all     FSDP over BOTH mesh axes — param/opt memory floor
+    """
+    base = default_rules()
+    if name == "default":
+        return base
+    if name == "dp-only":
+        return AxisRules.of(batch=("pod", "data"), kv_seq="data")
+    if name == "tp-heavy":
+        return base.replace(embed=None)
+    if name == "seq-model":
+        return base.replace(seq="model", embed="data")
+    if name == "kv-model":
+        # flash-decode: cache sequence axis on `model` (batch keeps `data`),
+        # softmax partials psum-combined by the SPMD partitioner
+        return base.replace(kv_seq="model")
+    if name == "zero-all":
+        return base.replace(embed=("data", "model"), ff=None, heads=None,
+                            kv=None, vocab=None)
+    if name == "fsdp":
+        # pure ZeRO-3: params fully sharded over all 256/512 chips on their
+        # embed dim; activations batch-sharded over the WHOLE mesh (1 seq
+        # per chip at global_batch=256 on a pod); no tensor parallelism →
+        # the only collectives are per-layer param all-gathers + grad
+        # reduce-scatters.  Works when global_batch % chips == 0.
+        return AxisRules.of(
+            batch=("pod", "data", "model"),
+            embed=("data", "model"),
+            vocab=None, heads=None, kv=None, head=None, ff=None,
+            expert=None,
+            ssm_proj=None, ssm_ch=None, ssm_heads=None, ssm_inner=None,
+            kv_seq="model", kv_heads=None, layers=None)
+    if name == "sp":
+        # default TP/FSDP + sequence-style activation sharding: the residual
+        # stream's embed dim rides the model axis between blocks, cutting
+        # the scan-carried remat buffer ~model×.
+        return base.replace(act_embed="model")
+    if name == "moe-ep":
+        # expert-parallel dispatch: token buffers pinned expert-sharded on
+        # `model` (moe_apply constraints; cfg.moe_shard_dispatch=True set by
+        # the dry-run's CFG_OVERRIDES) — rules themselves are the default.
+        return base
+    if name == "padvocab":
+        # vocab padded to a 256 multiple (dry-run CFG_OVERRIDES) so the
+        # vocab/unembed dims clear the divisibility fallback and shard.
+        return base
+    if name == "moe-ep2":
+        # grouped-local dispatch (cfg.moe_dispatch_groups=16): shard-local
+        # argsort/scatter, per-group capacity, a2a buffer exchange.
+        return base
+    if name == "moe-ep3":
+        # + replicate expert outputs (bf16 AG) before the local combine.
+        return base
+    if name in ("moe-ep4", "moe-ep4x32"):
+        # + drop dense-side TP (attention runs data-parallel; params FSDP
+        # over data) — removes the per-layer activation all-reduces.
+        # (x32: dispatch groups match the multi-pod pod×data=32 batch shards)
+        return base.replace(heads=None, kv=None, vocab=None)
+    raise KeyError(f"unknown rules variant {name!r}")
+
+
+def auto_policy(cfg, kind: str, global_batch: int, chips: int) -> str:
+    """Per-cell policy selection distilled from the §Perf hillclimb:
+
+    * decode               → ``kv-model``  (flash-decode cache sharding)
+    * params < ~1 GB bf16  → ``dp-only``   (sharding sub-GB models only
+                                            buys resharding traffic)
+    * MoE                  → ``moe-ep4``   (grouped-local dispatch + local
+                                            combine, no dense TP)
+    * train, batch % chips == 0 → ``fsdp`` (pure ZeRO-3, no TP — the
+                                            compute-bound winner)
+    * otherwise            → ``zero-all``  (ZeRO params, DP activations)
+    """
+    from ..models.config import param_count
+    total, _ = param_count(cfg)
+    if kind == "decode":
+        return "kv-model"
+    if total * 2 < 1e9:
+        return "dp-only"
+    if cfg.family == "moe":
+        return "moe-ep4"
+    if kind == "train" and global_batch % chips == 0:
+        return "fsdp"
+    return "zero-all"
+
+
+def _shardings_for(tree: Any, names: Any, rules: AxisRules, mesh) -> Any:
+    def one(leaf, names_leaf):
+        if names_leaf is None or not hasattr(leaf, "shape"):
+            return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        return logical_sharding(leaf.shape, names_leaf, rules, mesh)
+
+    return jax.tree.map(one, tree, names,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def opt_state_shardings(params_shardings: Any, mesh):
+    """Moments mirror the parameter shardings (ZeRO); the counter replicates."""
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    return {"mu": params_shardings, "nu": params_shardings, "count": rep}
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+def make_train_step(model: Model, optimizer: AdamW, *, microbatches: int = 1
+                    ) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                loss_a, grads_a = carry
+                loss, metrics, grads = grads_of(params, mb)
+                return (loss_a + loss / microbatches,
+                        jax.tree.map(lambda a, g: a + g / microbatches,
+                                     grads_a, grads)), metrics
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), metrics = jax.lax.scan(
+                acc_fn, (jnp.zeros((), jnp.float32), zero), micro)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+        new_params, new_state, opt_metrics = optimizer.update(
+            grads, opt_state, params)
+        return new_params, new_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+def make_serve_prefill(model: Model) -> Callable:
+    def prefill_step(params, batch):
+        logits, cache, pos = model.prefill(params, batch)
+        return logits, cache, pos
+    return prefill_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    def serve_step(params, token, cache, pos):
+        logits, new_cache = model.decode_step(params, token, cache, pos)
+        return logits, new_cache
+    return serve_step

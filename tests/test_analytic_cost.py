@@ -1,0 +1,136 @@
+"""Validation of the analytic roofline cost model against XLA.
+
+Strategy: XLA's HloCostAnalysis is exact when no loop runs more than once,
+so we compare the analytic model against XLA on L=1 configs with dense
+attention and single-chunk SSD (every while trips once).  We also pin the
+undercount bug itself, so a future XLA fix is noticed.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import get_smoke_config, smoke_batch
+from repro.launch.analytic_cost import forward_flops, step_cost
+from repro.models.model import Model
+
+
+def _xla_flops(fn, *args) -> float:
+    comp = jax.jit(fn).lower(*args).compile()
+    ca = comp.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0))
+
+
+def _fwd_flops_xla(cfg, B=2, S=64):
+    model = Model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    batch = jax.eval_shape(lambda: smoke_batch(cfg, batch=B, seq=S))
+    batch.pop("labels", None)
+    return _xla_flops(lambda p, b: model.forward(p, b), params, batch)
+
+
+def test_xla_undercounts_scan():
+    """Pin the motivating bug: 4× more scanned layers ≠ 4× reported flops.
+    If this starts failing, XLA fixed trip-count handling and the analytic
+    model can be cross-checked at full depth."""
+    base = get_smoke_config("minitron-4b").replace(remat="none",
+                                                   attn_impl="dense")
+    f2 = _fwd_flops_xla(base.replace(n_layers=2))
+    f8 = _fwd_flops_xla(base.replace(n_layers=8))
+    assert f8 < 2.0 * f2, (f2, f8)
+
+
+@pytest.mark.parametrize("arch", ["minitron-4b", "qwen2-72b"])
+def test_forward_flops_match_xla_dense(arch):
+    cfg = get_smoke_config(arch).replace(n_layers=1, remat="none",
+                                         attn_impl="dense")
+    B, S = 2, 64
+    got = forward_flops(cfg, B, S)
+    want = _fwd_flops_xla(cfg, B, S)
+    assert 0.75 * want < got < 1.35 * want, (got, want)
+
+
+def test_forward_flops_match_xla_moe():
+    cfg = get_smoke_config("moonshot-v1-16b-a3b").replace(
+        n_layers=1, remat="none", attn_impl="dense")
+    B, S = 2, 64
+    got = forward_flops(cfg, B, S)
+    want = _fwd_flops_xla(cfg, B, S)
+    assert 0.6 * want < got < 1.6 * want, (got, want)
+
+
+def test_forward_flops_match_xla_ssm():
+    cfg = get_smoke_config("mamba2-130m").replace(n_layers=1, remat="none")
+    cfg = cfg.replace(ssm=cfg.ssm.__class__(
+        d_state=cfg.ssm.d_state, d_conv=cfg.ssm.d_conv, expand=cfg.ssm.expand,
+        head_dim=cfg.ssm.head_dim, n_groups=cfg.ssm.n_groups, chunk=64))
+    B, S = 2, 64                                   # single chunk: trip 1
+    got = forward_flops(cfg, B, S)
+    want = _fwd_flops_xla(cfg, B, S)
+    assert 0.5 * want < got < 1.6 * want, (got, want)
+
+
+def test_train_flops_match_xla():
+    from repro.optim import AdamW, AdamWConfig
+    from repro.train.steps import make_train_step
+    cfg = get_smoke_config("minitron-4b").replace(n_layers=1, remat="none",
+                                                  attn_impl="dense")
+    model = Model(cfg)
+    B, S = 2, 64
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    batch = jax.eval_shape(lambda: smoke_batch(cfg, batch=B, seq=S))
+    opt = AdamW(AdamWConfig())
+    ostate = jax.eval_shape(opt.init, params)
+    want = _xla_flops(make_train_step(model, opt), params, ostate, batch)
+    got = step_cost(cfg, "train", S, B).flops
+    assert 0.6 * want < got < 1.5 * want, (got, want)
+
+
+def test_train_bytes_same_order_as_xla():
+    """Bytes are an accounting model, not an HLO count — same order only."""
+    cfg = get_smoke_config("minitron-4b").replace(n_layers=1, remat="none",
+                                                  attn_impl="dense")
+    from repro.optim import AdamW, AdamWConfig
+    from repro.train.steps import make_train_step
+    model = Model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    batch = jax.eval_shape(lambda: smoke_batch(cfg, batch=2, seq=64))
+    opt = AdamW(AdamWConfig())
+    ostate = jax.eval_shape(opt.init, params)
+    comp = jax.jit(make_train_step(model, opt)).lower(
+        params, ostate, batch).compile()
+    ca = comp.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    want = float(ca.get("bytes accessed", 0.0))
+    got = step_cost(cfg, "train", 64, 2).hbm_bytes
+    assert 0.1 * want < got < 10 * want, (got, want)
+
+
+def test_decode_cost_scaling_properties():
+    """Decode: flops ~ active params; bytes dominated by the KV cache and
+    growing linearly with cache length (the decode memory wall)."""
+    cfg = get_smoke_config("qwen2-72b")
+    c1 = step_cost(cfg, "decode", 1024, 8)
+    c2 = step_cost(cfg, "decode", 4096, 8)
+    assert c2.hbm_bytes > 2.5 * c1.hbm_bytes       # cache-linear
+    from repro.models.config import param_count
+    total, active = param_count(cfg)
+    assert c1.flops > 2 * active * 8               # ≥ 2·N·B matmul floor
+
+
+def test_ssm_decode_cache_constant():
+    cfg = get_smoke_config("mamba2-130m")
+    c1 = step_cost(cfg, "decode", 1024, 8)
+    c2 = step_cost(cfg, "decode", 1 << 19, 8)
+    assert abs(c1.hbm_bytes - c2.hbm_bytes) / c1.hbm_bytes < 1e-6
+
+
+def test_train_flops_scale_with_layers_and_tokens():
+    cfg = get_smoke_config("gemma-7b").replace(remat="none")
+    f1 = step_cost(cfg, "train", 64, 2).flops
+    f2 = step_cost(cfg.replace(n_layers=2 * cfg.n_layers), "train", 64, 2).flops
+    f3 = step_cost(cfg, "train", 128, 2).flops
+    assert f2 > 1.5 * f1                           # layers ↑ ⇒ flops ↑
+    assert 1.8 * f1 < f3 < 2.6 * f1                # tokens ×2 ⇒ ≈ ×2 (+attn)

@@ -1,0 +1,47 @@
+"""Dry-run machinery integration: lower+compile a real cell in a subprocess
+with forced host devices (the deliverable-e path, scaled to 8 devices)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json
+sys.path.insert(0, r"%(repo)s/src")
+import jax
+import numpy as np
+from repro.launch.dryrun import lower_cell
+from repro.train.steps import rules_variant
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rec = lower_cell("mamba2-130m", "long_500k", mesh, "test8", rules_variant("default"))
+print("JSON" + json.dumps({k: rec[k] for k in
+    ("hlo_flops", "hlo_bytes", "collective_bytes", "bottleneck", "chips",
+     "kind", "compile_s")}))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_cell_compiles_on_8_fake_devices(tmp_path):
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT % {"repo": REPO}],
+        capture_output=True, text=True, timeout=420, cwd=str(tmp_path))
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("JSON")][0]
+    rec = json.loads(line[4:])
+    assert rec["chips"] == 8
+    assert rec["kind"] == "decode"
+    assert rec["hlo_flops"] > 0 and rec["hlo_bytes"] > 0
+    assert rec["bottleneck"] in ("compute", "memory", "collective")
+
+
+def test_main_process_still_has_one_device():
+    """The XLA_FLAGS override must never leak into the test process."""
+    import jax
+    assert len(jax.devices()) == 1

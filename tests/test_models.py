@@ -1,0 +1,178 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch, reduced
+config, one forward + one train step on CPU; output shapes + finite values."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, get_config, get_smoke_config, smoke_batch
+from repro.models.config import param_count
+from repro.models.model import Model
+from repro.optim import AdamW, AdamWConfig
+from repro.train.steps import make_train_step
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = smoke_batch(cfg)
+
+    logits, aux = jax.jit(model.forward)(params, batch)
+    B, S = batch["tokens"].shape
+    expect_S = S + (cfg.frontend_seq if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, expect_S, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+    opt = AdamW(AdamWConfig(lr=1e-3))
+    step = jax.jit(make_train_step(model, opt))
+    opt_state = opt.init(params)
+    new_params, new_state, metrics = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # parameters actually moved
+    moved = jax.tree.reduce(
+        lambda acc, t: acc + float(jnp.abs(t[0].astype(jnp.float32)
+                                           - t[1].astype(jnp.float32)).sum()),
+        jax.tree.map(lambda a, b: (a, b), new_params, params), 0.0)
+    assert moved > 0.0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The full configs carry the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    assigned = {
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+    }[arch]
+    L, d, H, kv, ff, vocab = assigned
+    assert cfg.n_layers == L and cfg.d_model == d and cfg.vocab == vocab
+    if cfg.family != "ssm":
+        assert cfg.n_heads == H and cfg.n_kv == kv
+        dff = cfg.moe.d_ff_expert if cfg.family == "moe" else cfg.d_ff
+        assert dff == ff
+    # extras
+    if arch == "qwen2-72b":
+        assert cfg.qkv_bias
+    if arch == "gemma-7b":
+        assert cfg.head_dim == 256 and cfg.act == "geglu"
+    if arch == "gemma3-4b":
+        assert cfg.global_every == 6          # 5 local : 1 global
+    if arch == "moonshot-v1-16b-a3b":
+        assert cfg.moe.n_experts == 64 and cfg.moe.top_k == 6
+    if arch == "kimi-k2-1t-a32b":
+        assert cfg.moe.n_experts == 384 and cfg.moe.top_k == 8
+    if arch in ("zamba2-2.7b",):
+        assert cfg.ssm.d_state == 64
+    if arch == "mamba2-130m":
+        assert cfg.ssm.d_state == 128
+
+
+def test_param_counts_plausible():
+    """Total params within ±40% of the arch's nameplate size."""
+    nameplate = {
+        "zamba2-2.7b": 2.7e9, "gemma-7b": 8.5e9, "qwen2-72b": 72e9,
+        "minitron-4b": 4e9, "gemma3-4b": 4e9, "internvl2-2b": 1.9e9,
+        # moonshot: the ASSIGNED table (48L × 64e × d_ff=1408, every layer
+        # MoE) counts to ~27B; the 16B nameplate assumes Moonlight's dense
+        # first layer + fewer MoE params — we implement the assigned table.
+        "moonshot-v1-16b-a3b": 27e9, "kimi-k2-1t-a32b": 1.0e12,
+        "mamba2-130m": 1.3e8,
+    }
+    for arch, n in nameplate.items():
+        total, active = param_count(get_config(arch))
+        assert 0.6 * n < total < 1.6 * n, (arch, total, n)
+        assert active <= total
+
+
+def test_moe_active_params():
+    cfg = get_config("kimi-k2-1t-a32b")
+    total, active = param_count(cfg)
+    assert active < 0.08 * total          # a32b out of 1t
+
+
+def test_gemma3_window_schedule():
+    from repro.models.transformer import window_schedule
+    cfg = get_config("gemma3-4b")
+    w = window_schedule(cfg)
+    assert len(w) == 34
+    assert (w == 0).sum() == 34 // 6      # every 6th layer global
+    assert w[5] == 0 and w[0] == cfg.local_window
+
+
+def test_blockwise_vs_dense_attention_equivalence():
+    """The training attention path == materialized-score oracle."""
+    from repro.models.attention import blockwise_attention, dense_attention
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, S, H, K, d = 2, 96, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, S, H, d))
+    k = jax.random.normal(ks[1], (B, S, K, d))
+    v = jax.random.normal(ks[2], (B, S, K, d))
+    for window in (0, 24):
+        o1 = blockwise_attention(q, k, v, causal=True, window=window,
+                                 block_q=32, block_kv=32)
+        o2 = dense_attention(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_moe_routing_topk_and_combine():
+    from repro.models.moe import router_topk
+    logits = jnp.asarray([[2.0, 1.0, 0.0, -1.0]])
+    w, idx = router_topk(logits, 2)
+    assert idx[0, 0] == 0 and idx[0, 1] == 1
+    np.testing.assert_allclose(float(w.sum()), 1.0, rtol=1e-6)
+
+
+def test_moe_capacity_drop_is_bounded():
+    """With capacity_factor ≥ tokens·k/E the combine loses nothing."""
+    from repro.models.moe import moe_apply, moe_init
+    cfg = get_smoke_config("moonshot-v1-16b-a3b")
+    big_cap = cfg.replace(moe=cfg.moe.__class__(
+        n_experts=cfg.moe.n_experts, top_k=cfg.moe.top_k,
+        d_ff_expert=cfg.moe.d_ff_expert, capacity_factor=float(cfg.moe.n_experts)))
+    p = moe_init(jax.random.PRNGKey(0), big_cap, n_layers=None)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    y, aux = moe_apply(p, x, big_cap)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all()) and float(aux) > 0.0
+
+
+def test_use_pallas_matches_xla_path():
+    """use_pallas=True (interpret kernels) == the jnp path: forward + decode."""
+    base = get_smoke_config("qwen2-72b").replace(remat="none")
+    model_x = Model(base)
+    model_p = Model(base.replace(use_pallas=True,
+                                 attn_block_q=32, attn_block_kv=32))
+    params = model_x.init(jax.random.PRNGKey(0))
+    batch = smoke_batch(base, batch=2, seq=32)
+
+    lx, _ = model_x.forward(params, batch)
+    lp, _ = model_p.forward(params, batch)
+    np.testing.assert_allclose(np.asarray(lx, np.float32),
+                               np.asarray(lp, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+    # decode path: one step against the prefilled cache
+    px, cx, posx = model_x.prefill(params, {"tokens": batch["tokens"]},
+                                   cache_len=40)
+    pp, cp, posp = model_p.prefill(params, {"tokens": batch["tokens"]},
+                                   cache_len=40)
+    tok = jnp.full((2, 1), 3, jnp.int32)
+    dx, _ = model_x.decode_step(params, tok, cx, posx)
+    dp, _ = model_p.decode_step(params, tok, cp, posp)
+    np.testing.assert_allclose(np.asarray(dx, np.float32),
+                               np.asarray(dp, np.float32),
+                               rtol=3e-2, atol=3e-2)

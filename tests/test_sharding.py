@@ -1,0 +1,143 @@
+"""Sharding rules engine: divisibility fallback, axis-claim ordering,
+param-name coverage over real models, HLO collective parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ARCHS, get_smoke_config
+from repro.launch.hlo_analysis import (CollectiveStats, collective_stats,
+                                       model_flops_for)
+from repro.models.model import Model
+from repro.parallel.sharding import AxisRules, spec_for
+from repro.train.specs import cache_names, param_names
+from repro.train.steps import default_rules, rules_variant
+
+
+def _mesh(shape=(2, 4), axes=("data", "model")):
+    return jax.make_mesh(shape, axes)     # host devices: works abstractly
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # a 1-device mesh with logical 2D shape is impossible; use shape math
+    # only — spec_for never touches devices, so fabricate via numpy reshape
+    import numpy as _np
+    devs = _np.asarray(jax.devices()[:1] * 8).reshape(2, 4) \
+        if len(jax.devices()) == 1 else None
+    if devs is not None:
+        class FakeMesh:
+            shape = {"data": 2, "model": 4}
+            axis_names = ("data", "model")
+        return FakeMesh()
+    return _mesh()
+
+
+def test_spec_divisibility_fallback(mesh):
+    rules = AxisRules.of(batch="data", ff="model")
+    # ff=10 not divisible by model=4 → replicated; batch=6 divisible by 2
+    s = spec_for((6, 10), ("batch", "ff"), rules, mesh)
+    assert s == P("data")
+    s2 = spec_for((6, 16), ("batch", "ff"), rules, mesh)
+    assert s2 == P("data", "model")
+
+
+def test_spec_first_claim_wins(mesh):
+    rules = AxisRules.of(a="model", b="model")
+    s = spec_for((8, 8), ("a", "b"), rules, mesh)
+    assert s == P("model")                  # b falls back, later dims trimmed
+
+
+def test_spec_tuple_axes(mesh):
+    rules = AxisRules.of(batch=("data", "model"))
+    assert spec_for((8, 4), ("batch", None), rules, mesh) == P(("data", "model"))
+    # 6 % (2*4) != 0 → replicate
+    assert spec_for((6, 4), ("batch", None), rules, mesh) == P()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(1, 64), min_size=1, max_size=4),
+       st.sampled_from(["batch", "ff", "heads", None]))
+def test_spec_never_over_shards(mesh, dims, name):
+    """Property: every sharded dim is divisible by its mesh axes product."""
+    rules = default_rules()
+    names = [name] * len(dims)
+    s = spec_for(tuple(dims), names, rules, mesh)
+    sizes = {"data": 2, "model": 4}
+    for dim, part in zip(dims, tuple(s) + (None,) * (len(dims) - len(s))):
+        if part is None:
+            continue
+        axes = (part,) if isinstance(part, str) else part
+        prod = int(np.prod([sizes[a] for a in axes]))
+        assert dim % prod == 0
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_names_cover_every_leaf(arch):
+    """Every parameter leaf receives a name tuple of exactly its rank."""
+    cfg = get_smoke_config(arch)
+    model = Model(cfg)
+    abstract = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    names = param_names(abstract)
+    flat_p = jax.tree.leaves(abstract)
+    flat_n = jax.tree.leaves(names, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(flat_p) == len(flat_n)
+    for leaf, nm in zip(flat_p, flat_n):
+        assert len(nm) == len(leaf.shape), (nm, leaf.shape)
+
+
+def test_rules_variants_exist():
+    for v in ("default", "dp-only", "tp-heavy", "seq-model", "kv-model",
+              "zero-all"):
+        rules_variant(v)
+    with pytest.raises(KeyError):
+        rules_variant("nope")
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing (the §Roofline data source)
+# ---------------------------------------------------------------------------
+HLO_SAMPLES = """
+  %all-reduce.150 = f32[32,4096]{1,0} all-reduce(%x), replica_groups=[8,8]<=[64]
+  %all-gather.69 = bf16[768]{0} all-gather(%y), replica_groups=[4,16]<=[64]
+  %all-gather-start.1 = (f32[768]{0}, f32[6144]{0}) all-gather-start(%z), replica_groups=[8,8]<=[64]
+  %all-gather-done.1 = f32[6144]{0} all-gather-done(%all-gather-start.1)
+  %reduce-scatter.5 = f32[96]{0} reduce-scatter(%g), replica_groups={{0,1,2,3,4,5,6,7}}
+  %collective-permute.3 = s32[16]{0} collective-permute(%c), source_target_pairs={{0,1}}
+  %fusion.1 = f32[8]{0} fusion(%a), kind=kLoop
+"""
+
+
+def test_collective_stats_parsing():
+    st_ = collective_stats(HLO_SAMPLES)
+    assert st_.by_kind["all-reduce"] == 32 * 4096 * 4
+    assert st_.by_kind["all-gather"] == 768 * 2 // 16 + 6144 * 4 // 8
+    assert st_.by_kind["reduce-scatter"] == 96 * 4 * 8
+    assert st_.by_kind["collective-permute"] == 16 * 4
+    assert st_.by_kind_count["all-gather"] == 2       # done not double-counted
+    assert st_.total_ops == 5
+    assert st_.link_bytes > 0
+
+
+def test_collective_stats_empty():
+    st_ = collective_stats("%add = f32[2]{0} add(%a, %b)")
+    assert st_.total_bytes == 0 and st_.total_ops == 0
+
+
+def test_model_flops_formulas():
+    n_tot, n_act = 100, 50
+    assert model_flops_for(None, "train", 10, 2, n_tot, n_act) == 6 * 50 * 20
+    assert model_flops_for(None, "prefill", 10, 2, n_tot, n_act) == 2 * 50 * 20
+    assert model_flops_for(None, "decode", 10, 2, n_tot, n_act) == 2 * 50 * 2
+
+
+def test_auto_policy_selection():
+    from repro.configs.registry import get_config
+    from repro.train.steps import auto_policy
+    assert auto_policy(get_config("qwen2-72b"), "decode", 128, 256) == "kv-model"
+    assert auto_policy(get_config("mamba2-130m"), "prefill", 32, 256) == "dp-only"
+    assert auto_policy(get_config("kimi-k2-1t-a32b"), "train", 256, 256) == "moe-ep4"
+    assert auto_policy(get_config("qwen2-72b"), "train", 256, 256) == "fsdp"
+    assert auto_policy(get_config("qwen2-72b"), "prefill", 32, 256) == "zero-all"
