@@ -66,25 +66,26 @@ def run(size: str = "small", device_counts=(1, 2, 4, 8)):
     table = _make_table()
 
     def workload(rt: ClusterRuntime, n: int):
-        # invariant data once per device (the one-shot broadcast of §5.3)
-        rt.pool.install_global("refs", refs)
-        rt.pool.install_global("subst", subst)
+        # invariant data once per device (the one-shot broadcast of §5.3) —
+        # resident in the device data environment: repeated runs over the
+        # same pool elide the broadcast entirely (the seed re-installed
+        # globals every run, re-sending refs+subst each time)
+        for d in range(n):
+            rt.ex.ensure_resident(d, refs=refs, subst=subst)
 
         def make_maps(start, length):
             return MapSpec(
-                to={"queries": sec(queries, start, length)},
-                from_={"out": jax.ShapeDtypeStruct((length, R), jnp.float32)},
-                use_globals=("refs", "subst"))
+                to={"queries": sec(queries, start, length),
+                    "refs": refs, "subst": subst},
+                from_={"out": jax.ShapeDtypeStruct((length, R), jnp.float32)})
 
         return offload_strips(rt.ex, "align_strip", m, make_maps, nowait=False)
 
     def serial(rt: ClusterRuntime):
-        rt.pool.install_global("refs", refs)
-        rt.pool.install_global("subst", subst)
+        rt.ex.ensure_resident(0, refs=refs, subst=subst)
         return rt.target("align_strip", 0, MapSpec(
-            to={"queries": queries},
-            from_={"out": jax.ShapeDtypeStruct((m, R), jnp.float32)},
-            use_globals=("refs", "subst")))
+            to={"queries": queries, "refs": refs, "subst": subst},
+            from_={"out": jax.ShapeDtypeStruct((m, R), jnp.float32)}))
 
     return run_curve("alignment", size, table, workload, serial=serial,
                      device_counts=device_counts)

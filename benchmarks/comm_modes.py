@@ -11,9 +11,15 @@ runs the same data-parallel gradient exchange under three fabrics:
 and reports modeled exchange time on the paper's Gbit link for a ~1M-param
 model across device counts.  Compute is identical in all modes (verified);
 only the communication topology changes — isolating the funnel cost.
+
+``run_resident`` additionally compares per-region parameter mapping (the
+seed's ALLOC/XFER/FREE every step) against resident parameters in the
+device data environment: after the first step, repeated steps move only the
+batch bytes — the transfer-elision win of the present table.
 """
 from __future__ import annotations
 
+import argparse
 import json
 from typing import Dict, List
 
@@ -38,20 +44,29 @@ def _make_table(d: int) -> KernelTable:
     return table
 
 
-def run(d_model: int = 512, n_batch: int = 64,
-        device_counts=(2, 4, 8)) -> List[Dict]:
-    table = _make_table(d_model)
+def _make_params(d_model: int):
     rng = np.random.default_rng(0)
-    params = {"w": jnp.asarray(rng.standard_normal((d_model, d_model)),
-                               jnp.float32),
-              "b": jnp.zeros((d_model,), jnp.float32)}
-    # identical batches across modes (per device count) for numeric checks
-    all_batches = {n: [{"x": jnp.asarray(
+    return {"w": jnp.asarray(rng.standard_normal((d_model, d_model)),
+                             jnp.float32),
+            "b": jnp.zeros((d_model,), jnp.float32)}
+
+
+def _make_batches(d_model: int, n_batch: int, n: int):
+    """Seeded per-device batches; identical across modes so the benchmark's
+    numeric cross-checks compare like for like."""
+    return [{"x": jnp.asarray(
         np.random.default_rng((1, n, i)).standard_normal((n_batch, d_model)),
         jnp.float32),
         "y": jnp.asarray(
         np.random.default_rng((2, n, i)).standard_normal((n_batch, d_model)),
-        jnp.float32)} for i in range(n)] for n in device_counts}
+        jnp.float32)} for i in range(n)]
+
+
+def run(d_model: int = 512, n_batch: int = 64,
+        device_counts=(2, 4, 8)) -> List[Dict]:
+    table = _make_table(d_model)
+    params = _make_params(d_model)
+    all_batches = {n: _make_batches(d_model, n_batch, n) for n in device_counts}
     rows = []
     grads_by_mode = {}
     for mode, compress in (("host-mediated", False), ("direct", False),
@@ -78,6 +93,37 @@ def run(d_model: int = 512, n_batch: int = 64,
     return rows
 
 
+def run_resident(d_model: int = 512, n_batch: int = 64, n: int = 4,
+                 steps: int = 6) -> List[Dict]:
+    """Per-region vs resident params over ``steps`` repeated DP steps."""
+    table = _make_table(d_model)
+    params = _make_params(d_model)
+    batches = _make_batches(d_model, n_batch, n)
+    rows = []
+    grads = {}
+    for resident in (False, True):
+        rt = ClusterRuntime(RuntimeConfig(n_virtual=n,
+                                          link=PAPER_ETHERNET), table=table)
+        g = None
+        for _ in range(steps):
+            g = rt.data_parallel_grads("mse_grads", params, batches,
+                                       resident=resident)
+        s = rt.cost.summary()
+        elided = sum(t.bytes_elided for t in rt.pool.present)
+        rt.shutdown()
+        grads[resident] = np.asarray(g["w"])
+        rows.append({"params": "resident" if resident else "per-region",
+                     "devices": n, "steps": steps,
+                     "comm_s": s["comm_s"], "bytes_to": s["bytes_to"],
+                     "MB_to": s["bytes_to"] / 1e6, "MB_elided": elided / 1e6})
+    assert np.allclose(grads[True], grads[False], rtol=1e-5, atol=1e-6)
+    base, res = rows[0]["bytes_to"], rows[1]["bytes_to"]
+    rows.append({"params": "ratio", "devices": n, "steps": steps,
+                 "comm_s": rows[0]["comm_s"] / max(rows[1]["comm_s"], 1e-12),
+                 "bytes_to": base / max(res, 1), "MB_to": 0.0, "MB_elided": 0.0})
+    return rows
+
+
 def render(rows: List[Dict]) -> str:
     out = ["## comm modes (DP gradient exchange, paper link model)",
            f"{'mode':>14} {'devs':>5} {'comm_s':>9} {'MB moved':>9}"]
@@ -87,5 +133,29 @@ def render(rows: List[Dict]) -> str:
     return "\n".join(out)
 
 
+def render_resident(rows: List[Dict]) -> str:
+    out = ["## resident vs per-region params "
+           "(host-mediated DP, repeated steps)",
+           f"{'params':>12} {'devs':>5} {'steps':>6} {'comm_s':>9} "
+           f"{'MB_to':>9} {'MB_elided':>10}"]
+    for r in rows[:-1]:
+        out.append(f"{r['params']:>12} {r['devices']:>5} {r['steps']:>6} "
+                   f"{r['comm_s']:>9.4f} {r['MB_to']:>9.2f} "
+                   f"{r['MB_elided']:>10.2f}")
+    ratio = rows[-1]
+    out.append(f"  → resident moves {ratio['bytes_to']:.1f}× fewer "
+               f"host→device bytes ({ratio['comm_s']:.1f}× less comm time)")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
-    print(render(run()))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI: same code paths, seconds not minutes")
+    args = ap.parse_args()
+    if args.smoke:
+        print(render(run(d_model=128, n_batch=16, device_counts=(2, 4))))
+        print(render_resident(run_resident(d_model=128, n_batch=4, n=2, steps=4)))
+    else:
+        print(render(run()))
+        print(render_resident(run_resident()))

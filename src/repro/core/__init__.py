@@ -8,11 +8,13 @@ Public API:
   strip_partition / offload_strips / recursive_offload / wavefront_offload
   ClusterRuntime / RuntimeConfig   deployable runtime, comm modes, cost model
 """
-from .costmodel import (CostModel, LinkModel, PAPER_ETHERNET, TPU_DCN, TPU_ICI,
+from .costmodel import (CostModel, Event, LinkModel, PAPER_ETHERNET,
+                        TimelineSpan, TPU_DCN, TPU_ICI,
                         PEAK_FLOPS_BF16, HBM_BW_Bps, ICI_BW_Bps)
-from .device import Command, DevicePool, NodeDevice
+from .device import Command, DevicePool, DeviceStoppedError, NodeDevice
 from .kernel_table import GLOBAL_KERNEL_TABLE, KernelTable, kernel
-from .mediary import RESERVED, HostMirror, MediaryStore
+from .mediary import (RESERVED, HostMirror, MediaryStore, PresentEntry,
+                      PresentTable)
 from .runtime import ClusterRuntime, RuntimeConfig
 from .scheduler import (DagTask, offload_strips, recursive_offload,
                         strip_partition, wavefront_offload)
@@ -20,12 +22,13 @@ from .target import MapSpec, Section, TargetExecutor, TargetFuture, sec
 
 __all__ = [
     "KernelTable", "kernel", "GLOBAL_KERNEL_TABLE",
-    "MediaryStore", "HostMirror", "RESERVED",
-    "NodeDevice", "DevicePool", "Command",
+    "MediaryStore", "HostMirror", "RESERVED", "PresentTable", "PresentEntry",
+    "NodeDevice", "DevicePool", "Command", "DeviceStoppedError",
     "MapSpec", "Section", "sec", "TargetExecutor", "TargetFuture",
     "strip_partition", "offload_strips", "recursive_offload",
     "wavefront_offload", "DagTask",
     "ClusterRuntime", "RuntimeConfig",
-    "CostModel", "LinkModel", "PAPER_ETHERNET", "TPU_ICI", "TPU_DCN",
+    "CostModel", "LinkModel", "Event", "TimelineSpan",
+    "PAPER_ETHERNET", "TPU_ICI", "TPU_DCN",
     "PEAK_FLOPS_BF16", "HBM_BW_Bps", "ICI_BW_Bps",
 ]

@@ -6,9 +6,20 @@ tradeoff a first-class, queryable object: every host↔device transfer in the
 offload runtime is logged against a :class:`LinkModel`, so benchmarks can
 reproduce the paper's speedup curves (Figs 2–9) and the scheduler can make
 comm-aware placement decisions; the same constants drive the roofline terms.
+
+Two makespan models coexist:
+
+* ``makespan(overlap=False)`` — paper-faithful: all communication serialized
+  at the host NIC, then compute (the OpenMP host-funnel restriction).
+* ``makespan(overlap=True)`` — an **event timeline**: recorded events are
+  list-scheduled onto a host-TX lane, a host-RX lane (Gbit Ethernet is full
+  duplex) and one compute lane per device, so host→device transfers for
+  strip *k+1* genuinely overlap device *k*'s compute, exactly like the
+  pipelined per-device command queues in :mod:`repro.core.device`.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -54,6 +65,33 @@ class ComputeRecord:
     tag: str = ""
 
 
+@dataclass
+class Event:
+    """One entry of the recorded event stream (issue order preserved)."""
+
+    kind: str               # "xfer" | "compute"
+    device: int
+    tag: str = ""
+    direction: str = ""     # xfer only: "to" | "from"
+    nbytes: int = 0
+    n_messages: int = 1
+    seconds: float = 0.0    # compute only
+
+
+@dataclass
+class TimelineSpan:
+    """One scheduled event on the modeled timeline."""
+
+    start: float
+    end: float
+    lane: str               # "tx" | "rx" | "dev<k>"
+    event: Event
+
+
+def _tag_matches(tag: str, prefix: str) -> bool:
+    return tag == prefix or tag.startswith(prefix + ":") or tag.startswith(prefix + "[")
+
+
 class CostModel:
     """Accounts transfers/compute per device and models end-to-end makespan.
 
@@ -67,27 +105,78 @@ class CostModel:
         self.link = link
         self.transfers: List[TransferRecord] = []
         self.compute: List[ComputeRecord] = []
+        self.adjustments: List[TransferRecord] = []
+        self.events: List[Event] = []
+        self._lock = threading.Lock()
 
     def reset(self) -> None:
-        self.transfers.clear()
-        self.compute.clear()
+        with self._lock:
+            self.transfers.clear()
+            self.compute.clear()
+            self.adjustments.clear()
+            self.events.clear()
 
     # -- accounting ---------------------------------------------------------
     def record_transfer(self, direction: str, device: int, nbytes: int,
                         n_messages: int = 1, tag: str = "") -> None:
-        self.transfers.append(TransferRecord(direction, device, int(nbytes), n_messages, tag))
+        with self._lock:
+            self.transfers.append(TransferRecord(direction, device, int(nbytes),
+                                                 n_messages, tag))
+            self.events.append(Event("xfer", device, tag=tag, direction=direction,
+                                     nbytes=int(nbytes), n_messages=n_messages))
 
     def record_compute(self, device: int, seconds: float, tag: str = "") -> None:
-        self.compute.append(ComputeRecord(device, float(seconds), tag))
+        with self._lock:
+            self.compute.append(ComputeRecord(device, float(seconds), tag))
+            self.events.append(Event("compute", device, tag=tag,
+                                     seconds=float(seconds)))
+
+    def record_adjustment(self, direction: str, device: int, nbytes: int,
+                          tag: str = "") -> None:
+        """Zero-latency byte-accounting correction (no wire messages).
+
+        Used for modeled substitutions — e.g. compression replacing raw
+        gradient bytes, or a collective replacing host-funnel fetches.  The
+        delta (possibly negative) counts toward ``bytes_moved`` and adds pure
+        bandwidth time to ``comm_time``, but never per-message latency and
+        never an event on the timeline.
+        """
+        with self._lock:
+            self.adjustments.append(TransferRecord(direction, device,
+                                                   int(nbytes), 0, tag))
+
+    def discard_tag(self, prefix: str) -> int:
+        """Drop every record whose tag belongs to region ``prefix``.
+
+        Used when a speculative re-dispatch loses: the duplicate's compute
+        and transfers must not count toward the makespan.  Returns the number
+        of records removed.
+        """
+        with self._lock:
+            before = (len(self.transfers) + len(self.compute)
+                      + len(self.adjustments) + len(self.events))
+            self.transfers = [t for t in self.transfers
+                              if not _tag_matches(t.tag, prefix)]
+            self.compute = [c for c in self.compute
+                            if not _tag_matches(c.tag, prefix)]
+            self.adjustments = [a for a in self.adjustments
+                                if not _tag_matches(a.tag, prefix)]
+            self.events = [e for e in self.events
+                           if not _tag_matches(e.tag, prefix)]
+            return before - (len(self.transfers) + len(self.compute)
+                             + len(self.adjustments) + len(self.events))
 
     # -- summaries ------------------------------------------------------------
     def bytes_moved(self, direction: Optional[str] = None) -> int:
-        return sum(t.nbytes for t in self.transfers
+        return sum(t.nbytes for t in self.transfers + self.adjustments
                    if direction is None or t.direction == direction)
 
     def comm_time(self) -> float:
         """Total host-funnel communication time (serialized at the host NIC)."""
-        return sum(self.link.time(t.nbytes, t.n_messages) for t in self.transfers)
+        wire = sum(self.link.time(t.nbytes, t.n_messages) for t in self.transfers)
+        # adjustments are latency-free: pure bandwidth credits/debits
+        wire += sum(a.nbytes / self.link.bandwidth_Bps for a in self.adjustments)
+        return wire
 
     def compute_time(self) -> float:
         """Parallel compute time: max over devices of their summed task time."""
@@ -96,16 +185,71 @@ class CostModel:
             per_dev[c.device] = per_dev.get(c.device, 0.0) + c.seconds
         return max(per_dev.values(), default=0.0)
 
+    # -- event timeline (pipelined model) -------------------------------------
+    def timeline(self) -> List[TimelineSpan]:
+        """List-schedule the recorded events onto lanes.
+
+        Lanes: ``tx`` (host→device sends), ``rx`` (device→host receives) —
+        the NIC is full duplex — and one compute lane per device.  A transfer
+        occupies its NIC lane *and* its device's lane (the device cannot
+        compute while being written/read); compute occupies only the device
+        lane.  Per-lane order follows the recorded issue order, so the
+        schedule is exactly what the per-device command queues execute.
+        """
+        with self._lock:
+            events = list(self.events)
+        tx_t, rx_t = 0.0, 0.0
+        dev_t: Dict[int, float] = {}
+        spans: List[TimelineSpan] = []
+        for e in events:
+            if e.kind == "xfer":
+                nic_t = tx_t if e.direction == "to" else rx_t
+                start = max(nic_t, dev_t.get(e.device, 0.0))
+                dur = self.link.time(e.nbytes, e.n_messages)
+                end = start + dur
+                if e.direction == "to":
+                    tx_t = end
+                else:
+                    rx_t = end
+                dev_t[e.device] = end
+                spans.append(TimelineSpan(start, end,
+                                          "tx" if e.direction == "to" else "rx", e))
+            elif e.kind == "compute":
+                start = dev_t.get(e.device, 0.0)
+                end = start + e.seconds
+                dev_t[e.device] = end
+                spans.append(TimelineSpan(start, end, f"dev{e.device}", e))
+        return spans
+
     def makespan(self, overlap: bool = False) -> float:
         """Modeled wall time.
 
         ``overlap=False`` is the paper-faithful model (comm then compute,
-        host-serialized); ``overlap=True`` models double-buffered transfers
-        hidden behind compute (beyond-paper optimization), bounded below by
-        whichever resource dominates.
+        host-serialized); ``overlap=True`` replays the recorded event stream
+        on the lane timeline, so transfers pipelined behind other devices'
+        compute are not double-charged.
         """
-        comm, comp = self.comm_time(), self.compute_time()
-        return max(comm, comp) if overlap else comm + comp
+        if not overlap:
+            return self.comm_time() + self.compute_time()
+        spans = self.timeline()
+        if not spans:
+            return 0.0
+        # adjustments (modeled substitutions: compression, collectives) move
+        # bytes on/off the NIC without being schedulable events — apply their
+        # net bandwidth time to the lane ends so credited-away transfers do
+        # not stay on the critical path
+        adj = {"to": 0.0, "from": 0.0}
+        for a in self.adjustments:
+            adj[a.direction] = adj.get(a.direction, 0.0) \
+                + a.nbytes / self.link.bandwidth_Bps
+        dev_end = max((s.end for s in spans if s.lane.startswith("dev")),
+                      default=0.0)
+        tx_end = max((s.end for s in spans if s.lane == "tx"), default=0.0)
+        rx_end = max((s.end for s in spans if s.lane == "rx"), default=0.0)
+        return max(dev_end,
+                   (tx_end + adj["to"]) if tx_end else 0.0,
+                   (rx_end + adj["from"]) if rx_end else 0.0,
+                   0.0)
 
     def summary(self) -> Dict[str, float]:
         return {

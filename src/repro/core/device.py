@@ -17,7 +17,9 @@ in a :class:`CostModel`.
 """
 from __future__ import annotations
 
+import concurrent.futures as _cf
 import inspect
+import queue
 import threading
 import time
 from dataclasses import dataclass, field
@@ -29,7 +31,7 @@ import numpy as np
 
 from .costmodel import CostModel, LinkModel, PAPER_ETHERNET
 from .kernel_table import GLOBAL_KERNEL_TABLE, KernelTable
-from .mediary import HostMirror, MediaryStore
+from .mediary import HostMirror, MediaryStore, PresentTable
 
 
 # ---------------------------------------------------------------------------
@@ -119,6 +121,20 @@ class NodeDevice:
         raise ValueError(f"unknown command {cmd.op}")
 
 
+class DeviceStoppedError(RuntimeError):
+    """Command issued to a device whose queue has been closed by stop_all."""
+
+
+class _WorkItem:
+    """One enqueued command: a closure the device worker runs in order."""
+
+    __slots__ = ("fn", "future")
+
+    def __init__(self, fn: Callable[[], Any], future: "_cf.Future") -> None:
+        self.fn = fn
+        self.future = future
+
+
 class DevicePool:
     """Host view of all devices (paper: the parsed configuration file).
 
@@ -126,6 +142,16 @@ class DevicePool:
     first two being virtual shares of node0 — the paper's multiplier feature.
     On this CPU container, every hostname resolves to the single CpuDevice;
     on a pod, pass explicit shardings (one mesh sub-slice per device).
+
+    Commands flow through a **per-device command queue** drained by one
+    worker thread per device (the paper's device-side command loop made
+    asynchronous): issuing a transfer returns as soon as the command is
+    enqueued, so the host can pipeline sends to one device while another
+    computes.  Ops that produce a value (EXEC, XFER_FROM) block on their
+    command's future.  Host-side mirror state is updated at issue time under
+    ``locks[d]`` — a short critical section, never held across device work —
+    which preserves the first-fit handle-agreement property: mirror and
+    store see the same op order.
     """
 
     def __init__(self, devices: Sequence[NodeDevice], *,
@@ -135,10 +161,78 @@ class DevicePool:
         self.table = table or GLOBAL_KERNEL_TABLE
         self.cost = CostModel(link)
         self.mirrors = [HostMirror() for _ in self.devices]
-        self.locks = [threading.Lock() for _ in self.devices]
+        # RLocks: _submit re-acquires the issue lock the issue methods hold
+        self.locks = [threading.RLock() for _ in self.devices]
+        self.present = [PresentTable() for _ in self.devices]
+        self.env_locks = [threading.RLock() for _ in self.devices]
         self.trace: List[Command] = []
         self.globals: Dict[str, int] = {}    # name -> handle, identical per dev
         self._trace_lock = threading.Lock()
+        self._queues: List["queue.SimpleQueue[Optional[_WorkItem]]"] = [
+            queue.SimpleQueue() for _ in self.devices]
+        self._stopped = [False for _ in self.devices]
+        self._async_errors: List[Optional[BaseException]] = [None] * len(self.devices)
+        self._workers = []
+        for i in range(len(self.devices)):
+            t = threading.Thread(target=self._worker, args=(i,),
+                                 name=f"omp-dev{i}", daemon=True)
+            t.start()
+            self._workers.append(t)
+
+    # -- the per-device command-queue worker ---------------------------------
+    def _worker(self, device: int) -> None:
+        q = self._queues[device]
+        while True:
+            item = q.get()
+            if item is None:                 # sentinel: queue closed
+                return
+            try:
+                item.future.set_result(item.fn())
+            except BaseException as e:       # propagate to the issuer
+                item.future.set_exception(e)
+
+    def _submit(self, device: int, fn: Callable[[], Any]) -> "_cf.Future":
+        # stopped-check and enqueue are atomic under the issue lock so no
+        # item can land behind stop_all's close sentinel (a worker that
+        # already exited would leave the submitter blocked forever)
+        with self.locks[device]:
+            if self._stopped[device]:
+                raise DeviceStoppedError(f"device {device} is stopped")
+            fut: "_cf.Future" = _cf.Future()
+            self._queues[device].put(_WorkItem(fn, fut))
+            return fut
+
+    def _submit_async(self, device: int, fn: Callable[[], Any]) -> "_cf.Future":
+        """Enqueue fire-and-forget; failures surface at the next sync op."""
+        fut = self._submit(device, fn)
+
+        def _stash(f: "_cf.Future") -> None:
+            err = f.exception()
+            if err is not None and self._async_errors[device] is None:
+                self._async_errors[device] = err
+
+        fut.add_done_callback(_stash)
+        return fut
+
+    def _raise_async(self, device: int) -> None:
+        err, self._async_errors[device] = self._async_errors[device], None
+        if err is not None:
+            raise err
+
+    def sync(self, device: Optional[int] = None) -> None:
+        """Barrier: wait until (one or all) device queues are drained."""
+        devs = range(len(self.devices)) if device is None else [device]
+        futs = []
+        for d in devs:
+            try:
+                if not self._stopped[d]:
+                    futs.append(self._submit(d, lambda: None))
+            except DeviceStoppedError:
+                pass                         # stopped concurrently: drained
+        for f in futs:
+            f.result()
+        for d in devs:
+            self._raise_async(d)
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -186,8 +280,9 @@ class DevicePool:
             cmd = Command("ALLOC", device, handle=handle,
                           nbytes=self.mirrors[device].nbytes(handle), tag=tag)
             self._log(cmd)
-            self.devices[device].execute(cmd, self.table,
-                                         {"shape": tuple(shape), "dtype": dtype})
+            payload = {"shape": tuple(shape), "dtype": dtype}
+            self._submit_async(
+                device, lambda: self.devices[device].execute(cmd, self.table, payload))
             return handle
 
     def free(self, device: int, handle: int) -> None:
@@ -195,7 +290,8 @@ class DevicePool:
             self.mirrors[device].free(handle)
             cmd = Command("FREE", device, handle=handle)
             self._log(cmd)
-            self.devices[device].execute(cmd, self.table)
+            self._submit_async(
+                device, lambda: self.devices[device].execute(cmd, self.table))
 
     def transfer_to(self, device: int, handle: int, value: Any,
                     section: Optional[slice] = None, tag: str = "") -> None:
@@ -205,19 +301,40 @@ class DevicePool:
             cmd = Command("XFER_TO", device, handle=handle, nbytes=nbytes, tag=tag)
             self._log(cmd)
             self.cost.record_transfer("to", device, nbytes, tag=tag)
-            self.devices[device].execute(cmd, self.table,
-                                         {"value": value, "section": section})
+            payload = {"value": value, "section": section}
+            self._submit_async(
+                device, lambda: self.devices[device].execute(cmd, self.table, payload))
 
     def transfer_from(self, device: int, handle: int,
                       section: Optional[slice] = None, tag: str = "") -> jax.Array:
         with self.locks[device]:
             cmd = Command("XFER_FROM", device, handle=handle, tag=tag)
             self._log(cmd)
-            out = self.devices[device].execute(cmd, self.table, {"section": section})
-            out = jax.block_until_ready(out)
-            nbytes = out.size * out.dtype.itemsize
-            self.cost.record_transfer("from", device, nbytes, tag=tag)
-            return out
+            payload = {"section": section}
+            fut = self._submit(
+                device,
+                lambda: jax.block_until_ready(
+                    self.devices[device].execute(cmd, self.table, payload)))
+        out = fut.result()
+        self._raise_async(device)
+        nbytes = out.size * out.dtype.itemsize
+        self.cost.record_transfer("from", device, nbytes, tag=tag)
+        return out
+
+    def transfer_to_writeback(self, device: int, handle: int, value: Any) -> None:
+        """Device-local write-back of a kernel result (no host↔device traffic).
+
+        Queued like every other command so it lands between the region's
+        EXEC and XFER_FROM in the device's command stream.
+        """
+        value = jnp.asarray(value)
+
+        def wb():
+            dev = self.devices[device]
+            dev.store.free(handle)
+            dev.store.install(handle, dev._place(value))
+
+        self._submit_async(device, wb)
 
     def exec_kernel(self, device: int, kernel_name: str,
                     buffers: Dict[str, Any],
@@ -228,20 +345,37 @@ class DevicePool:
         with self.locks[device]:
             cmd = Command("EXEC", device, kernel_index=index, tag=tag or kernel_name)
             self._log(cmd)
-            t0 = time.perf_counter()
-            out = self.devices[device].execute(
-                cmd, self.table,
-                {"buffers": buffers, "firstprivate": firstprivate or {},
-                 "trees": trees or {},
-                 "static_argnames": tuple(static_argnames)})
-            out = jax.block_until_ready(out)
-            self.cost.record_compute(device, time.perf_counter() - t0, tag=kernel_name)
-            return out
+            payload = {"buffers": buffers, "firstprivate": firstprivate or {},
+                       "trees": trees or {},
+                       "static_argnames": tuple(static_argnames)}
+
+            def run_exec():
+                t0 = time.perf_counter()
+                out = self.devices[device].execute(cmd, self.table, payload)
+                out = jax.block_until_ready(out)
+                return out, time.perf_counter() - t0
+
+            fut = self._submit(device, run_exec)
+        out, seconds = fut.result()
+        self._raise_async(device)
+        self.cost.record_compute(device, seconds, tag=tag or kernel_name)
+        return out
 
     def stop_all(self) -> None:
+        futs = []
         for d in self.devices:
-            self._log(Command("STOP", d.index))
-            d.execute(Command("STOP", d.index), self.table)
+            i = d.index
+            with self.locks[i]:              # atomic with any in-flight issue
+                if self._stopped[i]:
+                    continue
+                cmd = Command("STOP", i)
+                self._log(cmd)
+                futs.append(self._submit(
+                    i, lambda cmd=cmd, i=i: self.devices[i].execute(cmd, self.table)))
+                self._stopped[i] = True
+                self._queues[i].put(None)    # worker exits after STOP
+        for f in futs:
+            f.result()
 
     # -- declare-target globals (paper §4.2 last ¶) ---------------------------
     def install_global(self, name: str, value: Any, tag: str = "") -> int:
@@ -259,12 +393,7 @@ class DevicePool:
                 self.free(i, old)
         handles = []
         for i in range(len(self.devices)):
-            with self.locks[i]:
-                h = self.mirrors[i].reserve(value.shape, value.dtype)
-                self._log(Command("ALLOC", i, handle=h, tag=f"global:{name}"))
-                self.devices[i].execute(
-                    Command("ALLOC", i, handle=h), self.table,
-                    {"shape": value.shape, "dtype": value.dtype})
+            h = self.alloc(i, value.shape, value.dtype, tag=f"global:{name}")
             self.transfer_to(i, h, value, tag=tag or f"global:{name}")
             handles.append(h)
         assert len(set(handles)) == 1, "global handle mismatch across devices"

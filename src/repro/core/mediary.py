@@ -26,6 +26,13 @@ import numpy as np
 RESERVED = 0x999
 
 
+def same_treedef(a: Any, b: Any) -> bool:
+    """None-safe treedef equality (PyTreeDef.__eq__ rejects None operands)."""
+    if (a is None) != (b is None):
+        return False
+    return a is None or a == b
+
+
 class SlotTableBase:
     """First-fit slot allocator shared by device store and host mirror."""
 
@@ -109,6 +116,129 @@ class MediaryStore(SlotTableBase):
 class MirrorEntry:
     spec: jax.ShapeDtypeStruct
     nbytes: int
+
+
+# ---------------------------------------------------------------------------
+# Present table: persistent device data environments (OpenMP target data)
+# ---------------------------------------------------------------------------
+@dataclass
+class PresentEntry:
+    """One logical buffer resident on a device.
+
+    ``host_leaves`` are the host-side array objects last sent (identity is
+    the change detector: JAX arrays are immutable, so a new value is a new
+    object).  ``version`` bumps on every re-send, letting callers observe
+    that a host update actually crossed the wire.
+    """
+
+    name: str
+    handles: List[int]
+    treedef: Any                       # None = single array (not a pytree)
+    host_leaves: List[Any]
+    specs: List[jax.ShapeDtypeStruct]
+    refcount: int = 1
+    version: int = 0
+    # bytes sent by the enter/refresh that produced the current content —
+    # the first elision hit consumes this debit so "bytes elided" reports
+    # net savings vs a per-region baseline, not gross region elisions
+    debit: int = 0
+
+    def nbytes(self) -> int:
+        return sum(int(np.prod(s.shape, dtype=np.int64)) * jnp.dtype(s.dtype).itemsize
+                   for s in self.specs)
+
+
+class PresentTable:
+    """Reference-counted name → device-buffer map (OpenMP's present table).
+
+    OpenMP keeps a per-device table of host ranges already mapped; a map
+    clause whose variable is *present* skips allocation and transfer and
+    only adjusts the reference count.  Ours is keyed by the logical buffer
+    name in the :class:`~repro.core.target.MapSpec` and additionally tracks
+    content versions so stale device copies are refreshed exactly when the
+    host value changed.  Synchronization is the owner's job (the pool holds
+    one data-environment lock per device).
+    """
+
+    def __init__(self) -> None:
+        self._entries: Dict[str, PresentEntry] = {}
+        # observability: how much traffic the table elided
+        self.hits = 0
+        self.misses = 0
+        self.bytes_elided = 0
+
+    def get(self, name: str) -> Optional[PresentEntry]:
+        return self._entries.get(name)
+
+    def add(self, entry: PresentEntry) -> None:
+        if entry.name in self._entries:
+            raise KeyError(f"{entry.name!r} already present")
+        self._entries[entry.name] = entry
+
+    def names(self) -> List[str]:
+        return sorted(self._entries)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def match_value(self, name: str, leaves: Sequence[Any],
+                    treedef: Any) -> Optional[PresentEntry]:
+        """Entry iff ``name`` is present with the *same* host value.
+
+        Identity per leaf is the test, and only immutable ``jax.Array``
+        leaves are elidable — a mutable host array (numpy) could be updated
+        in place without changing identity, which would silently serve a
+        stale device copy.  A hit means zero bytes need to move.  Retains
+        the entry (refcount++); pair with :meth:`release`.
+        """
+        e = self._entries.get(name)
+        if (e is None or not same_treedef(e.treedef, treedef)
+                or len(e.host_leaves) != len(leaves)
+                or any(a is not b or not isinstance(b, jax.Array)
+                       for a, b in zip(e.host_leaves, leaves))):
+            self.misses += 1     # absent OR present-but-stale both miss
+            return None
+        e.refcount += 1
+        self.hits += 1
+        self.bytes_elided += max(0, e.nbytes() - e.debit)
+        e.debit = 0
+        return e
+
+    def match_specs(self, name: str, specs: Sequence[jax.ShapeDtypeStruct],
+                    treedef: Any) -> Optional[PresentEntry]:
+        """Entry iff ``name`` is present with matching shapes/dtypes.
+
+        Used for output (``from``/``alloc``) maps where no host value exists
+        yet: the resident buffer is reused in place of a fresh allocation.
+        Retains the entry on success.
+        """
+        e = self._entries.get(name)
+        if (e is None or not same_treedef(e.treedef, treedef)
+                or len(e.specs) != len(specs)
+                or any(a.shape != b.shape or jnp.dtype(a.dtype) != jnp.dtype(b.dtype)
+                       for a, b in zip(e.specs, specs))):
+            return None
+        e.refcount += 1
+        self.hits += 1
+        return e
+
+    def release(self, name: str) -> Optional[PresentEntry]:
+        """Refcount--; returns the now-dead entry (caller frees) or None."""
+        e = self._entries.get(name)
+        if e is None:
+            return None
+        e.refcount -= 1
+        if e.refcount <= 0:
+            del self._entries[name]
+            return e
+        return None
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "bytes_elided": self.bytes_elided, "resident": len(self._entries)}
 
 
 class HostMirror(SlotTableBase):

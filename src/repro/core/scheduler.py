@@ -19,6 +19,7 @@ fib's imbalance but offers no mitigation), and comm-aware device selection.
 """
 from __future__ import annotations
 
+import concurrent.futures as _cf
 import threading
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -27,7 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .target import MapSpec, TargetExecutor, TargetFuture
+from .target import (MapSpec, Section, TargetExecutor, TargetFuture,
+                     _flatten_map_value)
 
 
 # ---------------------------------------------------------------------------
@@ -74,40 +76,88 @@ def offload_strips(ex: TargetExecutor, kernel: str, total: int,
                  for dev, (start, length) in enumerate(strips)]
         return jnp.concatenate(parts, axis=combine_axis)
     futs: List[TargetFuture] = []
+    orig_tags = [f"{tag}[{start}:{start+length}]" for start, length in strips]
     for dev, (start, length) in enumerate(strips):
         futs.append(ex.target(kernel, dev, make_maps(start, length),
-                              nowait=True, tag=f"{tag}[{start}:{start+length}]"))
+                              nowait=True, tag=orig_tags[dev]))
     if not speculate:
-        results = [f.result() for f in futs]
-        ex._inflight.clear()
+        results = ex.drain(futs)
     else:
         results: List[Optional[Dict[str, jax.Array]]] = [None] * len(strips)
-        pending = set(range(len(strips)))
-        # First pass: harvest whatever is done; then re-dispatch stragglers on
-        # freed devices (round-robin over finished devices).
-        done_devices: List[int] = []
-        for i in list(pending):
-            if futs[i].done():
-                results[i] = futs[i].result()
-                pending.discard(i)
-                done_devices.append(i)
         respawned: Dict[int, TargetFuture] = {}
-        for j, i in enumerate(list(pending)):
-            if done_devices:
-                dev = done_devices[j % len(done_devices)]
-                start, length = strips[i]
-                respawned[i] = ex.target(kernel, dev, make_maps(start, length),
-                                         nowait=True, tag=f"{tag}:spec[{i}]")
-        for i in list(pending):
-            # take whichever copy finishes first; futures are thread-backed so
-            # .result() on the original is the fallback
-            if i in respawned and respawned[i].done():
-                results[i] = respawned[i].result()
-            else:
-                results[i] = futs[i].result()
-        ex._inflight.clear()
+        try:
+            results = _speculative_harvest(ex, kernel, strips, make_maps,
+                                           futs, respawned, orig_tags, tag)
+        finally:
+            # a failed strip propagates, but every dispatched future must be
+            # unregistered either way (they are settled or abandoned here)
+            ex.retire(futs)
+            ex.retire(list(respawned.values()))
     parts = [r[out_name] for r in results]
     return jnp.concatenate(parts, axis=combine_axis)
+
+
+def _speculative_harvest(ex: TargetExecutor, kernel: str,
+                         strips: List[Tuple[int, int]],
+                         make_maps: Callable[[int, int], MapSpec],
+                         futs: List[TargetFuture],
+                         respawned: Dict[int, TargetFuture],
+                         orig_tags: List[str], tag: str):
+    results: List[Optional[Dict[str, jax.Array]]] = [None] * len(strips)
+    pending = set(range(len(strips)))
+    # Wait for the first completion, harvest everything done by then, and
+    # re-dispatch the stragglers on freed devices (round-robin).  Without the
+    # wait the harvest races the dispatch loop and finds nothing "already
+    # returned", so no straggler is ever respawned.
+    _cf.wait([f._fut for f in futs], return_when=_cf.FIRST_COMPLETED)
+    done_devices: List[int] = []
+    for i in list(pending):
+        if futs[i].done():
+            results[i] = futs[i].result()
+            pending.discard(i)
+            done_devices.append(i)
+    spec_tags: Dict[int, str] = {}
+    for j, i in enumerate(list(pending)):
+        if done_devices:
+            dev = done_devices[j % len(done_devices)]
+            start, length = strips[i]
+            spec_tags[i] = f"{tag}:spec[{i}]"
+            respawned[i] = ex.target(kernel, dev, make_maps(start, length),
+                                     nowait=True, tag=spec_tags[i])
+    for i in list(pending):
+        # take whichever copy finishes first (genuine first-completed wait,
+        # not an instant done() peek the respawn could never win); a failed
+        # copy only surfaces if the other copy cannot produce a result
+        if i in respawned:
+            pair = (futs[i], respawned[i])
+            done, _ = _cf.wait([f._fut for f in pair],
+                               return_when=_cf.FIRST_COMPLETED)
+            first = pair[0] if pair[0]._fut in done else pair[1]
+            other = pair[1] if first is pair[0] else pair[0]
+            try:
+                results[i] = first.result()
+            except Exception:
+                results[i] = other.result()   # both failed → this re-raises
+        else:
+            results[i] = futs[i].result()
+    # Settle BOTH copies of every duplicated strip BEFORE striking the losing
+    # copy's compute + transfers from the cost model — a discard issued while
+    # the loser still runs would miss its late records and leave phantom work
+    # inflating the modeled makespan.
+    for i, spec_fut in respawned.items():
+        try:
+            spec_out = spec_fut.result()
+        except Exception:
+            spec_out = None              # failed respawn: original won
+        won_spec = spec_out is not None and results[i] is spec_out
+        if won_spec:
+            try:
+                futs[i].result()         # settle the losing original
+            except Exception:
+                pass                     # loser failed after losing: moot
+        # else: the original was settled by the selection loop
+        ex.pool.cost.discard_tag(orig_tags[i] if won_spec else spec_tags[i])
+    return results
 
 
 # ---------------------------------------------------------------------------
@@ -167,9 +217,9 @@ def recursive_offload(ex: TargetExecutor, kernel: str,
         for i, node in enumerate(frontier):
             futs.append((node, ex.target(kernel, i % n_dev, make_maps(node.payload),
                                          nowait=True, tag=f"{tag}[{i}]")))
-        for node, f in futs:
-            node.result = f.result()[out_name]
-        ex._inflight.clear()
+        outs = ex.drain([f for _, f in futs])   # retires even on failure
+        for (node, _), out in zip(futs, outs):
+            node.result = out[out_name]
     else:
         for i, node in enumerate(frontier):
             node.result = ex.target(kernel, i % n_dev, make_maps(node.payload),
@@ -198,6 +248,7 @@ class DagTask:
 
 def wavefront_offload(ex: TargetExecutor, tasks: Sequence[DagTask], *,
                       out_name: str = "out", nowait: bool = True,
+                      resident: bool = False,
                       tag: str = "dag") -> Dict[str, Any]:
     """Run a dependency DAG where every edge crosses the host (OpenMP rule).
 
@@ -205,7 +256,16 @@ def wavefront_offload(ex: TargetExecutor, tasks: Sequence[DagTask], *,
     one wave at a time.  Each inter-device value is fetched to the host and
     re-sent to the consumer — the comm pattern that makes sparselu lose
     (paper §5.6: "the whole array must be transferred two times").
+
+    ``resident=True`` (serial dispatch only) pins each task's plain input
+    buffers in the device's data environment for the duration of the wave,
+    so a value consumed by several tasks on the same device (e.g. the pivot
+    block LU in sparselu's fwd/bdiv fan-out) crosses the wire once per
+    device per wave instead of once per task.
     """
+    if resident and nowait:
+        raise ValueError("resident=True requires serial dispatch (nowait=False): "
+                         "concurrent regions would race on shared buffer names")
     results: Dict[str, Any] = {}
     remaining = {t.name: t for t in tasks}
     wave_idx = 0
@@ -220,17 +280,37 @@ def wavefront_offload(ex: TargetExecutor, tasks: Sequence[DagTask], *,
                 dep_vals = {d: results[d] for d in t.deps}
                 futs.append((t, ex.target(t.kernel, dev, t.make_maps(dep_vals),
                                           nowait=True, tag=f"{tag}:w{wave_idx}:{t.name}")))
-            for t, f in futs:
-                results[t.name] = f.result()[out_name]
+            outs = ex.drain([f for _, f in futs])   # retires even on failure
+            for (t, _), out in zip(futs, outs):
+                results[t.name] = out[out_name]
                 del remaining[t.name]
-            ex._inflight.clear()
         else:
-            for j, t in enumerate(ready):
-                dev = t.device if t.device is not None else j % len(ex.pool)
-                dep_vals = {d: results[d] for d in t.deps}
-                results[t.name] = ex.target(
-                    t.kernel, dev, t.make_maps(dep_vals), nowait=False,
-                    tag=f"{tag}:w{wave_idx}:{t.name}")[out_name]
-                del remaining[t.name]
+            entered: List[Tuple[int, Tuple[str, ...]]] = []
+            try:
+                for j, t in enumerate(ready):
+                    dev = t.device if t.device is not None else j % len(ex.pool)
+                    dep_vals = {d: results[d] for d in t.deps}
+                    maps = t.make_maps(dep_vals)
+                    if resident:
+                        pinned = []
+                        for n, v in {**maps.to, **maps.tofrom}.items():
+                            leaves, _ = _flatten_map_value(v)
+                            if any(isinstance(l, Section) for l in leaves):
+                                continue   # sections differ per task: not pinnable
+                            try:
+                                ex.enter_data(dev, f"{tag}:w{wave_idx}",
+                                              **{n: v})
+                                pinned.append(n)
+                            except ValueError:
+                                pass       # shape changed under this name: skip pin
+                        if pinned:
+                            entered.append((dev, tuple(pinned)))
+                    results[t.name] = ex.target(
+                        t.kernel, dev, maps, nowait=False,
+                        tag=f"{tag}:w{wave_idx}:{t.name}")[out_name]
+                    del remaining[t.name]
+            finally:
+                for dev, names in entered:  # wave boundary: release pins
+                    ex.exit_data(dev, *names)
         wave_idx += 1
     return results

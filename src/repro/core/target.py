@@ -18,19 +18,34 @@ writes results back into the mediary store and transfers them to the host.
 
 ``nowait=True`` returns a :class:`TargetFuture`; the host thread continues and
 may offload to *other* devices concurrently (paper §4.2's per-device mutex
-discipline is enforced by the pool).  ``taskwait()`` joins everything.
+discipline is enforced by the pool).  ``taskwait()`` joins everything;
+``drain(futs)`` joins exactly the given futures (scoped — concurrent callers'
+in-flight regions are untouched).
+
+Device data environments (OpenMP ``target data`` / ``target enter data``):
+:meth:`TargetExecutor.enter_data` pins named buffers on a device in the
+pool's reference-counted *present table*.  A later region whose map clause
+names a present buffer with the **same host value** skips ALLOC and XFER
+entirely — transfer elision.  When the host value changed (a new array
+object: JAX arrays are immutable), only the changed leaves are re-sent and
+the entry's content version bumps.  :meth:`target_data` is the scoped
+context-manager form; nesting increments the refcount, and the buffer is
+freed when the count drops to zero.
 """
 from __future__ import annotations
 
 import concurrent.futures as _cf
+import contextlib
+import threading
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .device import DevicePool
+from .device import DevicePool, DeviceStoppedError
+from .mediary import PresentEntry, same_treedef
 
 
 @dataclass(frozen=True)
@@ -90,6 +105,17 @@ def _as_spec(x: Any) -> jax.ShapeDtypeStruct:
     return jax.ShapeDtypeStruct(a.shape, a.dtype)
 
 
+def _flatten_map_value(val: Any) -> Tuple[List[Any], Any]:
+    """(leaves, treedef|None): None treedef = plain single array."""
+    if isinstance(val, (Section, jax.ShapeDtypeStruct)) or hasattr(val, "shape"):
+        return [val], None
+    leaves, treedef = jax.tree.flatten(
+        val, is_leaf=lambda x: isinstance(x, (Section, jax.ShapeDtypeStruct)))
+    if treedef.num_leaves == 1 and jax.tree.structure(0) == treedef:
+        return leaves, None
+    return leaves, treedef
+
+
 class TargetExecutor:
     """Executes target regions against a :class:`DevicePool`."""
 
@@ -98,113 +124,281 @@ class TargetExecutor:
         self._tp = _cf.ThreadPoolExecutor(max_workers=max_host_threads,
                                           thread_name_prefix="omp-host")
         self._inflight: List[TargetFuture] = []
+        self._inflight_lock = threading.Lock()
 
     # -- the target construct -------------------------------------------------
     def target(self, kernel: str, device: int, maps: MapSpec, *,
                nowait: bool = False, tag: str = "") -> Union[Dict[str, jax.Array], TargetFuture]:
         if nowait:
             fut = TargetFuture(self._tp.submit(self._run, kernel, device, maps, tag))
-            self._inflight.append(fut)
+            with self._inflight_lock:
+                self._inflight.append(fut)
             return fut
         return self._run(kernel, device, maps, tag)
 
     def taskwait(self) -> List[Dict[str, jax.Array]]:
-        out = [f.result() for f in self._inflight]
-        self._inflight.clear()
-        return out
+        with self._inflight_lock:
+            futs = list(self._inflight)
+        return self.drain(futs)
+
+    def drain(self, futs: Iterable[TargetFuture]) -> List[Dict[str, jax.Array]]:
+        """Join exactly ``futs`` and retire them from the in-flight list.
+
+        Scoped replacement for clearing the whole in-flight list: concurrent
+        callers' regions keep their registration, so a later ``taskwait``
+        still joins them.
+        """
+        futs = list(futs)
+        try:
+            return [f.result() for f in futs]
+        finally:
+            # retire even when a region failed: a settled-but-failed future
+            # left registered would re-raise at an unrelated later taskwait
+            self.retire(futs)
+
+    def retire(self, futs: Iterable[TargetFuture]) -> None:
+        """Remove already-settled futures from the in-flight list."""
+        with self._inflight_lock:
+            ids = {id(f) for f in futs}
+            self._inflight = [f for f in self._inflight if id(f) not in ids]
+
+    # -- device data environments (OpenMP target data, paper §3) --------------
+    def enter_data(self, device: int, _tag: str = "enter_data", /,
+                   **values: Any) -> None:
+        """``target enter data``: make named buffers resident on ``device``.
+
+        ``device`` and the tag are positional-only so buffer names can never
+        collide with them.  Already-present names gain a reference; their
+        device copy is refreshed (changed leaves only) if the host value is
+        a different object.  Pair every ``enter_data`` with an
+        :meth:`exit_data`.  All-or-nothing: if a later name fails (shape
+        mismatch), references already taken by this call are unwound.
+        """
+        entered: List[str] = []
+        try:
+            for name, val in values.items():
+                self._enter_one(device, name, val, retain=True, tag=_tag)
+                entered.append(name)
+        except BaseException:
+            if entered:
+                self.exit_data(device, *entered)
+            raise
+
+    def ensure_resident(self, device: int, _tag: str = "resident", /,
+                        **values: Any) -> None:
+        """Idempotent residency: enter once, afterwards only refresh.
+
+        Unlike :meth:`enter_data`, repeated calls do not accumulate
+        references — the buffer stays pinned with refcount 1 until an
+        explicit :meth:`exit_data`.  This is the steady-state API for
+        invariant data used every iteration (e.g. model parameters).
+        """
+        for name, val in values.items():
+            self._enter_one(device, name, val, retain=False, tag=_tag)
+
+    def _enter_one(self, device: int, name: str, val: Any, *,
+                   retain: bool, tag: str) -> None:
+        pool = self.pool
+        leaves, treedef = _flatten_map_value(val)
+        if any(isinstance(l, Section) for l in leaves):
+            raise TypeError(f"array section {name!r} cannot be made resident")
+        with pool.env_locks[device]:
+            ent = pool.present[device].get(name)
+            if ent is None:
+                hs, specs, hosts = [], [], []
+                for leaf in leaves:
+                    v = jnp.asarray(leaf)
+                    h = pool.alloc(device, v.shape, v.dtype, tag=f"{tag}:{name}")
+                    pool.transfer_to(device, h, v, tag=f"{tag}:{name}")
+                    hs.append(h)
+                    specs.append(jax.ShapeDtypeStruct(v.shape, v.dtype))
+                    hosts.append(leaf)
+                entry = PresentEntry(
+                    name=name, handles=hs, treedef=treedef,
+                    host_leaves=hosts, specs=specs)
+                entry.debit = entry.nbytes()
+                pool.present[device].add(entry)
+            else:
+                # refresh first: a structure-mismatch error must not leak a
+                # reference (the caller never sees the entry as entered)
+                self._refresh(device, ent, leaves, treedef, tag)
+                if retain:
+                    ent.refcount += 1
+
+    def _refresh(self, device: int, ent: PresentEntry, leaves: List[Any],
+                 treedef: Any, tag: str) -> None:
+        """Re-send only the leaves whose host value changed (version bump).
+
+        Validates every leaf before moving any bytes, so a mismatch raises
+        with the entry untouched.  Elision stats are counted at map-match
+        time only (``PresentTable.match_value``), not here — an unchanged
+        leaf in a refresh is not a transfer the seed would have made.
+        """
+        pool = self.pool
+        if not same_treedef(ent.treedef, treedef) or len(ent.host_leaves) != len(leaves):
+            raise ValueError(
+                f"resident buffer {ent.name!r} structure changed; "
+                f"exit_data it first")
+        stale = []
+        for i, leaf in enumerate(leaves):
+            # mutable host arrays (numpy) can change under the same identity,
+            # so only immutable jax.Array leaves count as unchanged
+            if leaf is ent.host_leaves[i] and isinstance(leaf, jax.Array):
+                continue
+            v = jnp.asarray(leaf)
+            if v.shape != ent.specs[i].shape or v.dtype != jnp.dtype(ent.specs[i].dtype):
+                raise ValueError(
+                    f"resident buffer {ent.name!r} leaf {i} changed "
+                    f"shape/dtype {ent.specs[i]} -> {v.shape}/{v.dtype}; "
+                    f"exit_data it first")
+            stale.append((i, leaf, v))
+        for i, leaf, v in stale:
+            pool.transfer_to(device, ent.handles[i], v, tag=f"{tag}:{ent.name}")
+            ent.host_leaves[i] = leaf
+            ent.debit += int(np.prod(ent.specs[i].shape, dtype=np.int64)
+                             * jnp.dtype(ent.specs[i].dtype).itemsize)
+        if stale:
+            ent.version += 1
+
+    def exit_data(self, device: int, *names: str) -> None:
+        """``target exit data``: drop one reference; free at zero."""
+        pool = self.pool
+        dead: List[PresentEntry] = []
+        with pool.env_locks[device]:
+            for name in names:
+                e = pool.present[device].release(name)
+                if e is not None:
+                    dead.append(e)
+        for e in dead:
+            for h in e.handles:
+                pool.free(device, h)
+
+    @contextlib.contextmanager
+    def target_data(self, device: int, /, **values: Any):
+        """Scoped data environment (OpenMP ``target data`` region).
+
+        Regions executed inside the block elide transfers for these names.
+        ``nowait`` regions launched inside must be joined (``drain`` /
+        ``taskwait``) before the block exits.
+        """
+        self.enter_data(device, "target_data", **values)
+        try:
+            yield self
+        finally:
+            self.exit_data(device, *values.keys())
 
     # -- region lifecycle (paper §4.1/§4.2) ------------------------------------
     def _run(self, kernel: str, device: int, maps: MapSpec, tag: str) -> Dict[str, jax.Array]:
         pool = self.pool
         handles: Dict[str, Any] = {}   # name -> handle | [handles] (pytree)
         trees: Dict[str, Any] = {}     # name -> treedef for pytree maps
-        owned: List[int] = []   # handles to free at region end (not globals)
+        owned: List[int] = []    # region-lifetime handles, freed at region end
+        retained: List[str] = []  # present-table names released at region end
 
-        def flatten(val):
-            """(leaves, treedef|None): None treedef = plain single array."""
-            if isinstance(val, (Section, jax.ShapeDtypeStruct)) or hasattr(val, "shape"):
-                return [val], None
-            leaves, treedef = jax.tree.flatten(
-                val, is_leaf=lambda x: isinstance(x, (Section, jax.ShapeDtypeStruct)))
-            if treedef.num_leaves == 1 and jax.tree.structure(0) == treedef:
-                return leaves, None
-            return leaves, treedef
+        # The try spans setup too: a failure after a present-table retain or
+        # an ALLOC must still release/free in the teardown below.
+        try:
+            # 1) ALLOC + XFER_TO for to/tofrom — unless the name is present on
+            #    the device with the same host value, in which case the
+            #    transfer is elided and the resident handles used directly.
+            for name, val in {**maps.to, **maps.tofrom}.items():
+                leaves, treedef = _flatten_map_value(val)
+                ent = None
+                if not any(isinstance(l, Section) for l in leaves):
+                    with pool.env_locks[device]:
+                        ent = pool.present[device].match_value(name, leaves, treedef)
+                if ent is not None:
+                    hs = list(ent.handles)
+                    retained.append(name)
+                else:
+                    hs = []
+                    for leaf in leaves:
+                        v = leaf.value if isinstance(leaf, Section) else jnp.asarray(leaf)
+                        h = pool.alloc(device, v.shape, v.dtype, tag=f"{tag}:{name}")
+                        pool.transfer_to(device, h, v, tag=f"{tag}:{name}")
+                        hs.append(h)
+                        owned.append(h)
+                handles[name] = hs[0] if treedef is None else hs
+                if treedef is not None:
+                    trees[name] = treedef
+            # ALLOC only for alloc/from_ — a present entry of matching shape
+            # is reused as the output buffer (resident results stay on-device).
+            for name, spec in {**maps.alloc, **maps.from_}.items():
+                leaves, treedef = _flatten_map_value(spec)
+                specs = [_as_spec(leaf) for leaf in leaves]
+                with pool.env_locks[device]:
+                    ent = pool.present[device].match_specs(name, specs, treedef)
+                if ent is not None:
+                    hs = list(ent.handles)
+                    retained.append(name)
+                else:
+                    hs = []
+                    for s in specs:
+                        h = pool.alloc(device, s.shape, s.dtype, tag=f"{tag}:{name}")
+                        hs.append(h)
+                        owned.append(h)
+                handles[name] = hs[0] if treedef is None else hs
+                if treedef is not None:
+                    trees[name] = treedef
+            for name in maps.use_globals:
+                handles[name] = pool.globals[name]
 
-        # 1) ALLOC + XFER_TO for to/tofrom; ALLOC only for alloc/from_.
-        for name, val in {**maps.to, **maps.tofrom}.items():
-            leaves, treedef = flatten(val)
-            hs = []
-            for leaf in leaves:
-                v = leaf.value if isinstance(leaf, Section) else jnp.asarray(leaf)
-                h = pool.alloc(device, v.shape, v.dtype, tag=f"{tag}:{name}")
-                pool.transfer_to(device, h, v, tag=f"{tag}:{name}")
-                hs.append(h)
-                owned.append(h)
-            handles[name] = hs[0] if treedef is None else hs
-            if treedef is not None:
-                trees[name] = treedef
-        for name, spec in {**maps.alloc, **maps.from_}.items():
-            leaves, treedef = flatten(spec)
-            hs = []
-            for leaf in leaves:
-                s = _as_spec(leaf)
-                h = pool.alloc(device, s.shape, s.dtype, tag=f"{tag}:{name}")
-                hs.append(h)
-                owned.append(h)
-            handles[name] = hs[0] if treedef is None else hs
-            if treedef is not None:
-                trees[name] = treedef
-        for name in maps.use_globals:
-            handles[name] = pool.globals[name]
+            # 2) EXEC — kernel sees device-resident buffers as kwargs, returns
+            #    replacements for from_/tofrom names.
+            result = pool.exec_kernel(device, kernel, buffers=handles, trees=trees,
+                                      firstprivate=maps.firstprivate, tag=tag)
+            returned: Dict[str, Any] = {}
+            if result is not None:
+                if not isinstance(result, Mapping):
+                    raise TypeError(
+                        f"kernel {kernel!r} must return a dict of mapped outputs, "
+                        f"got {type(result)}")
+                returned = dict(result)
 
-        # 2) EXEC — kernel sees device-resident buffers as kwargs, returns
-        #    replacements for from_/tofrom names.
-        result = pool.exec_kernel(device, kernel, buffers=handles, trees=trees,
-                                  firstprivate=maps.firstprivate, tag=tag)
-        returned: Dict[str, Any] = {}
-        if result is not None:
-            if not isinstance(result, Mapping):
-                raise TypeError(
-                    f"kernel {kernel!r} must return a dict of mapped outputs, "
-                    f"got {type(result)}")
-            returned = dict(result)
-
-        # 3) write-back + XFER_FROM for from_/tofrom.
-        out: Dict[str, jax.Array] = {}
-        for name in list(maps.from_) + list(maps.tofrom):
-            if name not in returned:
-                raise KeyError(f"kernel {kernel!r} did not return mapped output {name!r}")
-            h = handles[name]
-            if isinstance(h, list):
+            # 3) write-back + XFER_FROM for from_/tofrom.
+            out: Dict[str, jax.Array] = {}
+            for name in list(maps.from_) + list(maps.tofrom):
+                if name not in returned:
+                    raise KeyError(f"kernel {kernel!r} did not return mapped output {name!r}")
+                h = handles[name]
+                hs = h if isinstance(h, list) else [h]
                 ret_leaves, ret_def = jax.tree.flatten(returned[name])
-                if len(ret_leaves) != len(h):
+                if len(ret_leaves) != len(hs):
                     raise ValueError(
                         f"kernel {kernel!r} returned {len(ret_leaves)} leaves "
-                        f"for {name!r}, mapped {len(h)}")
+                        f"for {name!r}, mapped {len(hs)}")
                 fetched = []
-                for hh, leaf in zip(h, ret_leaves):
+                for hh, leaf in zip(hs, ret_leaves):
                     pool.transfer_to_writeback(device, hh, leaf)
                     fetched.append(pool.transfer_from(device, hh, tag=f"{tag}:{name}"))
-                out[name] = jax.tree.unflatten(ret_def, fetched)
-            else:
-                pool.transfer_to_writeback(device, h, returned[name])
-                out[name] = pool.transfer_from(device, h, tag=f"{tag}:{name}")
-
-        # 4) region end: free owned handles on both device and host mirror
-        #    (paper: "allocated variables are freed from the device's mediary
-        #    address array and their positions are marked as unused").
-        for h in owned:
-            pool.free(device, h)
-        return out
-
-
-def _transfer_to_writeback(self, device: int, handle: int, value: Any) -> None:
-    """Device-local write-back of a kernel result (no host↔device traffic)."""
-    value = jnp.asarray(value)
-    with self.locks[device]:
-        self.devices[device].store.free(handle)
-        self.devices[device].store.install(handle, self.devices[device]._place(value))
-
-
-# Installed on DevicePool here to keep device.py free of target-layer concepts.
-DevicePool.transfer_to_writeback = _transfer_to_writeback
+                out[name] = (fetched[0] if not isinstance(h, list)
+                             else jax.tree.unflatten(ret_def, fetched))
+                if name in retained:
+                    # resident output: the device copy advanced — record the
+                    # fetched host value so a later map(to) of it elides.
+                    with pool.env_locks[device]:
+                        ent = pool.present[device].get(name)
+                        if ent is not None and len(ent.host_leaves) == len(fetched):
+                            ent.host_leaves = list(fetched)
+                            ent.version += 1
+            return out
+        finally:
+            # 4) region end: free region-lifetime handles on both device and
+            #    host mirror (paper: "allocated variables are freed from the
+            #    device's mediary address array and their positions are marked
+            #    as unused") and settle the device queue so a resolved region
+            #    future implies the device reached the same state.  Present
+            #    entries only drop the region's reference — data stays
+            #    resident until its data environment exits.
+            try:
+                for h in owned:
+                    pool.free(device, h)
+                if owned:
+                    pool.sync(device)
+                if retained:
+                    self.exit_data(device, *retained)
+            except DeviceStoppedError:
+                pass                       # device stopped mid-teardown:
+                                           # nothing left to free; any other
+                                           # error (incl. stashed async device
+                                           # errors) must surface

@@ -1,0 +1,95 @@
+"""Deterministic stand-in for the slice of the hypothesis API this suite uses.
+
+The container image does not ship ``hypothesis``; rather than skip the
+property tests wholesale, this shim replays each ``@given`` body over a
+fixed number of seeded-random examples.  It is *not* hypothesis — no
+shrinking, no database, no coverage-guided generation — but it keeps the
+properties exercised.  When hypothesis is installed (CI does), the real
+library is used instead; see the try/except import in each test module.
+"""
+from __future__ import annotations
+
+import functools
+import types
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def just(value):
+    return _Strategy(lambda r: value)
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda r: elements[r.randrange(len(elements))])
+
+
+def one_of(*strategies):
+    return _Strategy(lambda r: strategies[r.randrange(len(strategies))].draw(r))
+
+
+def tuples(*strategies):
+    return _Strategy(lambda r: tuple(s.draw(r) for s in strategies))
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _Strategy(
+        lambda r: [elements.draw(r) for _ in range(r.randint(min_size, max_size))])
+
+
+st = types.SimpleNamespace(
+    integers=integers, floats=floats, just=just, sampled_from=sampled_from,
+    one_of=one_of, tuples=tuples, lists=lists)
+strategies = st
+
+_DEFAULT_EXAMPLES = 25
+
+
+def given(*strats, **kw_strats):
+    def deco(fn):
+        import inspect
+
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        # hypothesis semantics: positional strategies fill the RIGHTMOST
+        # parameters; anything left of them (and not a keyword strategy)
+        # is a pytest fixture.
+        gen_names = [p.name for p in params[len(params) - len(strats):]]
+        fixture_params = [p for p in params[:len(params) - len(strats)]
+                          if p.name not in kw_strats]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            import random
+            n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+            seed0 = zlib.crc32(fn.__name__.encode())
+            for i in range(n):
+                rng = random.Random(seed0 + i * 2654435761)
+                gen_kw = dict(zip(gen_names, (s.draw(rng) for s in strats)))
+                gen_kw.update({k: s.draw(rng) for k, s in kw_strats.items()})
+                fn(*args, **gen_kw, **kwargs)
+        # expose only the fixture params to pytest's fixture resolution
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature(fixture_params)
+        wrapper.hypothesis_shim = True
+        return wrapper
+    return deco
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container image lacks hypothesis
+    from _hypothesis_shim import given, settings, st
 
 from repro.core import (DagTask, DevicePool, KernelTable, MapSpec,
                         TargetExecutor, offload_strips, recursive_offload,

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container image lacks hypothesis
+    from _hypothesis_shim import given, settings, st
 
 from repro.configs.registry import get_smoke_config, smoke_batch
 from repro.core import compression as comp
