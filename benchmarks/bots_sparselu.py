@@ -120,9 +120,11 @@ def run(size: str = "small", device_counts=(1, 2, 4, 8)):
     def workload(rt: ClusterRuntime, n: int):
         # resident=True pins each wave's shared operands (e.g. the pivot
         # block LU consumed by every fwd/bdiv task) once per device per
-        # wave instead of once per task — the comm still loses on this
-        # link, as in the paper, but by a smaller margin
-        return wavefront_offload(rt.ex, tasks, nowait=False, resident=True)
+        # wave instead of once per task, and the dependency-aware device
+        # stream lets the wave's regions dispatch concurrently (nowait) —
+        # the comm still loses on this link, as in the paper, but by a
+        # smaller margin
+        return wavefront_offload(rt.ex, tasks, nowait=True, resident=True)
 
     def serial(rt: ClusterRuntime):
         return rt.target("sparselu_serial", 0, MapSpec(
@@ -139,7 +141,7 @@ def verify(size: str = "small") -> float:
     mat = _matrix(K, B)
     table = _make_table(K)
     rt = ClusterRuntime(RuntimeConfig(n_virtual=3), table=table)
-    res = wavefront_offload(rt.ex, _build_dag(mat, K, B), nowait=False,
+    res = wavefront_offload(rt.ex, _build_dag(mat, K, B), nowait=True,
                             resident=True)
     serial = rt.target("sparselu_serial", 0, MapSpec(
         to={"mat": mat},

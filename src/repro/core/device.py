@@ -17,6 +17,7 @@ in a :class:`CostModel`.
 """
 from __future__ import annotations
 
+import collections
 import concurrent.futures as _cf
 import inspect
 import queue
@@ -37,6 +38,12 @@ from .mediary import HostMirror, MediaryStore, PresentTable
 # ---------------------------------------------------------------------------
 # Command stream (paper §4.1: the four command types + STOP)
 # ---------------------------------------------------------------------------
+#: Pseudo-handle every ALLOC/FREE writes: chains them in issue order so the
+#: device-side first-fit allocator sees the exact sequence the host mirror
+#: predicted, even though unrelated transfers/EXECs may reorder around them.
+SLOT_STREAM = -1
+
+
 @dataclass(frozen=True)
 class Command:
     op: str                 # ALLOC | FREE | XFER_TO | XFER_FROM | EXEC | STOP
@@ -45,6 +52,12 @@ class Command:
     nbytes: int = 0
     kernel_index: Optional[int] = None
     tag: str = ""
+    # dependency-aware stream: the buffer handles this command reads/writes.
+    # Per-handle issue order (producer XFER/EXEC before consumer
+    # EXEC/XFER_FROM, consumer before the *next* producer) is what the
+    # device worker enforces instead of whole-queue serialization.
+    reads: Tuple[int, ...] = ()
+    writes: Tuple[int, ...] = ()
 
 
 class NodeDevice:
@@ -135,6 +148,32 @@ class _WorkItem:
         self.future = future
 
 
+class StreamTicket:
+    """A registered *reader* of device-stream handles.
+
+    Opened under the data-environment lock when a region matches a present
+    entry, closed once the region's EXEC has consumed the matched content.
+    While open, any later command that writes those handles (a concurrent
+    region's refresh, a writeback) is held back — write-after-read ordering
+    across the match→EXEC window, which is what makes ``nowait`` regions
+    safe to share present-table entries.
+
+    ``deps`` are the last-writer futures of the handles at open time: the
+    consuming EXEC must run after them (read-after-write ordering).
+    """
+
+    __slots__ = ("deps", "_fut")
+
+    def __init__(self, deps: Sequence["_cf.Future"], fut: "_cf.Future") -> None:
+        self.deps: Tuple["_cf.Future", ...] = tuple(deps)
+        self._fut = fut
+
+    def close(self) -> None:
+        """Release the reader registration (idempotent)."""
+        if not self._fut.done():
+            self._fut.set_result(None)
+
+
 class DevicePool:
     """Host view of all devices (paper: the parsed configuration file).
 
@@ -143,15 +182,22 @@ class DevicePool:
     On this CPU container, every hostname resolves to the single CpuDevice;
     on a pod, pass explicit shardings (one mesh sub-slice per device).
 
-    Commands flow through a **per-device command queue** drained by one
-    worker thread per device (the paper's device-side command loop made
-    asynchronous): issuing a transfer returns as soon as the command is
-    enqueued, so the host can pipeline sends to one device while another
-    computes.  Ops that produce a value (EXEC, XFER_FROM) block on their
-    command's future.  Host-side mirror state is updated at issue time under
-    ``locks[d]`` — a short critical section, never held across device work —
-    which preserves the first-fit handle-agreement property: mirror and
-    store see the same op order.
+    Commands flow through a **dependency-aware per-device stream** drained by
+    one worker thread per device (the paper's device-side command loop made
+    asynchronous).  Each command names the buffer handles it reads and
+    writes; a command becomes runnable once the last writer of every handle
+    it touches — and, for writers, every registered reader — has settled.
+    Only that per-handle order is enforced: issuing a transfer returns as
+    soon as the command is registered, and commands on disjoint handles may
+    run in either order, so ``nowait`` regions can safely interleave their
+    command batches on one device (they serialize exactly where their data
+    dependencies demand).  ALLOC/FREE additionally write the ``SLOT_STREAM``
+    pseudo-handle, chaining them in issue order so the device's first-fit
+    allocator replays the exact sequence the host mirror predicted under
+    ``locks[d]`` — the handle-agreement property survives reordering.
+    Ops that produce a value (EXEC, XFER_FROM) block on their command's
+    future.  ``stream_traces[d]`` records *execution* order (``trace`` keeps
+    issue order) so tests can assert producer-before-consumer.
     """
 
     def __init__(self, devices: Sequence[NodeDevice], *,
@@ -166,12 +212,24 @@ class DevicePool:
         self.present = [PresentTable() for _ in self.devices]
         self.env_locks = [threading.RLock() for _ in self.devices]
         self.trace: List[Command] = []
-        self.globals: Dict[str, int] = {}    # name -> handle, identical per dev
+        # name -> {device: handle}; first-fit may place a global at different
+        # slots across devices when other buffers are already pinned on some
+        self.globals: Dict[str, Dict[int, int]] = {}
         self._trace_lock = threading.Lock()
         self._queues: List["queue.SimpleQueue[Optional[_WorkItem]]"] = [
             queue.SimpleQueue() for _ in self.devices]
         self._stopped = [False for _ in self.devices]
         self._async_errors: List[Optional[BaseException]] = [None] * len(self.devices)
+        # dependency-stream state, all guarded by locks[d]:
+        self._last_write: List[Dict[int, "_cf.Future"]] = [
+            {} for _ in self.devices]       # handle -> last writer's future
+        self._readers: List[Dict[int, List["_cf.Future"]]] = [
+            {} for _ in self.devices]       # handle -> readers since last write
+        self._outstanding: List[List["_cf.Future"]] = [[] for _ in self.devices]
+        # ring-buffered (unlike the issue-order `trace`): execution order is
+        # a debugging/testing aid and must not grow with run length
+        self.stream_traces: List["collections.deque[Command]"] = [
+            collections.deque(maxlen=4096) for _ in self.devices]
         self._workers = []
         for i in range(len(self.devices)):
             t = threading.Thread(target=self._worker, args=(i,),
@@ -191,20 +249,92 @@ class DevicePool:
             except BaseException as e:       # propagate to the issuer
                 item.future.set_exception(e)
 
-    def _submit(self, device: int, fn: Callable[[], Any]) -> "_cf.Future":
-        # stopped-check and enqueue are atomic under the issue lock so no
-        # item can land behind stop_all's close sentinel (a worker that
+    def _stream_deps(self, device: int, fut: "_cf.Future",
+                     reads: Sequence[int], writes: Sequence[int],
+                     extra_deps: Sequence["_cf.Future"]) -> List["_cf.Future"]:
+        """Collect this command's dependencies and register it; under locks[d].
+
+        Read-after-write: wait for the last writer of every handle touched.
+        Write-after-read: a writer also waits for every reader registered
+        since that last write (including open :class:`StreamTicket`\\ s).
+        """
+        lw, rd = self._last_write[device], self._readers[device]
+        deps: Dict[int, "_cf.Future"] = {}
+        for h in (*reads, *writes):
+            f = lw.get(h)
+            if f is not None and not f.done():
+                deps[id(f)] = f
+        for h in writes:
+            for f in rd.get(h, ()):
+                if not f.done():
+                    deps[id(f)] = f
+        for f in extra_deps:
+            if f is not None and not f.done():
+                deps[id(f)] = f
+        for h in writes:
+            lw[h] = fut
+            rd[h] = []
+        for h in reads:
+            self._note_reader(rd, h, fut)
+        return list(deps.values())
+
+    @staticmethod
+    def _note_reader(rd: Dict[int, List["_cf.Future"]], h: int,
+                     fut: "_cf.Future") -> None:
+        """Register a reader of ``h``, pruning settled ones: a handle read
+        forever but never rewritten (a global) must not retain every EXEC."""
+        lst = rd.setdefault(h, [])
+        if len(lst) > 8:
+            lst[:] = [f for f in lst if not f.done()]
+        lst.append(fut)
+
+    def _gate(self, device: int, item: _WorkItem,
+              deps: Sequence["_cf.Future"]) -> None:
+        """Hand the item to the worker once every dependency has settled.
+
+        Settled means done — success *or* failure: dependencies order the
+        stream, they do not gate on success (async failures surface at the
+        next sync op, exactly as in the serial queue)."""
+        if not deps:
+            self._queues[device].put(item)
+            return
+        remaining = [len(deps)]
+        lk = threading.Lock()
+
+        def _one_done(_f: "_cf.Future") -> None:
+            with lk:
+                remaining[0] -= 1
+                if remaining[0]:
+                    return
+            self._queues[device].put(item)
+
+        for f in deps:
+            f.add_done_callback(_one_done)
+
+    def _submit(self, device: int, fn: Callable[[], Any], *,
+                reads: Sequence[int] = (), writes: Sequence[int] = (),
+                extra_deps: Sequence["_cf.Future"] = ()) -> "_cf.Future":
+        # stopped-check and registration are atomic under the issue lock so
+        # no item can land behind stop_all's close sentinel (a worker that
         # already exited would leave the submitter blocked forever)
         with self.locks[device]:
             if self._stopped[device]:
                 raise DeviceStoppedError(f"device {device} is stopped")
             fut: "_cf.Future" = _cf.Future()
-            self._queues[device].put(_WorkItem(fn, fut))
-            return fut
+            deps = self._stream_deps(device, fut, reads, writes, extra_deps)
+            out = self._outstanding[device]
+            if len(out) > 64:                # prune settled commands in place
+                out[:] = [f for f in out if not f.done()]
+            out.append(fut)
+        self._gate(device, _WorkItem(fn, fut), deps)
+        return fut
 
-    def _submit_async(self, device: int, fn: Callable[[], Any]) -> "_cf.Future":
+    def _submit_async(self, device: int, fn: Callable[[], Any], *,
+                      reads: Sequence[int] = (), writes: Sequence[int] = (),
+                      extra_deps: Sequence["_cf.Future"] = ()) -> "_cf.Future":
         """Enqueue fire-and-forget; failures surface at the next sync op."""
-        fut = self._submit(device, fn)
+        fut = self._submit(device, fn, reads=reads, writes=writes,
+                           extra_deps=extra_deps)
 
         def _stash(f: "_cf.Future") -> None:
             err = f.exception()
@@ -219,18 +349,53 @@ class DevicePool:
         if err is not None:
             raise err
 
+    def _traced(self, device: int, cmd: Command,
+                fn: Callable[[], Any]) -> Callable[[], Any]:
+        """Wrap ``fn`` to log the command in execution (not issue) order.
+
+        No lock: only device ``d``'s single worker thread appends to
+        ``stream_traces[d]`` (readers synchronize via :meth:`sync`)."""
+
+        def run():
+            self.stream_traces[device].append(cmd)
+            return fn()
+
+        return run
+
+    def open_reader(self, device: int, handles: Sequence[int]) -> StreamTicket:
+        """Register a reader of ``handles`` ahead of the EXEC that uses them.
+
+        Returns a :class:`StreamTicket` whose ``deps`` are the handles' last
+        writers at registration time (pass them to the EXEC via
+        ``extra_deps``) and which, while open, blocks any later writer of
+        the handles.  Call under the device's data-environment lock so no
+        refresh can slip between a present-table match and the registration;
+        close it (always — use try/finally) once the EXEC has consumed the
+        content.
+        """
+        with self.locks[device]:
+            lw, rd = self._last_write[device], self._readers[device]
+            fut: "_cf.Future" = _cf.Future()
+            deps: Dict[int, "_cf.Future"] = {}
+            for h in handles:
+                f = lw.get(h)
+                if f is not None and not f.done():
+                    deps[id(f)] = f
+            for h in dict.fromkeys(handles):
+                self._note_reader(rd, h, fut)
+            return StreamTicket(list(deps.values()), fut)
+
     def sync(self, device: Optional[int] = None) -> None:
-        """Barrier: wait until (one or all) device queues are drained."""
+        """Barrier: wait until every command issued so far has settled."""
         devs = range(len(self.devices)) if device is None else [device]
-        futs = []
+        futs: List["_cf.Future"] = []
         for d in devs:
-            try:
-                if not self._stopped[d]:
-                    futs.append(self._submit(d, lambda: None))
-            except DeviceStoppedError:
-                pass                         # stopped concurrently: drained
-        for f in futs:
-            f.result()
+            with self.locks[d]:
+                futs.extend(self._outstanding[d])
+                self._outstanding[d][:] = [
+                    f for f in self._outstanding[d] if not f.done()]
+        if futs:
+            _cf.wait(futs)
         for d in devs:
             self._raise_async(d)
 
@@ -278,54 +443,69 @@ class DevicePool:
         with self.locks[device]:
             handle = self.mirrors[device].reserve(shape, dtype)  # 0x999 mark
             cmd = Command("ALLOC", device, handle=handle,
-                          nbytes=self.mirrors[device].nbytes(handle), tag=tag)
+                          nbytes=self.mirrors[device].nbytes(handle), tag=tag,
+                          writes=(handle, SLOT_STREAM))
             self._log(cmd)
             payload = {"shape": tuple(shape), "dtype": dtype}
             self._submit_async(
-                device, lambda: self.devices[device].execute(cmd, self.table, payload))
+                device,
+                self._traced(device, cmd,
+                             lambda: self.devices[device].execute(cmd, self.table, payload)),
+                writes=cmd.writes)
             return handle
 
     def free(self, device: int, handle: int) -> None:
         with self.locks[device]:
             self.mirrors[device].free(handle)
-            cmd = Command("FREE", device, handle=handle)
+            cmd = Command("FREE", device, handle=handle,
+                          writes=(handle, SLOT_STREAM))
             self._log(cmd)
             self._submit_async(
-                device, lambda: self.devices[device].execute(cmd, self.table))
+                device,
+                self._traced(device, cmd,
+                             lambda: self.devices[device].execute(cmd, self.table)),
+                writes=cmd.writes)
 
     def transfer_to(self, device: int, handle: int, value: Any,
-                    section: Optional[slice] = None, tag: str = "") -> None:
+                    section: Optional[slice] = None, tag: str = "") -> "_cf.Future":
         value = jnp.asarray(value)
         nbytes = value.size * value.dtype.itemsize
         with self.locks[device]:
-            cmd = Command("XFER_TO", device, handle=handle, nbytes=nbytes, tag=tag)
+            cmd = Command("XFER_TO", device, handle=handle, nbytes=nbytes,
+                          tag=tag, writes=(handle,))
             self._log(cmd)
             self.cost.record_transfer("to", device, nbytes, tag=tag)
             payload = {"value": value, "section": section}
-            self._submit_async(
-                device, lambda: self.devices[device].execute(cmd, self.table, payload))
+            return self._submit_async(
+                device,
+                self._traced(device, cmd,
+                             lambda: self.devices[device].execute(cmd, self.table, payload)),
+                writes=cmd.writes)
 
     def transfer_from(self, device: int, handle: int,
                       section: Optional[slice] = None, tag: str = "") -> jax.Array:
         with self.locks[device]:
-            cmd = Command("XFER_FROM", device, handle=handle, tag=tag)
+            cmd = Command("XFER_FROM", device, handle=handle, tag=tag,
+                          reads=(handle,))
             self._log(cmd)
             payload = {"section": section}
             fut = self._submit(
                 device,
-                lambda: jax.block_until_ready(
-                    self.devices[device].execute(cmd, self.table, payload)))
+                self._traced(device, cmd,
+                             lambda: jax.block_until_ready(
+                                 self.devices[device].execute(cmd, self.table, payload))),
+                reads=cmd.reads)
         out = fut.result()
         self._raise_async(device)
         nbytes = out.size * out.dtype.itemsize
         self.cost.record_transfer("from", device, nbytes, tag=tag)
         return out
 
-    def transfer_to_writeback(self, device: int, handle: int, value: Any) -> None:
+    def transfer_to_writeback(self, device: int, handle: int, value: Any) -> "_cf.Future":
         """Device-local write-back of a kernel result (no host↔device traffic).
 
-        Queued like every other command so it lands between the region's
-        EXEC and XFER_FROM in the device's command stream.
+        A writer of ``handle`` in the device stream: it runs after the
+        region's EXEC (a registered reader) and before any later consumer.
         """
         value = jnp.asarray(value)
 
@@ -334,16 +514,31 @@ class DevicePool:
             dev.store.free(handle)
             dev.store.install(handle, dev._place(value))
 
-        self._submit_async(device, wb)
+        return self._submit_async(device, wb, writes=(handle,))
 
     def exec_kernel(self, device: int, kernel_name: str,
                     buffers: Dict[str, Any],
                     firstprivate: Optional[Dict[str, Any]] = None,
                     trees: Optional[Dict[str, Any]] = None,
-                    static_argnames: Sequence[str] = (), tag: str = "") -> Any:
+                    static_argnames: Sequence[str] = (), tag: str = "",
+                    skip_reads: Sequence[int] = (),
+                    extra_deps: Sequence["_cf.Future"] = ()) -> Any:
+        """Run a kernel; reads are derived from the mapped buffer handles.
+
+        ``skip_reads`` names handles an open :class:`StreamTicket` already
+        covers — registering them again would deadlock on a writer that is
+        itself waiting on the ticket; their ordering arrives via
+        ``extra_deps`` (the ticket's captured last-writer futures) instead.
+        """
         index = self.table.index_of(kernel_name)   # name → wire integer
+        all_handles: List[int] = []
+        for h in buffers.values():
+            all_handles.extend(h if isinstance(h, (list, tuple)) else [h])
+        skip = set(skip_reads)
+        reads = tuple(h for h in all_handles if h not in skip)
         with self.locks[device]:
-            cmd = Command("EXEC", device, kernel_index=index, tag=tag or kernel_name)
+            cmd = Command("EXEC", device, kernel_index=index,
+                          tag=tag or kernel_name, reads=tuple(all_handles))
             self._log(cmd)
             payload = {"buffers": buffers, "firstprivate": firstprivate or {},
                        "trees": trees or {},
@@ -355,7 +550,8 @@ class DevicePool:
                 out = jax.block_until_ready(out)
                 return out, time.perf_counter() - t0
 
-            fut = self._submit(device, run_exec)
+            fut = self._submit(device, self._traced(device, cmd, run_exec),
+                               reads=reads, extra_deps=extra_deps)
         out, seconds = fut.result()
         self._raise_async(device)
         self.cost.record_compute(device, seconds, tag=tag or kernel_name)
@@ -370,32 +566,47 @@ class DevicePool:
                     continue
                 cmd = Command("STOP", i)
                 self._log(cmd)
-                futs.append(self._submit(
-                    i, lambda cmd=cmd, i=i: self.devices[i].execute(cmd, self.table)))
+                # STOP runs after every outstanding command has settled;
+                # _submit would refuse once the stopped flag is up, so gate
+                # it by hand on a snapshot of the in-flight futures.
+                deps = [f for f in self._outstanding[i] if not f.done()]
+                fut: "_cf.Future" = _cf.Future()
+                self._outstanding[i].append(fut)
                 self._stopped[i] = True
-                self._queues[i].put(None)    # worker exits after STOP
+            self._gate(i, _WorkItem(
+                self._traced(i, cmd,
+                             lambda i=i, cmd=cmd: self.devices[i].execute(cmd, self.table)),
+                fut), deps)
+            # worker exits once STOP has executed; nothing can trail it
+            # (every earlier command is a dependency of STOP, and the
+            # stopped flag refuses new submissions)
+            fut.add_done_callback(lambda _f, i=i: self._queues[i].put(None))
+            futs.append(fut)
         for f in futs:
             f.result()
 
     # -- declare-target globals (paper §4.2 last ¶) ---------------------------
     def install_global(self, name: str, value: Any, tag: str = "") -> int:
-        """Install a global on EVERY device at the same handle, pre-user-code.
+        """Install a global on EVERY device, pre-user-code.
 
         Paper: "All nodes place the addresses of global variables in their
         arrays at the beginning of the execution and in the same order."
-        The one-shot broadcast cost is recorded (it is what makes the
-        alignment workload scale: invariant data moves once).
+        When installation really does precede all user allocations the
+        first-fit handles agree across devices; a buffer already pinned on
+        one device (``ensure_resident``) shifts that device's slot, so the
+        handle is tracked per device.  Returns device 0's handle.  The
+        one-shot broadcast cost is recorded (it is what makes the alignment
+        workload scale: invariant data moves once).
         """
         value = jnp.asarray(value)
         if name in self.globals:            # idempotent re-install (re-runs)
             old = self.globals.pop(name)
-            for i in range(len(self.devices)):
-                self.free(i, old)
-        handles = []
+            for i, h in old.items():
+                self.free(i, h)
+        handles: Dict[int, int] = {}
         for i in range(len(self.devices)):
             h = self.alloc(i, value.shape, value.dtype, tag=f"global:{name}")
             self.transfer_to(i, h, value, tag=tag or f"global:{name}")
-            handles.append(h)
-        assert len(set(handles)) == 1, "global handle mismatch across devices"
-        self.globals[name] = handles[0]
+            handles[i] = h
+        self.globals[name] = handles
         return handles[0]

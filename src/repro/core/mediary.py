@@ -142,6 +142,15 @@ class PresentEntry:
     # the first elision hit consumes this debit so "bytes elided" reports
     # net savings vs a per-region baseline, not gross region elisions
     debit: int = 0
+    # per-leaf future of the last command that wrote the device copy (the
+    # enter/refresh XFER_TO or a device_out writeback).  A consumer that
+    # matched this entry orders its EXEC after these; the stream's
+    # write-after-read tracking orders the *next* writer after the EXEC.
+    write_futs: List[Any] = field(default_factory=list)
+    # the device copy has advanced past host_leaves (a ``device_out`` map
+    # wrote it on-device and nothing fetched it yet); host-value matches
+    # must miss until fetch_resident or a refresh reconciles the two sides
+    device_ahead: bool = False
 
     def nbytes(self) -> int:
         return sum(int(np.prod(s.shape, dtype=np.int64)) * jnp.dtype(s.dtype).itemsize
@@ -195,7 +204,8 @@ class PresentTable:
         the entry (refcount++); pair with :meth:`release`.
         """
         e = self._entries.get(name)
-        if (e is None or not same_treedef(e.treedef, treedef)
+        if (e is None or e.device_ahead
+                or not same_treedef(e.treedef, treedef)
                 or len(e.host_leaves) != len(leaves)
                 or any(a is not b or not isinstance(b, jax.Array)
                        for a, b in zip(e.host_leaves, leaves))):

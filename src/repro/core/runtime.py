@@ -58,6 +58,7 @@ class ClusterRuntime:
             self.pool = DevicePool.from_config(cfg.nodes, table=table, link=cfg.link)
         self.ex = TargetExecutor(self.pool, max_host_threads=cfg.max_host_threads)
         self._ef_residual: Optional[Any] = None
+        self._dps: Optional[Dict[str, Any]] = None   # data_parallel_step state
 
     # convenience passthroughs -------------------------------------------------
     @property
@@ -123,8 +124,11 @@ class ClusterRuntime:
                                  c, is_leaf=lambda y: isinstance(y, comp.Compressed)))
                 # compression replaces the raw from-transfer bytes: credit the
                 # difference back as a zero-latency adjustment (the messages
-                # already happened; only their size changes)
-                raw = sum(np.prod(l.shape) * l.dtype.itemsize for l in jax.tree.leaves(g))
+                # already happened; only their size changes).  int64 product,
+                # as in PresentEntry.nbytes — a >2³¹-element leaf must not
+                # wrap the credit
+                raw = sum(int(np.prod(l.shape, dtype=np.int64)) * l.dtype.itemsize
+                          for l in jax.tree.leaves(g))
                 self.cost.record_adjustment("from", d, int(nbytes - raw),
                                             tag=f"{tag}:compress-credit")
                 reconstructed.append(comp.tree_decompress(c, g))
@@ -136,7 +140,7 @@ class ClusterRuntime:
         else:
             # direct: model ring all-reduce among devices; the host fetch that
             # already happened is credited back except one result copy.
-            param_bytes = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+            param_bytes = sum(int(np.prod(l.shape, dtype=np.int64)) * l.dtype.itemsize
                               for l in jax.tree.leaves(grads[0]))
             for d in range(1, D):
                 self.cost.record_adjustment("from", d, -param_bytes,
@@ -145,6 +149,113 @@ class ClusterRuntime:
             self.cost.record_transfer("from", 0, int(2 * (D - 1) / D * param_bytes),
                                       n_messages=2 * (D - 1), tag=f"{tag}:ring")
             mean = jax.tree.map(lambda *g: sum(g) / D, *grads)
+        return mean
+
+    # -- device-resident optimizer: local AdamW steps, periodic param sync ----
+    def data_parallel_step(self, kernel: str, params: Any, batches: Sequence[Any],
+                           *, opt_cfg: Optional[Any] = None, sync_every: int = 4,
+                           tag: str = "dps") -> Any:
+        """One local-update DP step with a device-resident optimizer.
+
+        ``kernel`` is a registered ``(params, batch) -> {"grads": pytree}``
+        kernel.  Unlike :meth:`data_parallel_grads` + a host-side update —
+        which fetches every device's gradients every step (``D·|g|``
+        from-bytes) and re-broadcasts updated parameters — each device here
+        keeps ``params`` and the AdamW moments *resident* and applies the
+        update on-device (``device_out`` maps: the fused grad+AdamW kernel's
+        results are written back into the present entries, nothing crosses
+        the wire).  Only every ``sync_every``-th step does the host fetch
+        each device's parameters, average them, and push the average back —
+        the local-SGD/model-averaging exchange.  Over S steps the funnel's
+        from-traffic drops from ``S·D·|g|`` to ``(S/sync_every)·D·|p|``,
+        ~``sync_every``× fewer bytes when ``|g| == |p|``.
+
+        Returns the host's current parameter view: the freshly averaged
+        parameters on sync steps, the last synced value otherwise.  State
+        (resident buffers, step counter) lives on the runtime; the first
+        call initializes it from ``params`` and later calls ignore the
+        argument.  Hyperparameters come from ``opt_cfg`` (an
+        :class:`~repro.optim.adamw.AdamWConfig`, default settings if None)
+        and travel as firstprivate scalars.
+        """
+        from ..optim.adamw import AdamWConfig, adamw_update
+
+        D = len(self.pool)
+        assert len(batches) == D, f"need one batch per device, got {len(batches)}"
+        if sync_every < 1:
+            raise ValueError(f"sync_every must be >= 1, got {sync_every}")
+        st = self._dps
+        if st is None or st["kernel"] != kernel:
+            if st is not None:      # switching kernels: release the previous
+                                    # resident state so nothing leaks and a
+                                    # new param shape re-initializes cleanly
+                for d in range(D):
+                    self.ex.exit_data(d, "_dps_params", "_dps_mu",
+                                      "_dps_nu", "_dps_count")
+            cfg = opt_cfg or AdamWConfig()
+            step_kernel = f"__dps_{kernel}"
+            if step_kernel not in self.pool.table:
+                gfn = self.pool.table.lookup(self.pool.table.index_of(kernel)).fn
+
+                def fused(params, batch, mu, nu, count, lr, b1, b2, eps,
+                          weight_decay, clip_norm):
+                    grads = gfn(params, batch)["grads"]
+                    return adamw_update(params, grads, mu, nu, count, lr=lr,
+                                        b1=b1, b2=b2, eps=eps,
+                                        weight_decay=weight_decay,
+                                        clip_norm=clip_norm)
+
+                self.pool.table.register(step_kernel, fused)
+            moments = jax.tree.map(
+                lambda p: jnp.zeros(jnp.shape(p), jnp.float32), params)
+            # "_dps_"-namespaced entries (single underscore: a double-underscore
+            # kwarg inside a class body would be name-mangled by Python): a user's own "params" data
+            # environment (e.g. data_parallel_grads) must not collide with
+            # the optimizer's resident state
+            for d in range(D):
+                self.ex.ensure_resident(d, f"{tag}:init", _dps_params=params,
+                                        _dps_mu=moments, _dps_nu=moments,
+                                        _dps_count=jnp.zeros((), jnp.float32))
+            st = self._dps = {"kernel": kernel, "step_kernel": step_kernel,
+                              "cfg": cfg, "step": 0, "host_params": params}
+        if opt_cfg is not None:     # per-call hyperparameters are honored
+            st["cfg"] = opt_cfg
+        cfg = st["cfg"]
+        st["step"] += 1
+        lr = cfg.lr(st["step"]) if callable(cfg.lr) else cfg.lr
+        fp = {"lr": float(lr), "b1": cfg.b1, "b2": cfg.b2, "eps": cfg.eps,
+              "weight_decay": cfg.weight_decay, "clip_norm": cfg.clip_norm}
+        alias = {"params": "_dps_params", "mu": "_dps_mu",
+                 "nu": "_dps_nu", "count": "_dps_count"}
+        futs = [self.ex.target(
+            st["step_kernel"], d,
+            MapSpec(to={"batch": batches[d]}, present=alias, device_out=alias,
+                    firstprivate=fp),
+            nowait=True, tag=f"{tag}[{d}]") for d in range(D)]
+        try:
+            self.ex.drain(futs)
+        except BaseException:
+            # a partial failure leaves devices at divergent step counts; a
+            # later sync would silently average divergent parameters.  Poison
+            # the state so the next call re-initializes (releasing the old
+            # entries) from its ``params`` argument instead.
+            st["kernel"] = None
+            raise
+        if st["step"] % sync_every == 0:
+            self.data_parallel_sync(tag)
+        return st["host_params"]
+
+    def data_parallel_sync(self, tag: str = "dps") -> Any:
+        """Force a parameter sync now (fetch, average, push); returns them."""
+        st = self._dps
+        if st is None:
+            raise RuntimeError("data_parallel_step has not run yet")
+        D = len(self.pool)
+        views = [self.ex.fetch_resident(d, "_dps_params") for d in range(D)]
+        mean = jax.tree.map(lambda *p: sum(p) / D, *views)
+        for d in range(D):
+            self.ex.ensure_resident(d, f"{tag}:sync", _dps_params=mean)
+        st["host_params"] = mean
         return mean
 
     def speedup_report(self, serial_seconds: float) -> Dict[str, float]:

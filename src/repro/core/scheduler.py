@@ -257,15 +257,21 @@ def wavefront_offload(ex: TargetExecutor, tasks: Sequence[DagTask], *,
     re-sent to the consumer — the comm pattern that makes sparselu lose
     (paper §5.6: "the whole array must be transferred two times").
 
-    ``resident=True`` (serial dispatch only) pins each task's plain input
-    buffers in the device's data environment for the duration of the wave,
-    so a value consumed by several tasks on the same device (e.g. the pivot
-    block LU in sparselu's fwd/bdiv fan-out) crosses the wire once per
-    device per wave instead of once per task.
+    ``resident=True`` pins the wave's *shared* plain input buffers — a
+    (device, name) whose value is identical across several tasks, e.g. the
+    pivot block LU in sparselu's fwd/bdiv fan-out — in the device's data
+    environment for the duration of the wave, so each crosses the wire once
+    per device per wave instead of once per task.  This composes with
+    ``nowait=True``: pins are taken under the data-environment lock before
+    dispatch, and the dependency-aware device stream orders each region's
+    EXEC between the pinned content's producer transfer and any later
+    refresh of the same name — concurrent regions share present-table
+    entries without racing.  Should a name still be refreshed mid-wave (a
+    pin colliding with a pre-existing resident entry), an in-flight region
+    that matched the older version keeps its ordering (its EXEC runs before
+    the refresh lands), it simply stops eliding.  Pins are released only
+    after the whole wave has settled.
     """
-    if resident and nowait:
-        raise ValueError("resident=True requires serial dispatch (nowait=False): "
-                         "concurrent regions would race on shared buffer names")
     results: Dict[str, Any] = {}
     remaining = {t.name: t for t in tasks}
     wave_idx = 0
@@ -273,44 +279,68 @@ def wavefront_offload(ex: TargetExecutor, tasks: Sequence[DagTask], *,
         ready = [t for t in remaining.values() if all(d in results for d in t.deps)]
         if not ready:
             raise ValueError(f"dependency cycle among {sorted(remaining)}")
-        if nowait:
-            futs = []
+        entered: List[Tuple[int, str]] = []
+        futs: List[Tuple[DagTask, TargetFuture]] = []
+        joined = False
+        try:
+            plans: List[Tuple[DagTask, int, MapSpec]] = []
             for j, t in enumerate(ready):
                 dev = t.device if t.device is not None else j % len(ex.pool)
-                dep_vals = {d: results[d] for d in t.deps}
-                futs.append((t, ex.target(t.kernel, dev, t.make_maps(dep_vals),
-                                          nowait=True, tag=f"{tag}:w{wave_idx}:{t.name}")))
-            outs = ex.drain([f for _, f in futs])   # retires even on failure
-            for (t, _), out in zip(futs, outs):
-                results[t.name] = out[out_name]
-                del remaining[t.name]
-        else:
-            entered: List[Tuple[int, Tuple[str, ...]]] = []
-            try:
-                for j, t in enumerate(ready):
-                    dev = t.device if t.device is not None else j % len(ex.pool)
-                    dep_vals = {d: results[d] for d in t.deps}
-                    maps = t.make_maps(dep_vals)
-                    if resident:
-                        pinned = []
-                        for n, v in {**maps.to, **maps.tofrom}.items():
-                            leaves, _ = _flatten_map_value(v)
-                            if any(isinstance(l, Section) for l in leaves):
-                                continue   # sections differ per task: not pinnable
-                            try:
-                                ex.enter_data(dev, f"{tag}:w{wave_idx}",
-                                              **{n: v})
-                                pinned.append(n)
-                            except ValueError:
-                                pass       # shape changed under this name: skip pin
-                        if pinned:
-                            entered.append((dev, tuple(pinned)))
+                plans.append((t, dev, t.make_maps({d: results[d] for d in t.deps})))
+            if resident:
+                # pin only values genuinely shared: a (device, name) whose
+                # plain to/tofrom value is identical across >=2 of the wave's
+                # tasks.  Pinning per-task-varying values would gain nothing
+                # and each refresh could race an in-flight sibling region out
+                # of its elision (value-correct either way, but the byte
+                # savings would depend on thread scheduling).
+                usage: Dict[Tuple[int, str], List[Tuple[Tuple[int, ...], Any]]] = {}
+                for _, dev, maps in plans:
+                    # to-maps only: tofrom buffers are written back per task,
+                    # and two regions sharing one pinned output handle would
+                    # fetch each other's results
+                    for n, v in maps.to.items():
+                        leaves, _ = _flatten_map_value(v)
+                        if any(isinstance(l, Section) for l in leaves):
+                            continue   # sections differ per task: not pinnable
+                        usage.setdefault((dev, n), []).append(
+                            (tuple(id(l) for l in leaves), v))
+                for (dev, n), uses in usage.items():
+                    if len(uses) < 2 or len({k for k, _ in uses}) != 1:
+                        continue       # unique or conflicting values: no pin
+                    try:
+                        ex.enter_data(dev, f"{tag}:w{wave_idx}", **{n: uses[0][1]})
+                        entered.append((dev, n))
+                    except ValueError:
+                        pass           # shape changed under this name: skip pin
+            for t, dev, maps in plans:
+                if nowait:
+                    futs.append((t, ex.target(t.kernel, dev, maps, nowait=True,
+                                              tag=f"{tag}:w{wave_idx}:{t.name}")))
+                else:
                     results[t.name] = ex.target(
                         t.kernel, dev, maps, nowait=False,
                         tag=f"{tag}:w{wave_idx}:{t.name}")[out_name]
                     del remaining[t.name]
-            finally:
-                for dev, names in entered:  # wave boundary: release pins
-                    ex.exit_data(dev, *names)
+            if futs:
+                # drain waits for EVERY region to settle (even past a
+                # failure), so the pin release below can never pull a
+                # buffer out from under a still-running region
+                joined = True
+                outs = ex.drain([f for _, f in futs])
+                for (t, _), out in zip(futs, outs):
+                    results[t.name] = out[out_name]
+                    del remaining[t.name]
+        finally:
+            if futs and not joined:
+                # a mid-dispatch failure (a later task's make_maps or launch
+                # raised): the already-launched regions must still be joined
+                # and retired before their pins are released
+                try:
+                    ex.drain([f for _, f in futs])
+                except BaseException:
+                    pass               # the dispatch error propagates
+            for dev, n in entered:      # wave boundary: release pins
+                ex.exit_data(dev, n)
         wave_idx += 1
     return results

@@ -17,10 +17,21 @@ dict ``{name: new_value}`` for every ``from_``/``tofrom`` name; the runtime
 writes results back into the mediary store and transfers them to the host.
 
 ``nowait=True`` returns a :class:`TargetFuture`; the host thread continues and
-may offload to *other* devices concurrently (paper §4.2's per-device mutex
-discipline is enforced by the pool).  ``taskwait()`` joins everything;
+may offload concurrently — to other devices, or to the *same* device: the
+pool's dependency-aware stream orders commands per buffer handle, so two
+regions sharing a resident name serialize exactly where their data
+dependencies demand and nowhere else.  ``taskwait()`` joins everything;
 ``drain(futs)`` joins exactly the given futures (scoped — concurrent callers'
-in-flight regions are untouched).
+in-flight regions are untouched) and always waits for all of them to settle
+before retiring them.
+
+Beyond the four OpenMP map types, ``MapSpec.present`` names buffers that
+MUST already be resident (OpenMP's ``present`` modifier: the handles bind
+directly, no host value travels) and ``MapSpec.device_out`` names outputs
+written back into a present entry **on the device** and not fetched — the
+entry is marked *device-ahead* until :meth:`TargetExecutor.fetch_resident`
+reconciles it.  Together they let a kernel chain state fully on-device
+(``ClusterRuntime.data_parallel_step``'s fused grad+AdamW update).
 
 Device data environments (OpenMP ``target data`` / ``target enter data``):
 :meth:`TargetExecutor.enter_data` pins named buffers on a device in the
@@ -44,7 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .device import DevicePool, DeviceStoppedError
+from .device import DevicePool, DeviceStoppedError, StreamTicket
 from .mediary import PresentEntry, same_treedef
 
 
@@ -79,10 +90,24 @@ class MapSpec:
     alloc: Dict[str, jax.ShapeDtypeStruct] = field(default_factory=dict)
     firstprivate: Dict[str, Any] = field(default_factory=dict)
     use_globals: Tuple[str, ...] = ()                       # declare-target vars, no transfer
+    # OpenMP's ``present`` map-type modifier: the name MUST already be
+    # resident on the device; its handles bind directly (no host value
+    # travels, so it works even when the device copy is ahead of the host).
+    # Either a tuple of names, or a dict aliasing the kernel's parameter
+    # name to a (possibly namespaced) present-table entry name — so a
+    # runtime can pin e.g. "__dps_params" without colliding with a user's
+    # own "params" data environment.
+    present: Any = ()                  # Tuple[str, ...] | Dict[str, str]
+    # device-resident outputs: the kernel must return these names, the
+    # result is written back into the (required-present) entry on-device
+    # and NOT fetched — the entry is marked device-ahead instead.  Same
+    # alias forms as ``present``.
+    device_out: Any = ()               # Tuple[str, ...] | Dict[str, str]
 
     def all_names(self) -> List[str]:
         return (list(self.to) + list(self.from_) + list(self.tofrom)
-                + list(self.alloc) + list(self.use_globals))
+                + list(self.alloc) + list(self.use_globals)
+                + list(_alias_map(self.present)) + list(_alias_map(self.device_out)))
 
 
 class TargetFuture:
@@ -103,6 +128,13 @@ def _as_spec(x: Any) -> jax.ShapeDtypeStruct:
         return x
     a = jnp.asarray(x)
     return jax.ShapeDtypeStruct(a.shape, a.dtype)
+
+
+def _alias_map(x: Any) -> Dict[str, str]:
+    """Normalize a present/device_out clause: kernel kwarg -> entry name."""
+    if isinstance(x, Mapping):
+        return dict(x)
+    return {n: n for n in x}
 
 
 def _flatten_map_value(val: Any) -> Tuple[List[Any], Any]:
@@ -152,8 +184,13 @@ class TargetExecutor:
         try:
             return [f.result() for f in futs]
         finally:
-            # retire even when a region failed: a settled-but-failed future
-            # left registered would re-raise at an unrelated later taskwait
+            # an early failure must not retire still-running regions: they
+            # would keep executing unjoined against state the caller may
+            # tear down — wait for every future to settle first.  Retire
+            # even the failed ones: a settled-but-failed future left
+            # registered would re-raise at an unrelated later taskwait.
+            if futs:
+                _cf.wait([f._fut for f in futs])
             self.retire(futs)
 
     def retire(self, futs: Iterable[TargetFuture]) -> None:
@@ -205,17 +242,27 @@ class TargetExecutor:
         with pool.env_locks[device]:
             ent = pool.present[device].get(name)
             if ent is None:
-                hs, specs, hosts = [], [], []
-                for leaf in leaves:
-                    v = jnp.asarray(leaf)
-                    h = pool.alloc(device, v.shape, v.dtype, tag=f"{tag}:{name}")
-                    pool.transfer_to(device, h, v, tag=f"{tag}:{name}")
-                    hs.append(h)
-                    specs.append(jax.ShapeDtypeStruct(v.shape, v.dtype))
-                    hosts.append(leaf)
+                hs, specs, hosts, wfuts = [], [], [], []
+                try:
+                    for leaf in leaves:
+                        v = jnp.asarray(leaf)
+                        h = pool.alloc(device, v.shape, v.dtype, tag=f"{tag}:{name}")
+                        hs.append(h)
+                        wfuts.append(pool.transfer_to(device, h, v,
+                                                      tag=f"{tag}:{name}"))
+                        specs.append(jax.ShapeDtypeStruct(v.shape, v.dtype))
+                        hosts.append(leaf)
+                except BaseException:
+                    # a later leaf failed (unconvertible value, stopped
+                    # device): free the allocations already made so nothing
+                    # leaks on the device or its mirror
+                    with contextlib.suppress(DeviceStoppedError):
+                        for h in hs:
+                            pool.free(device, h)
+                    raise
                 entry = PresentEntry(
                     name=name, handles=hs, treedef=treedef,
-                    host_leaves=hosts, specs=specs)
+                    host_leaves=hosts, specs=specs, write_futs=wfuts)
                 entry.debit = entry.nbytes()
                 pool.present[device].add(entry)
             else:
@@ -242,8 +289,12 @@ class TargetExecutor:
         stale = []
         for i, leaf in enumerate(leaves):
             # mutable host arrays (numpy) can change under the same identity,
-            # so only immutable jax.Array leaves count as unchanged
-            if leaf is ent.host_leaves[i] and isinstance(leaf, jax.Array):
+            # so only immutable jax.Array leaves count as unchanged; and a
+            # refresh of a device-ahead entry re-sends EVERY leaf (host-
+            # authoritative overwrite) — a partial push would leave the
+            # device a mix of host and device-advanced content
+            if (not ent.device_ahead and leaf is ent.host_leaves[i]
+                    and isinstance(leaf, jax.Array)):
                 continue
             v = jnp.asarray(leaf)
             if v.shape != ent.specs[i].shape or v.dtype != jnp.dtype(ent.specs[i].dtype):
@@ -253,12 +304,16 @@ class TargetExecutor:
                     f"exit_data it first")
             stale.append((i, leaf, v))
         for i, leaf, v in stale:
-            pool.transfer_to(device, ent.handles[i], v, tag=f"{tag}:{ent.name}")
+            fut = pool.transfer_to(device, ent.handles[i], v,
+                                   tag=f"{tag}:{ent.name}")
+            if i < len(ent.write_futs):
+                ent.write_futs[i] = fut
             ent.host_leaves[i] = leaf
             ent.debit += int(np.prod(ent.specs[i].shape, dtype=np.int64)
                              * jnp.dtype(ent.specs[i].dtype).itemsize)
         if stale:
             ent.version += 1
+            ent.device_ahead = False       # the host push wins from here on
 
     def exit_data(self, device: int, *names: str) -> None:
         """``target exit data``: drop one reference; free at zero."""
@@ -287,6 +342,40 @@ class TargetExecutor:
         finally:
             self.exit_data(device, *values.keys())
 
+    def fetch_resident(self, device: int, name: str) -> Any:
+        """Pull a resident buffer's device copy back to the host.
+
+        The read side of ``device_out`` maps: after on-device updates the
+        entry is *device-ahead*; this fetches every leaf, records the
+        fetched values as the entry's host view (so host-value matches work
+        again) and clears the flag.
+        """
+        pool = self.pool
+        with pool.env_locks[device]:
+            ent = pool.present[device].get(name)
+            if ent is None:
+                raise KeyError(f"{name!r} is not resident on device {device}")
+            ent.refcount += 1          # hold the entry: a concurrent
+                                       # exit_data must not free (and first-
+                                       # fit-recycle) the handles mid-fetch
+            handles, treedef = list(ent.handles), ent.treedef
+            seen = (ent.version, tuple(ent.write_futs))
+        try:
+            fetched = [pool.transfer_from(device, h, tag=f"fetch:{name}")
+                       for h in handles]
+            with pool.env_locks[device]:
+                ent = pool.present[device].get(name)
+                # reconcile only if nothing wrote the entry while we fetched —
+                # a concurrent region's device_out advance (new write_futs /
+                # version) must not be clobbered with our pre-advance snapshot
+                if (ent is not None and len(ent.host_leaves) == len(fetched)
+                        and (ent.version, tuple(ent.write_futs)) == seen):
+                    ent.host_leaves = list(fetched)
+                    ent.device_ahead = False
+        finally:
+            self.exit_data(device, name)
+        return fetched[0] if treedef is None else jax.tree.unflatten(treedef, fetched)
+
     # -- region lifecycle (paper §4.1/§4.2) ------------------------------------
     def _run(self, kernel: str, device: int, maps: MapSpec, tag: str) -> Dict[str, jax.Array]:
         pool = self.pool
@@ -294,10 +383,49 @@ class TargetExecutor:
         trees: Dict[str, Any] = {}     # name -> treedef for pytree maps
         owned: List[int] = []    # region-lifetime handles, freed at region end
         retained: List[str] = []  # present-table names released at region end
+        # matched present entries are consumed through a StreamTicket: opened
+        # under the env lock at match time, closed right after EXEC.  The
+        # ticket's deps order our EXEC after the content's producers; the
+        # open registration orders any later writer (a concurrent region's
+        # refresh) after our EXEC — per-handle producer/consumer ordering
+        # instead of serializing whole regions.
+        tickets: Dict[str, StreamTicket] = {}
+        ticketed: set = set()          # handles covered by an open ticket
+        exec_deps: List[Any] = []
+
+        def _retain_ticketed(name: str, ent: PresentEntry) -> List[int]:
+            hs = list(ent.handles)
+            retained.append(name)
+            if name not in tickets:    # same name in two clauses reuses the
+                                       # ticket — overwriting would leak an
+                                       # open reader and wedge later writers
+                t = pool.open_reader(device, hs)
+                tickets[name] = t
+                exec_deps.extend(t.deps)
+            ticketed.update(hs)
+            exec_deps.extend(f for f in ent.write_futs if f is not None)
+            return hs
 
         # The try spans setup too: a failure after a present-table retain or
         # an ALLOC must still release/free in the teardown below.
         try:
+            # 0) present/device_out names bind the resident handles directly;
+            #    no host value travels, so they work on device-ahead entries.
+            present_alias = _alias_map(maps.present)
+            out_alias = _alias_map(maps.device_out)
+            for kwarg, rname in {**present_alias, **out_alias}.items():
+                with pool.env_locks[device]:
+                    ent = pool.present[device].get(rname)
+                    if ent is None:
+                        raise KeyError(
+                            f"map(present) name {rname!r} is not resident on "
+                            f"device {device}; enter_data/ensure_resident it first")
+                    ent.refcount += 1
+                    hs = _retain_ticketed(rname, ent)
+                    treedef = ent.treedef
+                handles[kwarg] = hs[0] if treedef is None else hs
+                if treedef is not None:
+                    trees[kwarg] = treedef
             # 1) ALLOC + XFER_TO for to/tofrom — unless the name is present on
             #    the device with the same host value, in which case the
             #    transfer is elided and the resident handles used directly.
@@ -307,10 +435,9 @@ class TargetExecutor:
                 if not any(isinstance(l, Section) for l in leaves):
                     with pool.env_locks[device]:
                         ent = pool.present[device].match_value(name, leaves, treedef)
-                if ent is not None:
-                    hs = list(ent.handles)
-                    retained.append(name)
-                else:
+                        if ent is not None:
+                            hs = _retain_ticketed(name, ent)
+                if ent is None:
                     hs = []
                     for leaf in leaves:
                         v = leaf.value if isinstance(leaf, Section) else jnp.asarray(leaf)
@@ -328,10 +455,9 @@ class TargetExecutor:
                 specs = [_as_spec(leaf) for leaf in leaves]
                 with pool.env_locks[device]:
                     ent = pool.present[device].match_specs(name, specs, treedef)
-                if ent is not None:
-                    hs = list(ent.handles)
-                    retained.append(name)
-                else:
+                    if ent is not None:
+                        hs = _retain_ticketed(name, ent)
+                if ent is None:
                     hs = []
                     for s in specs:
                         h = pool.alloc(device, s.shape, s.dtype, tag=f"{tag}:{name}")
@@ -341,12 +467,17 @@ class TargetExecutor:
                 if treedef is not None:
                     trees[name] = treedef
             for name in maps.use_globals:
-                handles[name] = pool.globals[name]
+                handles[name] = pool.globals[name][device]
 
             # 2) EXEC — kernel sees device-resident buffers as kwargs, returns
-            #    replacements for from_/tofrom names.
+            #    replacements for from_/tofrom/device_out names.  Ticketed
+            #    handles must not re-register as readers (a writer queued
+            #    behind our ticket would deadlock the EXEC): their ordering
+            #    travels in extra_deps.
             result = pool.exec_kernel(device, kernel, buffers=handles, trees=trees,
-                                      firstprivate=maps.firstprivate, tag=tag)
+                                      firstprivate=maps.firstprivate, tag=tag,
+                                      skip_reads=tuple(ticketed),
+                                      extra_deps=tuple(exec_deps))
             returned: Dict[str, Any] = {}
             if result is not None:
                 if not isinstance(result, Mapping):
@@ -355,9 +486,13 @@ class TargetExecutor:
                         f"got {type(result)}")
                 returned = dict(result)
 
-            # 3) write-back + XFER_FROM for from_/tofrom.
-            out: Dict[str, jax.Array] = {}
-            for name in list(maps.from_) + list(maps.tofrom):
+            # the EXEC has consumed the matched content: release the reader
+            # registrations so writers (our own write-backs, other regions'
+            # refreshes) may proceed.
+            for t in tickets.values():
+                t.close()
+
+            def _ret_leaves(name: str) -> Tuple[List[int], List[Any], Any]:
                 if name not in returned:
                     raise KeyError(f"kernel {kernel!r} did not return mapped output {name!r}")
                 h = handles[name]
@@ -367,20 +502,67 @@ class TargetExecutor:
                     raise ValueError(
                         f"kernel {kernel!r} returned {len(ret_leaves)} leaves "
                         f"for {name!r}, mapped {len(hs)}")
-                fetched = []
-                for hh, leaf in zip(hs, ret_leaves):
-                    pool.transfer_to_writeback(device, hh, leaf)
-                    fetched.append(pool.transfer_from(device, hh, tag=f"{tag}:{name}"))
-                out[name] = (fetched[0] if not isinstance(h, list)
-                             else jax.tree.unflatten(ret_def, fetched))
+                return hs, ret_leaves, ret_def
+
+            def _writeback_ahead(rname: str, hs: List[int], ret_leaves: List[Any],
+                                 bump_version: bool) -> Optional[Tuple[int, Tuple]]:
+                """Mark the entry device-ahead and submit the writebacks in
+                ONE env-lock critical section: a concurrent match must
+                either see device_ahead (and miss) or run entirely before
+                the writeback is even queued — never elide the stale host
+                value yet be stream-ordered after the new content.  Returns
+                a (version, write_futs) snapshot for the reconcile guard."""
+                with pool.env_locks[device]:
+                    ent = pool.present[device].get(rname)
+                    if ent is not None:
+                        ent.device_ahead = True
+                        if bump_version:
+                            ent.version += 1
+                    wfuts = [pool.transfer_to_writeback(device, hh, leaf)
+                             for hh, leaf in zip(hs, ret_leaves)]
+                    if ent is None:
+                        return None
+                    ent.write_futs = wfuts
+                    return (ent.version, tuple(wfuts))
+
+            # 3a) device_out: write back on-device, mark the entry ahead of
+            #     the host, move NOTHING over the wire.
+            for kwarg, rname in out_alias.items():
+                hs, ret_leaves, _ = _ret_leaves(kwarg)
+                _writeback_ahead(rname, hs, ret_leaves, bump_version=True)
+
+            # 3b) write-back + XFER_FROM for from_/tofrom.
+            out: Dict[str, jax.Array] = {}
+            for name in list(maps.from_) + list(maps.tofrom):
+                hs, ret_leaves, ret_def = _ret_leaves(name)
+                fetched: List[Any] = []
                 if name in retained:
-                    # resident output: the device copy advanced — record the
-                    # fetched host value so a later map(to) of it elides.
+                    # resident output: device-ahead until the fetch below
+                    # reconciles the entry with the fetched host value
+                    seen = _writeback_ahead(name, hs, ret_leaves,
+                                            bump_version=False)
+                    for hh in hs:
+                        fetched.append(pool.transfer_from(device, hh,
+                                                          tag=f"{tag}:{name}"))
                     with pool.env_locks[device]:
                         ent = pool.present[device].get(name)
-                        if ent is not None and len(ent.host_leaves) == len(fetched):
+                        # same guard as fetch_resident: only reconcile if no
+                        # concurrent region advanced the entry meanwhile
+                        if (ent is not None and seen is not None
+                                and len(ent.host_leaves) == len(fetched)
+                                and (ent.version, tuple(ent.write_futs)) == seen):
+                            # record the fetched host value so a later
+                            # map(to) of it elides
                             ent.host_leaves = list(fetched)
                             ent.version += 1
+                            ent.device_ahead = False
+                else:
+                    for hh, leaf in zip(hs, ret_leaves):
+                        pool.transfer_to_writeback(device, hh, leaf)
+                        fetched.append(pool.transfer_from(device, hh,
+                                                          tag=f"{tag}:{name}"))
+                out[name] = (fetched[0] if not isinstance(handles[name], list)
+                             else jax.tree.unflatten(ret_def, fetched))
             return out
         finally:
             # 4) region end: free region-lifetime handles on both device and
@@ -390,6 +572,10 @@ class TargetExecutor:
             #    future implies the device reached the same state.  Present
             #    entries only drop the region's reference — data stays
             #    resident until its data environment exits.
+            for t in tickets.values():
+                t.close()              # idempotent; vital on the error path —
+                                       # an open ticket would wedge every
+                                       # later writer of those handles
             try:
                 for h in owned:
                     pool.free(device, h)

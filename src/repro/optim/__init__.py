@@ -1,2 +1,2 @@
-from .adamw import AdamW, AdamWConfig
+from .adamw import AdamW, AdamWConfig, adamw_update
 from .schedule import cosine_warmup

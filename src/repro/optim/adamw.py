@@ -50,6 +50,50 @@ def _decode(m, dtype: str) -> jax.Array:
     return m.astype(jnp.float32)
 
 
+def adamw_update(params: Any, grads: Any, mu: Any, nu: Any, count: jax.Array,
+                 *, lr: float, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 clip_norm: float = 1.0) -> Dict[str, Any]:
+    """One AdamW step as a pure pytree function — the on-device kernel body.
+
+    Same math as :class:`AdamW` with fp32 moments, but stateless and
+    jit-friendly: hyperparameters arrive as plain scalars (``firstprivate``
+    in a target region), ``count`` is a traced fp32 scalar living on the
+    device, and the return dict names every updated buffer so it can back a
+    ``device_out`` map — ``ClusterRuntime.data_parallel_step`` keeps params
+    and both moments resident and never fetches them between syncs.
+    """
+    count = count + 1.0
+    gflat = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in gflat))
+    # jnp.where, not Python `if`: hyperparameters are traced scalars when
+    # this runs as a jitted device kernel with firstprivate arguments
+    scale = jnp.where(clip_norm > 0,
+                      jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9)),
+                      jnp.float32(1.0))
+    b1c = 1 - b1 ** count
+    b2c = 1 - b2 ** count
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        step_dir = (m / b1c) / (jnp.sqrt(v / b2c) + eps)
+        p32 = p.astype(jnp.float32)
+        new_p = p32 - lr * (step_dir + weight_decay * p32)
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, jax.tree.leaves(grads), jax.tree.leaves(mu),
+               jax.tree.leaves(nu))]
+    return {"params": jax.tree.unflatten(tdef, [o[0] for o in out]),
+            "mu": jax.tree.unflatten(tdef, [o[1] for o in out]),
+            "nu": jax.tree.unflatten(tdef, [o[2] for o in out]),
+            "count": count}
+
+
 class AdamW:
     def __init__(self, cfg: AdamWConfig) -> None:
         self.cfg = cfg
