@@ -5,12 +5,14 @@ degradation and proposes MPI collectives as future work.  This benchmark
 runs the same data-parallel gradient exchange under three fabrics:
 
   host-mediated   paper-faithful: every gradient → host, reduce, rebroadcast
-  direct          beyond-paper: modeled ring all-reduce between devices
-  direct+int8     + error-feedback int8 compression on the wire
+  direct          beyond-paper: REAL ring all-reduce over peer SEND/RECV
+                  stream commands; the host fetches one reduced copy
+  direct+int8     + block-int8 wire compression on the peer links
 
-and reports modeled exchange time on the paper's Gbit link for a ~1M-param
-model across device counts.  Compute is identical in all modes (verified);
-only the communication topology changes — isolating the funnel cost.
+and reports modeled exchange time on the paper's Gbit link across device
+counts, splitting host-funnel bytes from peer-link bytes.  Compute is
+identical in all modes (verified); only the communication topology changes
+— isolating the funnel cost.
 
 ``run_resident`` additionally compares per-region parameter mapping (the
 seed's ALLOC/XFER/FREE every step) against resident parameters in the
@@ -18,16 +20,24 @@ device data environment: after the first step, repeated steps move only the
 batch bytes — the transfer-elision win of the present table.
 
 ``run_wavefront`` measures the dependency-aware device stream on the
-paper's worst case: a wavefront DAG dispatched with ``nowait=True``, with
-and without per-wave resident pins.  Shared operands (the pivot-block
-fan-out) cross the wire once per device per wave instead of once per task;
-the function asserts resident moves strictly fewer bytes with identical
-results.
+paper's worst case: a wavefront DAG dispatched with ``nowait=True``, in
+three mappings — per-task operands, per-wave resident pins, and
+``peer=True`` routing (every DAG edge rides the peer fabric instead of
+fetch-then-re-map).  Asserts each step moves strictly fewer host→device
+bytes than the previous, with identical results.
 
-``run_dps`` compares per-step gradient funneling + host update against
-``data_parallel_step`` (device-resident params + AdamW moments, on-device
-update, parameter sync every ``sync_every`` steps) and asserts the
-from-traffic drops.
+``run_dps`` compares three update placements over the same batches: the
+per-step gradient funnel + host AdamW, ``data_parallel_step`` with
+host-mediated parameter syncs, and ``data_parallel_step`` with
+``comm_mode="direct"`` (peer gather → reduce → ring broadcast; ONE mean
+copy crosses the funnel per sync).  Asserts the device-resident optimizer
+cuts from-traffic ≥3× vs the gradient funnel, and that the direct sync
+moves ≥2× fewer host-funnel bytes than host-mediated syncs at equal
+``sync_every`` with BIT-IDENTICAL parameters — the PR-4 acceptance gate.
+
+``--json PATH`` dumps every section's rows (the CI writes
+``artifacts/bench/BENCH_comm.json`` from it, so the perf trajectory is
+tracked commit over commit).
 """
 from __future__ import annotations
 
@@ -93,9 +103,11 @@ def run(d_model: int = 512, n_batch: int = 64,
             s = rt.cost.summary()
             rt.shutdown()
             rows.append({"mode": mode, "devices": n,
-                         "comm_s": s["comm_s"],
+                         "comm_s": s["comm_s"] + s["peer_s"],
                          "bytes_to": s["bytes_to"], "bytes_from": s["bytes_from"],
-                         "exchange_MB": (s["bytes_to"] + s["bytes_from"]) / 1e6})
+                         "bytes_peer": s["bytes_peer"],
+                         "funnel_MB": (s["bytes_to"] + s["bytes_from"]) / 1e6,
+                         "peer_MB": s["bytes_peer"] / 1e6})
             if n == device_counts[-1]:
                 grads_by_mode[mode] = np.asarray(g["w"])
     # numeric agreement between modes (compression within int8 tolerance)
@@ -169,31 +181,47 @@ def run_wavefront(B: int = 64, fan: int = 8, n_dev: int = 2,
                     to={"lu": deps[pname], "a": a}, from_={"out": sds}))()))
         prev = pname
     rows, results = [], {}
-    for resident in (False, True):
+    for mapping, kw in (("per-task", {}), ("resident", {"resident": True}),
+                        ("peer", {"peer": True})):
         rt = ClusterRuntime(RuntimeConfig(n_virtual=n_dev,
                                           link=PAPER_ETHERNET), table=table)
-        results[resident] = wavefront_offload(rt.ex, list(tasks), nowait=True,
-                                              resident=resident)
+        results[mapping] = wavefront_offload(rt.ex, list(tasks), nowait=True,
+                                             **kw)
         s = rt.cost.summary()
         rt.shutdown()
-        rows.append({"mapping": "resident" if resident else "per-task",
+        rows.append({"mapping": mapping,
                      "devices": n_dev, "tasks": len(tasks),
-                     "comm_s": s["comm_s"], "bytes_to": s["bytes_to"],
-                     "MB_to": s["bytes_to"] / 1e6})
-    for k in results[False]:
-        assert np.allclose(results[True][k], results[False][k],
-                           rtol=1e-5, atol=1e-6), k
+                     "comm_s": s["comm_s"] + s["peer_s"],
+                     "bytes_to": s["bytes_to"],
+                     "bytes_peer": s["bytes_peer"],
+                     "MB_to": s["bytes_to"] / 1e6,
+                     "MB_peer": s["bytes_peer"] / 1e6})
+    for mapping in ("resident", "peer"):
+        for k in results["per-task"]:
+            assert np.allclose(results[mapping][k], results["per-task"][k],
+                               rtol=1e-5, atol=1e-6), (mapping, k)
+    # each mapping strictly cuts host→device traffic: pins share a wave's
+    # operands, peer routing takes the DAG's edges off the funnel entirely
     assert rows[1]["bytes_to"] < rows[0]["bytes_to"], rows
+    assert rows[2]["bytes_to"] < rows[1]["bytes_to"], rows
     rows.append({"mapping": "ratio", "devices": n_dev, "tasks": len(tasks),
-                 "comm_s": rows[0]["comm_s"] / max(rows[1]["comm_s"], 1e-12),
-                 "bytes_to": rows[0]["bytes_to"] / max(rows[1]["bytes_to"], 1),
-                 "MB_to": 0.0})
+                 "comm_s": rows[0]["comm_s"] / max(rows[2]["comm_s"], 1e-12),
+                 "bytes_to": rows[0]["bytes_to"] / max(rows[2]["bytes_to"], 1),
+                 "bytes_peer": 0.0, "MB_to": 0.0, "MB_peer": 0.0})
     return rows
 
 
-def run_dps(d_model: int = 256, n_batch: int = 16, n: int = 2,
+def run_dps(d_model: int = 256, n_batch: int = 16, n: int = 4,
             steps: int = 8, sync_every: int = 4) -> List[Dict]:
-    """Per-step gradient funnel + host AdamW vs device-resident local steps."""
+    """Gradient funnel + host AdamW vs device-resident steps, funnel vs
+    direct syncs.
+
+    PR-4 acceptance gate: at D=``n`` and equal ``sync_every``,
+    ``data_parallel_step(comm_mode="direct")`` must move ≥2× fewer
+    host-funnel bytes than host-mediated syncs, with bit-identical
+    parameters (asserted below; the default D=4 measures exactly 4× on the
+    from-direction — one mean copy per sync instead of D).
+    """
     params = _make_params(d_model)
     batches = _make_batches(d_model, n_batch, n)
     rows = []
@@ -208,35 +236,59 @@ def run_dps(d_model: int = 256, n_batch: int = 16, n: int = 2,
     s = rt.cost.summary()
     rt.shutdown()
     rows.append({"update": "host (per-step grads)", "devices": n,
-                 "steps": steps, "comm_s": s["comm_s"],
-                 "bytes_from": s["bytes_from"],
+                 "steps": steps, "comm_s": s["comm_s"] + s["peer_s"],
+                 "bytes_from": s["bytes_from"], "bytes_to": s["bytes_to"],
+                 "bytes_peer": s["bytes_peer"],
                  "MB_from": s["bytes_from"] / 1e6})
 
-    rt = ClusterRuntime(RuntimeConfig(n_virtual=n, link=PAPER_ETHERNET),
-                        table=_make_table(d_model))
-    for _ in range(steps):
-        rt.data_parallel_step("mse_grads", params, batches,
-                              sync_every=sync_every)
-    s = rt.cost.summary()
-    rt.shutdown()
-    rows.append({"update": f"device (sync/{sync_every})", "devices": n,
-                 "steps": steps, "comm_s": s["comm_s"],
-                 "bytes_from": s["bytes_from"],
-                 "MB_from": s["bytes_from"] / 1e6})
+    dps_params = {}
+    for mode in ("host-mediated", "direct"):
+        rt = ClusterRuntime(RuntimeConfig(n_virtual=n, comm_mode=mode,
+                                          link=PAPER_ETHERNET),
+                            table=_make_table(d_model))
+        p = None
+        for _ in range(steps):
+            p = rt.data_parallel_step("mse_grads", params, batches,
+                                      sync_every=sync_every)
+        s = rt.cost.summary()
+        rt.shutdown()
+        dps_params[mode] = p
+        rows.append({"update": f"device {mode} (sync/{sync_every})",
+                     "devices": n, "steps": steps,
+                     "comm_s": s["comm_s"] + s["peer_s"],
+                     "bytes_from": s["bytes_from"], "bytes_to": s["bytes_to"],
+                     "bytes_peer": s["bytes_peer"],
+                     "MB_from": s["bytes_from"] / 1e6})
+    # device-resident optimizer cuts the gradient funnel
     assert rows[0]["bytes_from"] >= 3 * rows[1]["bytes_from"], rows
-    rows.append({"update": "ratio", "devices": n, "steps": steps,
-                 "comm_s": rows[0]["comm_s"] / max(rows[1]["comm_s"], 1e-12),
-                 "bytes_from": rows[0]["bytes_from"] / max(rows[1]["bytes_from"], 1),
-                 "MB_from": 0.0})
+    # acceptance: direct syncs move >=2x fewer host-funnel bytes than
+    # host-mediated syncs at equal sync_every ...
+    assert rows[1]["bytes_from"] >= 2 * rows[2]["bytes_from"], rows
+    assert (rows[1]["bytes_to"] + rows[1]["bytes_from"]
+            >= (rows[2]["bytes_to"] + rows[2]["bytes_from"])
+            + 2 * rows[2]["bytes_from"]), rows
+    assert rows[2]["bytes_peer"] > 0 and rows[1]["bytes_peer"] == 0
+    # ... with BIT-IDENTICAL parameters (the peer reduction preserves the
+    # host association order)
+    for leaf in ("w", "b"):
+        assert np.array_equal(np.asarray(dps_params["host-mediated"][leaf]),
+                              np.asarray(dps_params["direct"][leaf])), leaf
+    rows.append({"update": "ratio (funnel/direct syncs)", "devices": n,
+                 "steps": steps,
+                 "comm_s": rows[1]["comm_s"] / max(rows[2]["comm_s"], 1e-12),
+                 "bytes_from": rows[1]["bytes_from"]
+                 / max(rows[2]["bytes_from"], 1),
+                 "bytes_to": 0.0, "bytes_peer": 0.0, "MB_from": 0.0})
     return rows
 
 
 def render(rows: List[Dict]) -> str:
     out = ["## comm modes (DP gradient exchange, paper link model)",
-           f"{'mode':>14} {'devs':>5} {'comm_s':>9} {'MB moved':>9}"]
+           f"{'mode':>14} {'devs':>5} {'comm_s':>9} {'funnel_MB':>10} "
+           f"{'peer_MB':>8}"]
     for r in rows:
         out.append(f"{r['mode']:>14} {r['devices']:>5} {r['comm_s']:>9.4f} "
-                   f"{r['exchange_MB']:>9.2f}")
+                   f"{r['funnel_MB']:>10.2f} {r['peer_MB']:>8.2f}")
     return "\n".join(out)
 
 
@@ -256,26 +308,30 @@ def render_resident(rows: List[Dict]) -> str:
 
 
 def render_wavefront(rows: List[Dict]) -> str:
-    out = ["## nowait wavefront: per-task operands vs per-wave resident pins",
-           f"{'mapping':>10} {'devs':>5} {'tasks':>6} {'comm_s':>9} {'MB_to':>9}"]
+    out = ["## nowait wavefront: per-task operands vs resident pins vs "
+           "peer routing",
+           f"{'mapping':>10} {'devs':>5} {'tasks':>6} {'comm_s':>9} "
+           f"{'MB_to':>9} {'MB_peer':>8}"]
     for r in rows[:-1]:
         out.append(f"{r['mapping']:>10} {r['devices']:>5} {r['tasks']:>6} "
-                   f"{r['comm_s']:>9.4f} {r['MB_to']:>9.2f}")
+                   f"{r['comm_s']:>9.4f} {r['MB_to']:>9.2f} "
+                   f"{r['MB_peer']:>8.2f}")
     ratio = rows[-1]
-    out.append(f"  → resident pins move {ratio['bytes_to']:.1f}× fewer "
-               f"host→device bytes under concurrent dispatch")
+    out.append(f"  → peer routing moves {ratio['bytes_to']:.1f}× fewer "
+               f"host→device bytes than per-task mapping")
     return "\n".join(out)
 
 
 def render_dps(rows: List[Dict]) -> str:
     out = ["## AdamW update placement (DP, repeated steps)",
-           f"{'update':>22} {'devs':>5} {'steps':>6} {'comm_s':>9} {'MB_from':>9}"]
+           f"{'update':>32} {'devs':>5} {'steps':>6} {'comm_s':>9} "
+           f"{'MB_from':>9}"]
     for r in rows[:-1]:
-        out.append(f"{r['update']:>22} {r['devices']:>5} {r['steps']:>6} "
+        out.append(f"{r['update']:>32} {r['devices']:>5} {r['steps']:>6} "
                    f"{r['comm_s']:>9.4f} {r['MB_from']:>9.2f}")
     ratio = rows[-1]
-    out.append(f"  → on-device updates move {ratio['bytes_from']:.1f}× fewer "
-               f"device→host bytes")
+    out.append(f"  → direct syncs move {ratio['bytes_from']:.1f}× fewer "
+               f"device→host bytes than host-mediated syncs, bit-identically")
     return "\n".join(out)
 
 
@@ -283,14 +339,27 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small sizes for CI: same code paths, seconds not minutes")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also dump every section's rows to PATH (the CI "
+                         "writes artifacts/bench/BENCH_comm.json)")
     args = ap.parse_args()
     if args.smoke:
-        print(render(run(d_model=128, n_batch=16, device_counts=(2, 4))))
-        print(render_resident(run_resident(d_model=128, n_batch=4, n=2, steps=4)))
-        print(render_wavefront(run_wavefront(B=32, fan=4, n_dev=2, waves=2)))
-        print(render_dps(run_dps(d_model=64, n_batch=8, n=2, steps=8)))
+        sections = {
+            "modes": run(d_model=128, n_batch=16, device_counts=(2, 4)),
+            "resident": run_resident(d_model=128, n_batch=4, n=2, steps=4),
+            "wavefront": run_wavefront(B=32, fan=4, n_dev=2, waves=2),
+            "dps": run_dps(d_model=64, n_batch=8, n=4, steps=8),
+        }
     else:
-        print(render(run()))
-        print(render_resident(run_resident()))
-        print(render_wavefront(run_wavefront()))
-        print(render_dps(run_dps()))
+        sections = {"modes": run(), "resident": run_resident(),
+                    "wavefront": run_wavefront(), "dps": run_dps()}
+    print(render(sections["modes"]))
+    print(render_resident(sections["resident"]))
+    print(render_wavefront(sections["wavefront"]))
+    print(render_dps(sections["dps"]))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "comm_modes",
+                       "smoke": bool(args.smoke), "sections": sections},
+                      f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")

@@ -6,10 +6,11 @@ Public API:
   NodeDevice / DevicePool      devices over nodes / mesh slices / virtual shares
   MapSpec / sec / TargetExecutor   target regions with map(to/from/tofrom/alloc)
   strip_partition / offload_strips / recursive_offload / wavefront_offload
+  Transport / HostFunnelTransport / PeerTransport   device↔device fabric + collectives
   ClusterRuntime / RuntimeConfig   deployable runtime, comm modes, cost model
 """
 from .costmodel import (CostModel, Event, LinkModel, PAPER_ETHERNET,
-                        TimelineSpan, TPU_DCN, TPU_ICI,
+                        PeerRecord, TimelineSpan, TPU_DCN, TPU_ICI,
                         PEAK_FLOPS_BF16, HBM_BW_Bps, ICI_BW_Bps)
 from .device import (Command, DevicePool, DeviceStoppedError, NodeDevice,
                      SLOT_STREAM, StreamTicket)
@@ -17,9 +18,10 @@ from .kernel_table import GLOBAL_KERNEL_TABLE, KernelTable, kernel
 from .mediary import (RESERVED, HostMirror, MediaryStore, PresentEntry,
                       PresentTable)
 from .runtime import ClusterRuntime, RuntimeConfig
-from .scheduler import (DagTask, offload_strips, recursive_offload,
+from .scheduler import (DagTask, PeerRef, offload_strips, recursive_offload,
                         strip_partition, wavefront_offload)
 from .target import MapSpec, Section, TargetExecutor, TargetFuture, sec
+from .transport import HostFunnelTransport, PeerTransport, Transport
 
 __all__ = [
     "KernelTable", "kernel", "GLOBAL_KERNEL_TABLE",
@@ -28,9 +30,10 @@ __all__ = [
     "SLOT_STREAM", "StreamTicket",
     "MapSpec", "Section", "sec", "TargetExecutor", "TargetFuture",
     "strip_partition", "offload_strips", "recursive_offload",
-    "wavefront_offload", "DagTask",
+    "wavefront_offload", "DagTask", "PeerRef",
     "ClusterRuntime", "RuntimeConfig",
-    "CostModel", "LinkModel", "Event", "TimelineSpan",
+    "Transport", "HostFunnelTransport", "PeerTransport",
+    "CostModel", "LinkModel", "Event", "PeerRecord", "TimelineSpan",
     "PAPER_ETHERNET", "TPU_ICI", "TPU_DCN",
     "PEAK_FLOPS_BF16", "HBM_BW_Bps", "ICI_BW_Bps",
 ]

@@ -66,16 +66,28 @@ class ComputeRecord:
 
 
 @dataclass
+class PeerRecord:
+    """One device↔device transfer on a peer link (never the host NIC)."""
+
+    src: int
+    dst: int
+    nbytes: int
+    n_messages: int = 1
+    tag: str = ""
+
+
+@dataclass
 class Event:
     """One entry of the recorded event stream (issue order preserved)."""
 
-    kind: str               # "xfer" | "compute"
-    device: int
+    kind: str               # "xfer" | "compute" | "peer"
+    device: int             # peer: the destination device
     tag: str = ""
     direction: str = ""     # xfer only: "to" | "from"
     nbytes: int = 0
     n_messages: int = 1
     seconds: float = 0.0    # compute only
+    src: int = -1           # peer only: the source device
 
 
 @dataclass
@@ -84,7 +96,7 @@ class TimelineSpan:
 
     start: float
     end: float
-    lane: str               # "tx" | "rx" | "dev<k>"
+    lane: str               # "tx" | "rx" | "dev<k>" | "p<src>>dst>"
     event: Event
 
 
@@ -101,11 +113,18 @@ class CostModel:
     runs concurrently across devices.
     """
 
-    def __init__(self, link: LinkModel = PAPER_ETHERNET) -> None:
+    def __init__(self, link: LinkModel = PAPER_ETHERNET,
+                 peer_link: Optional[LinkModel] = None) -> None:
         self.link = link
+        # the device↔device link (None = same fabric as the host link); the
+        # transport layer records SEND/RECV traffic against this model so
+        # peer collectives are *timed* on their own lanes, never credited
+        # against the host NIC
+        self.peer_link = peer_link
         self.transfers: List[TransferRecord] = []
         self.compute: List[ComputeRecord] = []
         self.adjustments: List[TransferRecord] = []
+        self.peers: List[PeerRecord] = []
         self.events: List[Event] = []
         self._lock = threading.Lock()
 
@@ -114,6 +133,7 @@ class CostModel:
             self.transfers.clear()
             self.compute.clear()
             self.adjustments.clear()
+            self.peers.clear()
             self.events.clear()
 
     # -- accounting ---------------------------------------------------------
@@ -130,6 +150,19 @@ class CostModel:
             self.compute.append(ComputeRecord(device, float(seconds), tag))
             self.events.append(Event("compute", device, tag=tag,
                                      seconds=float(seconds)))
+
+    def record_peer(self, src: int, dst: int, nbytes: int,
+                    n_messages: int = 1, tag: str = "") -> None:
+        """One device→device transfer over the (src, dst) peer link.
+
+        Peer traffic never touches the host NIC: it is excluded from
+        ``bytes_moved``/``comm_time`` (the funnel accounting) and scheduled
+        on its own per-directed-link lane in the overlap timeline.
+        """
+        with self._lock:
+            self.peers.append(PeerRecord(src, dst, int(nbytes), n_messages, tag))
+            self.events.append(Event("peer", dst, tag=tag, nbytes=int(nbytes),
+                                     n_messages=n_messages, src=src))
 
     def record_adjustment(self, direction: str, device: int, nbytes: int,
                           tag: str = "") -> None:
@@ -154,22 +187,30 @@ class CostModel:
         """
         with self._lock:
             before = (len(self.transfers) + len(self.compute)
-                      + len(self.adjustments) + len(self.events))
+                      + len(self.adjustments) + len(self.peers)
+                      + len(self.events))
             self.transfers = [t for t in self.transfers
                               if not _tag_matches(t.tag, prefix)]
             self.compute = [c for c in self.compute
                             if not _tag_matches(c.tag, prefix)]
             self.adjustments = [a for a in self.adjustments
                                 if not _tag_matches(a.tag, prefix)]
+            self.peers = [p for p in self.peers
+                          if not _tag_matches(p.tag, prefix)]
             self.events = [e for e in self.events
                            if not _tag_matches(e.tag, prefix)]
             return before - (len(self.transfers) + len(self.compute)
-                             + len(self.adjustments) + len(self.events))
+                             + len(self.adjustments) + len(self.peers)
+                             + len(self.events))
 
     # -- summaries ------------------------------------------------------------
     def bytes_moved(self, direction: Optional[str] = None) -> int:
         return sum(t.nbytes for t in self.transfers + self.adjustments
                    if direction is None or t.direction == direction)
+
+    def bytes_peer(self) -> int:
+        """Bytes moved device→device — real messages, zero host-NIC load."""
+        return sum(p.nbytes for p in self.peers)
 
     def comm_time(self) -> float:
         """Total host-funnel communication time (serialized at the host NIC)."""
@@ -177,6 +218,18 @@ class CostModel:
         # adjustments are latency-free: pure bandwidth credits/debits
         wire += sum(a.nbytes / self.link.bandwidth_Bps for a in self.adjustments)
         return wire
+
+    def peer_time(self) -> float:
+        """Peer-fabric communication time: links carry traffic concurrently,
+        each directed (src, dst) link serializes its own messages — the max
+        per-link sum is the collective's modeled duration (a D-device ring
+        takes one link's worth of time per round, not D)."""
+        plink = self.peer_link or self.link
+        per_link: Dict[Tuple[int, int], float] = {}
+        for p in self.peers:
+            k = (p.src, p.dst)
+            per_link[k] = per_link.get(k, 0.0) + plink.time(p.nbytes, p.n_messages)
+        return max(per_link.values(), default=0.0)
 
     def compute_time(self) -> float:
         """Parallel compute time: max over devices of their summed task time."""
@@ -190,16 +243,28 @@ class CostModel:
         """List-schedule the recorded events onto lanes.
 
         Lanes: ``tx`` (host→device sends), ``rx`` (device→host receives) —
-        the NIC is full duplex — and one compute lane per device.  A transfer
-        occupies its NIC lane *and* its device's lane (the device cannot
-        compute while being written/read); compute occupies only the device
-        lane.  Per-lane order follows the recorded issue order, so the
+        the NIC is full duplex — and one compute lane per device, plus one
+        lane per *directed peer link* (``p<src>><dst>``).  A peer SEND/RECV
+        occupies its link's lane, the source's per-device *send* side and
+        the destination's per-device *receive* side: devices are full
+        duplex (MPI_Sendrecv-style), so one ring round's D links all run
+        concurrently and the round costs one link's time — timed, not
+        adjusted onto the host NIC — while successive rounds serialize per
+        link and per endpoint side.  A host transfer occupies its NIC lane
+        *and* its device's compute lane (the device cannot compute while
+        being written/read); compute occupies the device lane and starts
+        only after the device's in-flight peer messages (their payloads
+        feed it).  Per-lane order follows the recorded issue order, so the
         schedule is exactly what the per-device command queues execute.
         """
         with self._lock:
             events = list(self.events)
+        plink = self.peer_link or self.link
         tx_t, rx_t = 0.0, 0.0
-        dev_t: Dict[int, float] = {}
+        dev_t: Dict[int, float] = {}          # compute / host-xfer occupancy
+        dev_tx: Dict[int, float] = {}         # peer send side, full duplex
+        dev_rx: Dict[int, float] = {}         # peer receive side
+        link_t: Dict[Tuple[int, int], float] = {}
         spans: List[TimelineSpan] = []
         for e in events:
             if e.kind == "xfer":
@@ -214,8 +279,17 @@ class CostModel:
                 dev_t[e.device] = end
                 spans.append(TimelineSpan(start, end,
                                           "tx" if e.direction == "to" else "rx", e))
+            elif e.kind == "peer":
+                lk = (e.src, e.device)
+                start = max(link_t.get(lk, 0.0),
+                            dev_t.get(e.src, 0.0), dev_tx.get(e.src, 0.0),
+                            dev_t.get(e.device, 0.0), dev_rx.get(e.device, 0.0))
+                end = start + plink.time(e.nbytes, e.n_messages)
+                link_t[lk] = dev_tx[e.src] = dev_rx[e.device] = end
+                spans.append(TimelineSpan(start, end, f"p{e.src}>{e.device}", e))
             elif e.kind == "compute":
-                start = dev_t.get(e.device, 0.0)
+                start = max(dev_t.get(e.device, 0.0), dev_tx.get(e.device, 0.0),
+                            dev_rx.get(e.device, 0.0))
                 end = start + e.seconds
                 dev_t[e.device] = end
                 spans.append(TimelineSpan(start, end, f"dev{e.device}", e))
@@ -230,7 +304,7 @@ class CostModel:
         compute are not double-charged.
         """
         if not overlap:
-            return self.comm_time() + self.compute_time()
+            return self.comm_time() + self.peer_time() + self.compute_time()
         spans = self.timeline()
         if not spans:
             return 0.0
@@ -242,11 +316,11 @@ class CostModel:
         for a in self.adjustments:
             adj[a.direction] = adj.get(a.direction, 0.0) \
                 + a.nbytes / self.link.bandwidth_Bps
-        dev_end = max((s.end for s in spans if s.lane.startswith("dev")),
-                      default=0.0)
+        other_end = max((s.end for s in spans if s.lane not in ("tx", "rx")),
+                        default=0.0)
         tx_end = max((s.end for s in spans if s.lane == "tx"), default=0.0)
         rx_end = max((s.end for s in spans if s.lane == "rx"), default=0.0)
-        return max(dev_end,
+        return max(other_end,
                    (tx_end + adj["to"]) if tx_end else 0.0,
                    (rx_end + adj["from"]) if rx_end else 0.0,
                    0.0)
@@ -255,7 +329,9 @@ class CostModel:
         return {
             "bytes_to": float(self.bytes_moved("to")),
             "bytes_from": float(self.bytes_moved("from")),
+            "bytes_peer": float(self.bytes_peer()),
             "comm_s": self.comm_time(),
+            "peer_s": self.peer_time(),
             "compute_s": self.compute_time(),
             "makespan_s": self.makespan(),
             "makespan_overlap_s": self.makespan(overlap=True),

@@ -46,7 +46,8 @@ SLOT_STREAM = -1
 
 @dataclass(frozen=True)
 class Command:
-    op: str                 # ALLOC | FREE | XFER_TO | XFER_FROM | EXEC | STOP
+    op: str                 # ALLOC | FREE | XFER_TO | XFER_FROM | EXEC |
+                            # SEND | RECV | STOP
     device: int
     handle: Optional[int] = None
     nbytes: int = 0
@@ -58,6 +59,8 @@ class Command:
     # device worker enforces instead of whole-queue serialization.
     reads: Tuple[int, ...] = ()
     writes: Tuple[int, ...] = ()
+    # SEND/RECV only: the other endpoint of the device↔device transfer
+    peer: Optional[int] = None
 
 
 class NodeDevice:
@@ -101,6 +104,17 @@ class NodeDevice:
             return None
         if cmd.op == "XFER_FROM":
             return self.store.read(cmd.handle, section=payload.get("section"))
+        if cmd.op == "SEND":
+            # peer rendezvous, source side: the command's future carries the
+            # buffer to the peer's RECV (the wire of the modeled link)
+            return self.store.read(cmd.handle)
+        if cmd.op == "RECV":
+            # peer rendezvous, sink side: the matching SEND has settled (the
+            # stream gates RECV on it — a cross-device dependency edge), so
+            # this never blocks the worker; a failed SEND re-raises here
+            value = payload["source"].result()
+            self.store.write(cmd.handle, self._place(value))
+            return None
         if cmd.op == "EXEC":
             entry = table.lookup(cmd.kernel_index)
             fn = self._jit_cache.get(cmd.kernel_index)
@@ -515,6 +529,53 @@ class DevicePool:
             dev.store.install(handle, dev._place(value))
 
         return self._submit_async(device, wb, writes=(handle,))
+
+    def peer_copy(self, src: int, src_handle: int, dst: int, dst_handle: int,
+                  *, nbytes: Optional[int] = None, tag: str = "") -> "_cf.Future":
+        """Device→device copy: a SEND on ``src``'s stream rendezvousing with
+        a RECV on ``dst``'s stream — the transfer never touches the host
+        funnel (accounted as peer-link traffic instead).
+
+        Ordering composes with ``nowait`` and resident buffers exactly like
+        XFER/EXEC: SEND *reads* ``src_handle`` (runs after its last producer,
+        holds back its next writer) and RECV *writes* ``dst_handle``.  The
+        rendezvous itself is a cross-stream dependency edge — RECV is gated
+        on the SEND future, so the destination worker is handed the command
+        only once the payload exists.  Because that edge always points from
+        an earlier-issued command to a later-issued one, no cycle can form:
+        any interleaving of peer copies (including full rings) is
+        deadlock-free by construction.
+
+        ``nbytes`` overrides the accounted message size (modeled wire
+        compression); the payload itself always moves intact.  Returns the
+        RECV future (a registered writer of ``dst_handle``); SEND failures
+        propagate through it.
+        """
+        if src == dst:
+            raise ValueError(f"peer_copy: src and dst are both device {src}")
+        wire = self.mirrors[src].nbytes(src_handle) if nbytes is None else int(nbytes)
+        with self.locks[src]:
+            scmd = Command("SEND", src, handle=src_handle, nbytes=wire,
+                           tag=tag, peer=dst, reads=(src_handle,))
+            self._log(scmd)
+            send_fut = self._submit_async(
+                src,
+                self._traced(src, scmd,
+                             lambda: self.devices[src].execute(scmd, self.table)),
+                reads=scmd.reads)
+        with self.locks[dst]:
+            rcmd = Command("RECV", dst, handle=dst_handle, nbytes=wire,
+                           tag=tag, peer=src, writes=(dst_handle,))
+            self._log(rcmd)
+            payload = {"source": send_fut}
+            recv_fut = self._submit_async(
+                dst,
+                self._traced(dst, rcmd,
+                             lambda: self.devices[dst].execute(rcmd, self.table,
+                                                               payload)),
+                writes=rcmd.writes, extra_deps=(send_fut,))
+        self.cost.record_peer(src, dst, wire, tag=tag)
+        return recv_fut
 
     def exec_kernel(self, device: int, kernel_name: str,
                     buffers: Dict[str, Any],

@@ -156,6 +156,24 @@ class PresentEntry:
         return sum(int(np.prod(s.shape, dtype=np.int64)) * jnp.dtype(s.dtype).itemsize
                    for s in self.specs)
 
+    def peer_clone(self, handles: List[int], write_futs: List[Any]) -> "PresentEntry":
+        """A copy of this entry fulfilled on *another* device, device→device.
+
+        The clone inherits this entry's logical identity (name, structure,
+        host view) but binds the peer's mediary ``handles``, with
+        ``write_futs`` the RECV futures that are filling them.  Crucially a
+        *device-ahead* entry propagates as device-ahead: the peer's copy is
+        as far past the host as the source's, and no host reconciliation
+        (fetch + re-send) happens on the way — the host-side ``host_leaves``
+        snapshot travels along only so that a later host-value match behaves
+        identically on both devices.
+        """
+        return PresentEntry(
+            name=self.name, handles=list(handles), treedef=self.treedef,
+            host_leaves=list(self.host_leaves), specs=list(self.specs),
+            refcount=1, version=self.version, debit=0,
+            write_futs=list(write_futs), device_ahead=self.device_ahead)
+
 
 class PresentTable:
     """Reference-counted name → device-buffer map (OpenMP's present table).

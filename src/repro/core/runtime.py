@@ -35,6 +35,7 @@ from .costmodel import CostModel, LinkModel, PAPER_ETHERNET
 from .device import DevicePool
 from .kernel_table import GLOBAL_KERNEL_TABLE, KernelTable
 from .target import MapSpec, Section, TargetExecutor
+from .transport import HostFunnelTransport, PeerTransport, Transport
 
 
 @dataclass
@@ -43,6 +44,9 @@ class RuntimeConfig:
     n_virtual: Optional[int] = None           # or: N virtual devices
     link: LinkModel = PAPER_ETHERNET
     comm_mode: str = "host-mediated"          # "host-mediated" | "direct"
+    # device↔device link for comm_mode="direct" (None: same fabric as `link`
+    # — the paper's cluster is one Gbit Ethernet for every pair of nodes)
+    peer_link: Optional[LinkModel] = None
     compress: bool = False
     max_host_threads: int = 16
 
@@ -57,6 +61,12 @@ class ClusterRuntime:
         else:
             self.pool = DevicePool.from_config(cfg.nodes, table=table, link=cfg.link)
         self.ex = TargetExecutor(self.pool, max_host_threads=cfg.max_host_threads)
+        # the transport is what "direct" now *means*: a real peer fabric of
+        # SEND/RECV stream commands, not a byte-accounting credit
+        self.pool.cost.peer_link = cfg.peer_link
+        self.transport: Transport = (PeerTransport(cfg.peer_link)
+                                     if cfg.comm_mode == "direct"
+                                     else HostFunnelTransport())
         self._ef_residual: Optional[Any] = None
         self._dps: Optional[Dict[str, Any]] = None   # data_parallel_step state
 
@@ -75,6 +85,22 @@ class ClusterRuntime:
         self.pool.stop_all()
 
     # -- data-parallel step fabric ----------------------------------------------
+    def _ensure_dp_params(self, d: int, params: Any, tag: str) -> None:
+        """Pin ``params`` resident under the runtime-namespaced entry name.
+
+        The entry is ``_dpg_params`` (not ``"params"``): a user's own
+        ``enter_data(d, params=...)`` environment must never be refreshed —
+        or, on the shape-change path below, *freed* — by the trainer fabric.
+        """
+        try:
+            self.ex.ensure_resident(d, f"{tag}:params", _dpg_params=params)
+        except ValueError:
+            # new model/shape under the same name on a long-lived runtime:
+            # replace the resident environment (the exit must name the entry
+            # that was entered — the kwarg name — not the transfer tag)
+            self.ex.exit_data(d, "_dpg_params")
+            self.ex.ensure_resident(d, f"{tag}:params", _dpg_params=params)
+
     def data_parallel_grads(self, kernel: str, params: Any, batches: Sequence[Any],
                             *, tag: str = "dp", resident: bool = True) -> Any:
         """One DP gradient exchange over the pool.
@@ -84,8 +110,14 @@ class ClusterRuntime:
 
         host-mediated: D× (params→dev, grads→host), host reduces — the
         faithful funnel; every gradient crosses one NIC.
-        direct: devices all-reduce among themselves (modeled ring:
-        2·(D-1)/D·|params| per link, concurrent); host receives one copy.
+        direct: gradients stay on-device (``device_out`` into a resident
+        buffer) and the transport ring all-reduces them peer-to-peer
+        (``(D-1)·|g|`` per link, concurrent links, SEND/RECV stream
+        commands); the host fetches exactly ONE reduced copy.  With
+        ``compress=True`` each device applies the wire's block-int8 round
+        trip to its local gradients before the ring and the per-link bytes
+        are the compressed message sizes (no error feedback on the peer
+        fabric — that is a host-funnel feature).
 
         ``resident=True`` (default) keeps ``params`` in each device's data
         environment across calls: repeated steps over the same parameters
@@ -98,18 +130,20 @@ class ClusterRuntime:
         """
         D = len(self.pool)
         assert len(batches) == D, f"need one batch per device, got {len(batches)}"
+        if self.cfg.comm_mode == "direct":
+            return self._dp_grads_direct(kernel, params, batches, tag=tag,
+                                         resident=resident)
+        gspec = jax.eval_shape(lambda p: p, params)
         futs = []
         for d in range(D):
             if resident:
-                try:
-                    self.ex.ensure_resident(d, f"{tag}:params", params=params)
-                except ValueError:
-                    # new model/shape under the same name on a long-lived
-                    # runtime: replace the resident environment
-                    self.ex.exit_data(d, "params")
-                    self.ex.ensure_resident(d, f"{tag}:params", params=params)
-            maps = MapSpec(to={"params": params, "batch": batches[d]},
-                           from_={"grads": jax.eval_shape(lambda p: p, params)})
+                self._ensure_dp_params(d, params, tag)
+                maps = MapSpec(to={"batch": batches[d]},
+                               present={"params": "_dpg_params"},
+                               from_={"grads": gspec})
+            else:
+                maps = MapSpec(to={"params": params, "batch": batches[d]},
+                               from_={"grads": gspec})
             futs.append(self.ex.target(kernel, d, maps, nowait=True, tag=f"{tag}[{d}]"))
         grads = [r["grads"] for r in self.ex.drain(futs)]
 
@@ -134,21 +168,53 @@ class ClusterRuntime:
                 reconstructed.append(comp.tree_decompress(c, g))
             grads = reconstructed
 
-        if self.cfg.comm_mode == "host-mediated":
-            # host reduce (already fetched above — the funnel is the fetch)
-            mean = jax.tree.map(lambda *g: sum(g) / D, *grads)
-        else:
-            # direct: model ring all-reduce among devices; the host fetch that
-            # already happened is credited back except one result copy.
-            param_bytes = sum(int(np.prod(l.shape, dtype=np.int64)) * l.dtype.itemsize
-                              for l in jax.tree.leaves(grads[0]))
-            for d in range(1, D):
-                self.cost.record_adjustment("from", d, -param_bytes,
-                                            tag=f"{tag}:direct-credit")
-            # ring cost: 2*(D-1)/D * bytes, concurrent links -> model as one
-            self.cost.record_transfer("from", 0, int(2 * (D - 1) / D * param_bytes),
-                                      n_messages=2 * (D - 1), tag=f"{tag}:ring")
-            mean = jax.tree.map(lambda *g: sum(g) / D, *grads)
+        # host reduce (already fetched above — the funnel is the fetch)
+        return jax.tree.map(lambda *g: sum(g) / D, *grads)
+
+    def _dp_grads_direct(self, kernel: str, params: Any, batches: Sequence[Any],
+                         *, tag: str, resident: bool) -> Any:
+        """The peer path: resident gradients, a real ring, one host copy."""
+        D, pool, ex = len(self.pool), self.pool, self.ex
+        gspec = jax.eval_shape(lambda p: p, params)
+        gleaves = [(l.shape, jnp.dtype(l.dtype)) for l in jax.tree.leaves(
+            gspec, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))]
+        futs = []
+        for d in range(D):
+            if resident:
+                self._ensure_dp_params(d, params, tag)
+            ent = pool.present[d].get("_dpg_grads")
+            if ent is not None and [(s.shape, jnp.dtype(s.dtype))
+                                    for s in ent.specs] != gleaves:
+                ex.exit_data(d, "_dpg_grads")    # param shapes changed
+                ent = None
+            if ent is None:
+                ex.alloc_resident(d, "_dpg_grads", gspec, tag=f"{tag}:grads")
+            maps = MapSpec(to={"batch": batches[d]} if resident
+                           else {"params": params, "batch": batches[d]},
+                           present={"params": "_dpg_params"} if resident else (),
+                           device_out={"grads": "_dpg_grads"})
+            futs.append(ex.target(kernel, d, maps, nowait=True, tag=f"{tag}[{d}]"))
+        ex.drain(futs)
+        handles = [pool.present[d].get("_dpg_grads").handles for d in range(D)]
+        specs = pool.present[0].get("_dpg_grads").specs
+        wire = None
+        if self.cfg.compress:
+            wire = self.transport.quantize_int8(pool, handles, specs,
+                                                tag=f"{tag}:q8")
+        wfuts = self.transport.ring_allreduce(pool, handles, specs,
+                                              wire_nbytes=wire, tag=f"{tag}:ring")
+        for d in range(D):
+            with pool.env_locks[d]:
+                ent = pool.present[d].get("_dpg_grads")
+                if ent is not None:
+                    ent.device_ahead = True
+                    ent.version += 1
+                    ent.write_futs = list(wfuts[d])
+        total = ex.fetch_resident(0, "_dpg_grads")   # the one funnel copy
+        mean = jax.tree.map(lambda s: s / D, total)
+        if not resident:
+            for d in range(D):
+                ex.exit_data(d, "_dpg_grads")
         return mean
 
     # -- device-resident optimizer: local AdamW steps, periodic param sync ----
@@ -168,7 +234,12 @@ class ClusterRuntime:
         each device's parameters, average them, and push the average back —
         the local-SGD/model-averaging exchange.  Over S steps the funnel's
         from-traffic drops from ``S·D·|g|`` to ``(S/sync_every)·D·|p|``,
-        ~``sync_every``× fewer bytes when ``|g| == |p|``.
+        ~``sync_every``× fewer bytes when ``|g| == |p|``.  Under
+        ``comm_mode="direct"`` the sync itself leaves the funnel: devices
+        average the resident parameters peer-to-peer (see
+        :meth:`data_parallel_sync`) and only one copy of the mean reaches
+        the host — ``(S/sync_every)·|p|`` from-bytes and zero sync
+        to-bytes, with bit-identical parameters to the host-mediated path.
 
         Returns the host's current parameter view: the freshly averaged
         parameters on sync steps, the last synced value otherwise.  State
@@ -246,15 +317,41 @@ class ClusterRuntime:
         return st["host_params"]
 
     def data_parallel_sync(self, tag: str = "dps") -> Any:
-        """Force a parameter sync now (fetch, average, push); returns them."""
+        """Force a parameter sync now; returns the averaged parameters.
+
+        host-mediated: fetch every device's parameters (``D·|p|`` funnel
+        from-bytes), average on the host, push the mean back (``D·|p|``
+        to-bytes) — the paper's only legal topology.
+        direct: the transport averages *in the stream* —
+        gather → reduce-at-root → ring broadcast, all SEND/RECV peer
+        messages — and the host fetches ONE copy of the mean for its own
+        view (``|p|`` from-bytes, zero to-bytes).  The root reduces in
+        ascending device order, the same association as the host's
+        ``sum(views)/D``, so both modes produce bit-identical parameters.
+        """
         st = self._dps
         if st is None:
             raise RuntimeError("data_parallel_step has not run yet")
-        D = len(self.pool)
-        views = [self.ex.fetch_resident(d, "_dps_params") for d in range(D)]
-        mean = jax.tree.map(lambda *p: sum(p) / D, *views)
-        for d in range(D):
-            self.ex.ensure_resident(d, f"{tag}:sync", _dps_params=mean)
+        D, pool = len(self.pool), self.pool
+        if self.cfg.comm_mode == "direct" and D > 1:
+            handles = [pool.present[d].get("_dps_params").handles
+                       for d in range(D)]
+            specs = pool.present[0].get("_dps_params").specs
+            wfuts = self.transport.allreduce_mean(pool, handles, specs, root=0,
+                                                  tag=f"{tag}:sync")
+            for d in range(D):
+                with pool.env_locks[d]:
+                    ent = pool.present[d].get("_dps_params")
+                    if ent is not None:
+                        ent.device_ahead = True
+                        ent.version += 1
+                        ent.write_futs = list(wfuts[d])
+            mean = self.ex.fetch_resident(0, "_dps_params")
+        else:
+            views = [self.ex.fetch_resident(d, "_dps_params") for d in range(D)]
+            mean = jax.tree.map(lambda *p: sum(p) / D, *views)
+            for d in range(D):
+                self.ex.ensure_resident(d, f"{tag}:sync", _dps_params=mean)
         st["host_params"] = mean
         return mean
 

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .target import (MapSpec, Section, TargetExecutor, TargetFuture,
-                     _flatten_map_value)
+                     _alias_map, _flatten_map_value)
 
 
 # ---------------------------------------------------------------------------
@@ -246,9 +246,29 @@ class DagTask:
     device: Optional[int] = None                      # None = scheduler picks
 
 
+@dataclass(frozen=True)
+class PeerRef:
+    """A dependency value that lives on a device, not on the host.
+
+    Under ``wavefront_offload(peer=True)`` the ``deps`` dict handed to a
+    task's ``make_maps`` holds these placeholders instead of host arrays: a
+    callback that treats dependency values *opaquely* (placing them in a
+    ``to=`` clause) works unchanged, and the runner rewrites any ``to``
+    entry holding a PeerRef into a ``present`` binding — propagating the
+    producer's resident entry device→device first if the consumer runs
+    elsewhere.  A callback that does arithmetic on dependency values cannot
+    be peer-routed (the value genuinely is not on the host).
+    """
+
+    task: str
+    entry: str
+    device: int
+
+
 def wavefront_offload(ex: TargetExecutor, tasks: Sequence[DagTask], *,
                       out_name: str = "out", nowait: bool = True,
-                      resident: bool = False,
+                      resident: bool = False, peer: bool = False,
+                      transport: Optional[Any] = None,
                       tag: str = "dag") -> Dict[str, Any]:
     """Run a dependency DAG where every edge crosses the host (OpenMP rule).
 
@@ -256,6 +276,19 @@ def wavefront_offload(ex: TargetExecutor, tasks: Sequence[DagTask], *,
     one wave at a time.  Each inter-device value is fetched to the host and
     re-sent to the consumer — the comm pattern that makes sparselu lose
     (paper §5.6: "the whole array must be transferred two times").
+
+    ``peer=True`` (beyond-paper) retires that funnel for the DAG's internal
+    edges: every task's ``out_name`` output stays *resident* on its device
+    (``device_out`` into an entry named after the task — ALLOC only, no
+    host transfer), consumers bind it with a ``present`` map, and a
+    cross-device edge moves once, device→device, via
+    :meth:`TargetExecutor.propagate_resident` over ``transport`` (default
+    :class:`~repro.core.transport.PeerTransport`) instead of
+    fetch-then-re-map.  ``make_maps`` receives :class:`PeerRef`
+    placeholders for its deps and must treat them opaquely (all the BOTS
+    DAGs do).  Host inputs (``to`` values that are real arrays) and the
+    final result fetch are unchanged, so ``results`` still holds host
+    arrays for every task.
 
     ``resident=True`` pins the wave's *shared* plain input buffers — a
     (device, name) whose value is identical across several tasks, e.g. the
@@ -272,6 +305,52 @@ def wavefront_offload(ex: TargetExecutor, tasks: Sequence[DagTask], *,
     the refresh lands), it simply stops eliding.  Pins are released only
     after the whole wave has settled.
     """
+    if peer and transport is None:
+        from .transport import PeerTransport
+        transport = PeerTransport()
+    # peer mode: every (device, entry-name) this run pinned — producer
+    # outputs and their propagated peer copies — released in the final
+    # teardown; ``producer`` maps a task to its output's home device/entry
+    peer_entries: Dict[Tuple[int, str], bool] = {}
+    producer: Dict[str, Tuple[int, str]] = {}
+
+    def _peer_rewrite(t: DagTask, dev: int, maps: MapSpec) -> MapSpec:
+        new_to: Dict[str, Any] = {}
+        pres: Dict[str, str] = {}
+        for k, v in maps.to.items():
+            if isinstance(v, PeerRef):
+                if v.device != dev and (dev, v.entry) not in peer_entries:
+                    ex.propagate_resident(v.device, dev, v.entry,
+                                          transport=transport,
+                                          tag=f"{tag}:edge")
+                    peer_entries[(dev, v.entry)] = True
+                pres[k] = v.entry
+            else:
+                new_to[k] = v
+        for k, v in {**maps.tofrom, **maps.alloc,
+                     **{n: s for n, s in maps.from_.items()}}.items():
+            if isinstance(v, PeerRef):
+                raise TypeError(
+                    f"task {t.name!r}: a PeerRef dependency may only appear "
+                    f"in a to= clause (got it in {k!r})")
+        if out_name not in maps.from_:
+            raise ValueError(
+                f"peer wavefront requires task {t.name!r} to declare "
+                f"from_[{out_name!r}] (its resident output shape)")
+        entry = f"{tag}:{t.name}"
+        ex.alloc_resident(dev, entry, maps.from_[out_name], tag=f"{tag}:out")
+        peer_entries[(dev, entry)] = True
+        producer[t.name] = (dev, entry)
+        return MapSpec(to=new_to,
+                       from_={n: s for n, s in maps.from_.items()
+                              if n != out_name},
+                       tofrom=maps.tofrom, alloc=maps.alloc,
+                       firstprivate=maps.firstprivate,
+                       use_globals=maps.use_globals,
+                       present={**_alias_map(maps.present), **pres},
+                       device_out={**_alias_map(maps.device_out),
+                                   out_name: entry})
+
     results: Dict[str, Any] = {}
     remaining = {t.name: t for t in tasks}
     wave_idx = 0
@@ -286,7 +365,10 @@ def wavefront_offload(ex: TargetExecutor, tasks: Sequence[DagTask], *,
             plans: List[Tuple[DagTask, int, MapSpec]] = []
             for j, t in enumerate(ready):
                 dev = t.device if t.device is not None else j % len(ex.pool)
-                plans.append((t, dev, t.make_maps({d: results[d] for d in t.deps})))
+                maps = t.make_maps({d: results[d] for d in t.deps})
+                if peer:
+                    maps = _peer_rewrite(t, dev, maps)
+                plans.append((t, dev, maps))
             if resident:
                 # pin only values genuinely shared: a (device, name) whose
                 # plain to/tofrom value is identical across >=2 of the wave's
@@ -318,9 +400,11 @@ def wavefront_offload(ex: TargetExecutor, tasks: Sequence[DagTask], *,
                     futs.append((t, ex.target(t.kernel, dev, maps, nowait=True,
                                               tag=f"{tag}:w{wave_idx}:{t.name}")))
                 else:
-                    results[t.name] = ex.target(
-                        t.kernel, dev, maps, nowait=False,
-                        tag=f"{tag}:w{wave_idx}:{t.name}")[out_name]
+                    out = ex.target(t.kernel, dev, maps, nowait=False,
+                                    tag=f"{tag}:w{wave_idx}:{t.name}")
+                    results[t.name] = (PeerRef(t.name, producer[t.name][1],
+                                               producer[t.name][0])
+                                       if peer else out[out_name])
                     del remaining[t.name]
             if futs:
                 # drain waits for EVERY region to settle (even past a
@@ -329,8 +413,20 @@ def wavefront_offload(ex: TargetExecutor, tasks: Sequence[DagTask], *,
                 joined = True
                 outs = ex.drain([f for _, f in futs])
                 for (t, _), out in zip(futs, outs):
-                    results[t.name] = out[out_name]
+                    results[t.name] = (PeerRef(t.name, producer[t.name][1],
+                                               producer[t.name][0])
+                                       if peer else out[out_name])
                     del remaining[t.name]
+        except BaseException:
+            if peer:
+                # failed run: nothing will fetch the resident outputs, so
+                # release every pinned entry.  Safe even before the finally
+                # below joins a mid-dispatch wave: in-flight regions hold
+                # their own present-table references, so an entry is only
+                # freed once its last region has released it.
+                for dev, n in peer_entries:
+                    ex.exit_data(dev, n)
+            raise
         finally:
             if futs and not joined:
                 # a mid-dispatch failure (a later task's make_maps or launch
@@ -343,4 +439,14 @@ def wavefront_offload(ex: TargetExecutor, tasks: Sequence[DagTask], *,
             for dev, n in entered:      # wave boundary: release pins
                 ex.exit_data(dev, n)
         wave_idx += 1
+    if peer:
+        # materialize the host view — one fetch per task output, exactly
+        # what the host-mediated run's from_ maps moved — then release
+        # every entry this run pinned (outputs and propagated peer copies)
+        try:
+            for name, (dev, entry) in producer.items():
+                results[name] = ex.fetch_resident(dev, entry)
+        finally:
+            for dev, n in peer_entries:
+                ex.exit_data(dev, n)
     return results

@@ -315,6 +315,108 @@ class TargetExecutor:
             ent.version += 1
             ent.device_ahead = False       # the host push wins from here on
 
+    def _alloc_specs(self, device: int, specs: Sequence[jax.ShapeDtypeStruct],
+                     tag: str) -> List[int]:
+        """ALLOC one handle per spec; on failure free the ones already made."""
+        pool = self.pool
+        hs: List[int] = []
+        try:
+            for s in specs:
+                hs.append(pool.alloc(device, s.shape, s.dtype, tag=tag))
+        except BaseException:
+            with contextlib.suppress(DeviceStoppedError):
+                for h in hs:
+                    pool.free(device, h)
+            raise
+        return hs
+
+    def alloc_resident(self, device: int, name: str, template: Any, *,
+                       tag: str = "alloc_resident") -> None:
+        """Pin an *uninitialized* buffer: ALLOC only, zero host transfer.
+
+        The device-side output half of a data environment: the entry starts
+        *device-ahead* (the host has no value for it — ``host_leaves`` are
+        None placeholders, so value matches miss until a fetch reconciles),
+        a kernel's ``device_out`` map writes it, a peer collective reduces
+        it, and :meth:`fetch_resident` reads it back.  ``template`` is a
+        value, ``ShapeDtypeStruct``, or pytree of either.
+        """
+        pool = self.pool
+        leaves, treedef = _flatten_map_value(template)
+        if any(isinstance(l, Section) for l in leaves):
+            raise TypeError(f"array section {name!r} cannot be made resident")
+        specs = [_as_spec(l) for l in leaves]
+        with pool.env_locks[device]:
+            if pool.present[device].get(name) is not None:
+                raise KeyError(f"{name!r} is already resident on device {device}")
+            hs = self._alloc_specs(device, specs, f"{tag}:{name}")
+            pool.present[device].add(PresentEntry(
+                name=name, handles=hs, treedef=treedef,
+                host_leaves=[None] * len(hs), specs=specs,
+                write_futs=[None] * len(hs), device_ahead=True))
+
+    def propagate_resident(self, src: int, dst: int, name: str, *,
+                           transport: Any = None, tag: str = "peer") -> None:
+        """Fulfill a present entry device→device: ``dst`` gains (or refreshes)
+        entry ``name`` from ``src``'s device copy, without host reconciliation.
+
+        This is the peer-path analogue of ``enter_data``: a *device-ahead*
+        entry (a ``device_out`` result nothing has fetched) propagates to the
+        peer still device-ahead — the host never sees the bytes.  If ``dst``
+        already holds ``name`` (with matching structure), its handles are
+        overwritten in place; otherwise fresh handles are allocated (ALLOC
+        only) and the entry installed with one reference, owned by the
+        caller.  ``transport`` defaults to a :class:`~repro.core.transport.
+        PeerTransport`; pass a ``HostFunnelTransport`` to route the same
+        fulfillment through the host NIC (the paper-faithful wire).
+        """
+        if src == dst:
+            return
+        pool = self.pool
+        if transport is None:
+            from .transport import PeerTransport
+            transport = PeerTransport()
+        with pool.env_locks[src]:
+            sent = pool.present[src].get(name)
+            if sent is None:
+                raise KeyError(f"{name!r} is not resident on device {src}")
+            sent.refcount += 1         # hold: a concurrent exit_data must not
+                                       # free the source handles mid-copy
+            # snapshot under the src lock: `snap` is an immutable-by-
+            # convention copy whose fields stay coherent after release
+            src_handles = list(sent.handles)
+            snap = sent.peer_clone(src_handles, [])
+            specs, treedef = list(snap.specs), snap.treedef
+        try:
+            with pool.env_locks[dst]:
+                dent = pool.present[dst].get(name)
+                if dent is not None:
+                    if (not same_treedef(dent.treedef, treedef)
+                            or len(dent.specs) != len(specs)
+                            or any(a.shape != b.shape
+                                   or jnp.dtype(a.dtype) != jnp.dtype(b.dtype)
+                                   for a, b in zip(dent.specs, specs))):
+                        raise ValueError(
+                            f"resident buffer {name!r} structure differs "
+                            f"between devices {src} and {dst}; exit_data the "
+                            f"stale one first")
+                    dst_handles = list(dent.handles)
+                else:
+                    dst_handles = self._alloc_specs(dst, specs, f"{tag}:{name}")
+                futs = [transport.sendrecv(pool, src, sh, dst, dh,
+                                           tag=f"{tag}:{name}")
+                        for sh, dh in zip(src_handles, dst_handles)]
+                if dent is None:
+                    pool.present[dst].add(snap.peer_clone(dst_handles, futs))
+                else:
+                    # refresh in place: the peer write is the new producer
+                    dent.host_leaves = list(snap.host_leaves)
+                    dent.device_ahead = snap.device_ahead
+                    dent.write_futs = futs
+                    dent.version += 1
+        finally:
+            self.exit_data(src, name)  # release the hold taken above
+
     def exit_data(self, device: int, *names: str) -> None:
         """``target exit data``: drop one reference; free at zero."""
         pool = self.pool

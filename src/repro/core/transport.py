@@ -1,0 +1,294 @@
+"""Transport layer: who carries a byte between two devices (beyond paper §6).
+
+The paper's stated limitation is that "two devices cannot communicate with
+each other directly" — every exchange is host↔device, and §5.6 shows that
+funnel losing on a Gbit link.  Its future work ("it may also be possible to
+use MPI collective communications") is exactly what the OpenMP Cluster model
+(arXiv:2207.05677) and HDArray (arXiv:1809.05657) build: a runtime that moves
+data peer-to-peer behind the directive interface.  This module makes the
+topology a first-class, swappable object:
+
+* :class:`HostFunnelTransport` — paper-faithful: a device→device copy is a
+  fetch to the host plus a re-send, every byte crossing the host NIC twice.
+* :class:`PeerTransport` — devices exchange buffers with SEND/RECV commands
+  that rendezvous across two device streams (:meth:`DevicePool.peer_copy`);
+  bytes are accounted per directed link and timed on per-link lanes.
+
+Collectives are built *on* the transport from the one primitive, so the same
+ring all-reduce runs over either topology and the cost model shows the
+difference instead of a ``record_adjustment`` pretending it:
+
+* :meth:`Transport.ring_allreduce` — whole-buffer ring: D-1 rounds, each
+  device forwards the buffer it received and accumulates into its own copy;
+  per-link traffic is ``(D-1)·|buf|``, with the round's D messages
+  concurrent on their per-link lanes in the modeled timeline.
+* :meth:`Transport.gather` — leaf-wise gather of every device's buffer to a
+  root's scratch slots.
+* :meth:`Transport.broadcast` — ring-chain broadcast (root → root+1 → …),
+  each hop stream-ordered after the previous hop's RECV.
+* :meth:`Transport.allreduce_mean` — gather → reduce at the root in device
+  order → scale by 1/D → broadcast.  The root reduction adds in ascending
+  device order, matching the host-mediated ``sum(views)/D`` exactly, so
+  direct parameter averaging is *bit-identical* to the funnel path.
+
+All collectives operate on mediary handles already resident on the devices
+and compose with the dependency-aware stream: SEND reads, RECV writes, the
+on-device reduction EXECs read both operands and write back the accumulator,
+so a collective interleaves safely with ``nowait`` regions sharing the same
+buffers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+
+from .costmodel import LinkModel
+
+#: Kernels the collectives EXEC on the devices; registered lazily into the
+#: pool's own table so every pool (and its remote replicas, in the paper's
+#: model) agrees on the wire index.
+ADD_KERNEL = "__transport_add"
+DIV_KERNEL = "__transport_div"
+Q8_KERNEL = "__transport_q8"
+
+
+def _ensure_kernels(pool) -> None:
+    table = pool.table
+    if ADD_KERNEL not in table:
+        table.register(ADD_KERNEL, lambda a, b: a + b)
+    if DIV_KERNEL not in table:
+        table.register(DIV_KERNEL, lambda a, s: a / s)
+    if Q8_KERNEL not in table:
+        from . import compression as comp
+
+        def q8_roundtrip(a):
+            # what the wire does to a message under block-int8 compression:
+            # quantize, (send,) dequantize — the lossy round trip, on-device
+            return comp.decompress(comp.compress(a), a.shape, a.dtype)
+
+        table.register(Q8_KERNEL, q8_roundtrip)
+
+
+class Transport:
+    """How a buffer moves from one device's mediary slot to another's.
+
+    Subclasses implement :meth:`sendrecv`; the collectives below are
+    topology-agnostic and inherit whichever fabric the subclass provides.
+    """
+
+    kind = "abstract"
+
+    def sendrecv(self, pool, src: int, src_handle: int,
+                 dst: int, dst_handle: int, *,
+                 nbytes: Optional[int] = None, tag: str = ""):
+        """Copy ``(src, src_handle)`` into ``(dst, dst_handle)``.
+
+        Returns the future of the destination write (a registered writer of
+        ``dst_handle`` in ``dst``'s stream), or None for a transport whose
+        writes are synchronous.
+        """
+        raise NotImplementedError
+
+    # -- collectives -----------------------------------------------------------
+    def ring_allreduce(self, pool, handles: Sequence[Sequence[int]],
+                       specs: Sequence[jax.ShapeDtypeStruct], *,
+                       wire_nbytes: Optional[Sequence[int]] = None,
+                       tag: str = "ring") -> List[List[Any]]:
+        """In-place sum across devices: ``handles[d][j] ← Σ_d handles[d][j]``.
+
+        Whole-buffer ring: in round ``t`` device ``d`` forwards the buffer it
+        received in round ``t-1`` (its own in round 0) to ``d+1`` and adds
+        the buffer arriving from ``d-1`` into its accumulator.  After
+        ``D-1`` rounds every device holds the full sum (per-device addition
+        order follows the ring, so replicas agree to float tolerance, not
+        bitwise).  Receive buffers ping-pong between two scratch slots: a
+        round's SEND reads the *previous* round's slot while its RECV fills
+        the other, so concurrent sends and receives of one round never
+        touch the same handle.  SEND/RECV and writebacks issue
+        asynchronously; the host loop does synchronize on each on-device
+        ADD (``exec_kernel`` returns the value — the simulation's wall
+        clock serializes there, the *modeled* timeline overlaps per lane).
+        ``wire_nbytes[j]`` overrides leaf ``j``'s accounted message size
+        (modeled wire compression).  Returns the per-device per-leaf futures
+        of the final accumulator writes (stream ordering for entry updates).
+        """
+        D, L = len(handles), len(specs)
+        last: List[List[Any]] = [[None] * L for _ in range(D)]
+        if D <= 1:
+            return last
+        _ensure_kernels(pool)
+        tmp = [[[pool.alloc(d, s.shape, s.dtype, tag=f"{tag}:tmp")
+                 for s in specs] for d in range(D)] for _ in range(2)]
+        try:
+            for step in range(D - 1):
+                cur, prev = tmp[step % 2], tmp[(step - 1) % 2]
+                for d in range(D):
+                    nxt = (d + 1) % D
+                    for j in range(L):
+                        src_h = handles[d][j] if step == 0 else prev[d][j]
+                        self.sendrecv(pool, d, src_h, nxt, cur[nxt][j],
+                                      nbytes=None if wire_nbytes is None
+                                      else wire_nbytes[j],
+                                      tag=f"{tag}:r{step}")
+                for d in range(D):
+                    for j in range(L):
+                        out = pool.exec_kernel(
+                            d, ADD_KERNEL,
+                            buffers={"a": handles[d][j], "b": cur[d][j]},
+                            tag=f"{tag}:add")
+                        last[d][j] = pool.transfer_to_writeback(d, handles[d][j],
+                                                                out)
+        finally:
+            # scratch is freed even on a failed round (FREE is a stream
+            # writer: it runs after any in-flight SEND/RECV of the slot)
+            for half in tmp:
+                for d in range(D):
+                    for j in range(L):
+                        pool.free(d, half[d][j])
+        return last
+
+    def gather(self, pool, handles: Sequence[Sequence[int]],
+               specs: Sequence[jax.ShapeDtypeStruct], *, root: int = 0,
+               tag: str = "gather") -> Dict[int, List[int]]:
+        """Copy every non-root device's buffer into fresh scratch slots on
+        ``root``.  Returns ``{src_device: [scratch handles]}``; the caller
+        owns (and frees) the scratch."""
+        D = len(handles)
+        scratch: Dict[int, List[int]] = {}
+        for d in range(D):
+            if d == root:
+                continue
+            scratch[d] = [pool.alloc(root, s.shape, s.dtype, tag=f"{tag}:buf")
+                          for s in specs]
+            for j, s in enumerate(specs):
+                self.sendrecv(pool, d, handles[d][j], root, scratch[d][j],
+                              tag=tag)
+        return scratch
+
+    def broadcast(self, pool, handles: Sequence[Sequence[int]],
+                  specs: Sequence[jax.ShapeDtypeStruct], *, root: int = 0,
+                  tag: str = "bcast") -> List[List[Any]]:
+        """Ring-chain broadcast of ``root``'s buffer into every device's
+        handles (root → root+1 → …).  Each hop's SEND reads the handle the
+        previous hop's RECV wrote, so the chain pipelines per leaf.  Returns
+        per-device per-leaf futures of the destination writes."""
+        D, L = len(handles), len(specs)
+        last: List[List[Any]] = [[None] * L for _ in range(D)]
+        chain = [(root + i) % D for i in range(D)]
+        for prev, cur in zip(chain, chain[1:]):
+            for j in range(L):
+                last[cur][j] = self.sendrecv(pool, prev, handles[prev][j],
+                                             cur, handles[cur][j], tag=tag)
+        return last
+
+    def allreduce_mean(self, pool, handles: Sequence[Sequence[int]],
+                       specs: Sequence[jax.ShapeDtypeStruct], *,
+                       root: int = 0, tag: str = "avg") -> List[List[Any]]:
+        """Mean across devices, bit-identical to the host-mediated path.
+
+        Gather to ``root``, reduce there in ascending device order (the same
+        association as the host's ``sum(views) / D``), divide by ``D``, then
+        ring-broadcast the mean back into every device's handles.
+        """
+        D, L = len(handles), len(specs)
+        last: List[List[Any]] = [[None] * L for _ in range(D)]
+        if D <= 1:
+            return last
+        _ensure_kernels(pool)
+        scratch = self.gather(pool, handles, specs, root=root, tag=f"{tag}:gather")
+        # accumulate in ASCENDING DEVICE order — device d's operand is its
+        # gathered scratch copy, the root's its own buffer — so the
+        # association matches the host's sum(views) for ANY root, not just
+        # root 0.  Partial sums land only in scratch slots: the root's live
+        # buffer is written exactly once, by the final divide, so a
+        # mid-collective failure leaves every device's buffer intact (the
+        # host-mediated path has the same all-or-nothing property).
+        try:
+            for j in range(L):
+                acc = handles[root][j] if root == 0 else scratch[0][j]
+                for d in range(1, D):
+                    operand = handles[root][j] if d == root else scratch[d][j]
+                    out = pool.exec_kernel(root, ADD_KERNEL,
+                                           buffers={"a": acc, "b": operand},
+                                           tag=f"{tag}:reduce")
+                    if acc == handles[root][j]:  # first add when root == 0:
+                        acc = operand            # park the sum in scratch
+                    pool.transfer_to_writeback(root, acc, out)
+                out = pool.exec_kernel(root, DIV_KERNEL, buffers={"a": acc},
+                                       firstprivate={"s": float(D)},
+                                       tag=f"{tag}:mean")
+                last[root][j] = pool.transfer_to_writeback(root,
+                                                           handles[root][j], out)
+        finally:
+            for hs in scratch.values():
+                for h in hs:
+                    pool.free(root, h)
+        bcast = self.broadcast(pool, handles, specs, root=root, tag=f"{tag}:bcast")
+        for d in range(D):
+            if d != root:
+                last[d] = bcast[d]
+        return last
+
+    def quantize_int8(self, pool, handles: Sequence[Sequence[int]],
+                      specs: Sequence[jax.ShapeDtypeStruct], *,
+                      tag: str = "q8") -> List[int]:
+        """Apply the wire's block-int8 round trip to every device's buffer
+        in place and return the per-leaf compressed message sizes, for use
+        as ``wire_nbytes`` in a following collective."""
+        import numpy as np
+
+        _ensure_kernels(pool)
+        for d in range(len(handles)):
+            for j in range(len(specs)):
+                out = pool.exec_kernel(d, Q8_KERNEL,
+                                       buffers={"a": handles[d][j]},
+                                       tag=f"{tag}:quantize")
+                pool.transfer_to_writeback(d, handles[d][j], out)
+        sizes = []
+        for s in specs:
+            n = int(np.prod(s.shape, dtype=np.int64)) if s.shape else 1
+            blocks = -(-n // 256)          # compression.compress block=256
+            sizes.append(blocks * 256 * 1 + blocks * 4)  # int8 payload + scales
+        return sizes
+
+
+class HostFunnelTransport(Transport):
+    """Paper-faithful topology: the host is the only wire.
+
+    A device→device copy is TRANSFER_FROM(src) + TRANSFER_TO(dst): the bytes
+    cross the host NIC twice and are accounted (and timed) there — this is
+    the measured source of degradation in the paper's §5.6 and the baseline
+    the peer transport is judged against.
+    """
+
+    kind = "host-funnel"
+
+    def sendrecv(self, pool, src: int, src_handle: int,
+                 dst: int, dst_handle: int, *,
+                 nbytes: Optional[int] = None, tag: str = ""):
+        value = pool.transfer_from(src, src_handle, tag=tag)
+        return pool.transfer_to(dst, dst_handle, value, tag=tag)
+
+
+class PeerTransport(Transport):
+    """Direct device↔device fabric over SEND/RECV stream commands.
+
+    Byte accounting is always per directed link, never against the host
+    funnel.  Message *timing* comes from the pool's ``cost.peer_link``
+    (``RuntimeConfig.peer_link`` installs it at runtime construction; set
+    it yourself on a bare pool) — a transfer never re-times a shared cost
+    model as a side effect.  ``link`` documents the fabric this transport
+    was built for; owners install it explicitly.
+    """
+
+    kind = "peer"
+
+    def __init__(self, link: Optional[LinkModel] = None) -> None:
+        self.link = link
+
+    def sendrecv(self, pool, src: int, src_handle: int,
+                 dst: int, dst_handle: int, *,
+                 nbytes: Optional[int] = None, tag: str = ""):
+        return pool.peer_copy(src, src_handle, dst, dst_handle,
+                              nbytes=nbytes, tag=tag)

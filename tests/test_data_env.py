@@ -271,9 +271,11 @@ def test_adjustment_credits_reach_overlap_makespan():
     assert cm.makespan(overlap=True) == pytest.approx(1.0)
 
 
-def test_direct_mode_credit_accounting():
-    """Direct-mode ring credits keep bytes/comm_time consistent: credits
-    remove bytes without adding per-message latency."""
+def test_direct_mode_peer_accounting():
+    """Direct mode is a real peer collective now (PR 4): the host funnel
+    carries exactly ONE reduced copy, the ring's bytes are timed on
+    per-link peer lanes, and no zero-latency adjustment fakes the
+    difference away."""
     table = _dp_table()
     d = 64
     params = {"w": jnp.eye(d), "b": jnp.zeros((d,))}
@@ -285,24 +287,27 @@ def test_direct_mode_credit_accounting():
                             table=table)
         rt.data_parallel_grads("mse_grads", params, batches3, resident=False)
         s = rt.cost.summary()
+        n_adj = len(rt.cost.adjustments)
         rt.shutdown()
-        return s
+        return s, n_adj
 
-    host, direct = run("host-mediated"), run("direct")
+    (host, host_adj), (direct, direct_adj) = (run("host-mediated"),
+                                              run("direct"))
     param_bytes = (d * d + d) * 4
-    # host funnel fetches D copies; direct keeps one + the modeled ring
+    # host funnel fetches D gradient copies; direct fetches the one sum
     assert host["bytes_from"] == 3 * param_bytes
-    assert direct["bytes_from"] == pytest.approx(
-        param_bytes + int(2 * (3 - 1) / 3 * param_bytes))
-    assert direct["bytes_from"] < host["bytes_from"]
-    # exact analytic delta: the credits subtract pure bandwidth (2 fetched
-    # copies) and the ring adds its bytes + its own per-message latency —
-    # the seed bug added +latency per *credit* message too
+    assert direct["bytes_from"] == param_bytes
+    assert host["bytes_peer"] == 0
+    # whole-buffer ring: D-1 rounds, |g| per directed link per round,
+    # D links — real SEND/RECV messages, zero host-NIC bytes
+    assert direct["bytes_peer"] == 3 * 2 * param_bytes
+    # concurrent links: the collective's time is ONE link's serialization
+    # (two leaves -> two messages per round on this pytree)
     from repro.core import PAPER_ETHERNET as link
-    ring_bytes = int(2 * (3 - 1) / 3 * param_bytes)
-    want_delta = (-2 * param_bytes / link.bandwidth_Bps
-                  + link.time(ring_bytes, n_messages=2 * (3 - 1)))
-    assert direct["comm_s"] - host["comm_s"] == pytest.approx(want_delta)
+    assert direct["peer_s"] == pytest.approx(
+        2 * (link.time(d * d * 4) + link.time(d * 4)))
+    # the retirement of record_adjustment: the direct path records none
+    assert host_adj == 0 and direct_adj == 0
 
 
 # ---------------------------------------------------------------------------

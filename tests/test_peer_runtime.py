@@ -1,0 +1,396 @@
+"""Runtime + scheduler layers over the peer transport (PR 4): direct-mode
+collectives replacing credit accounting, device→device PresentEntry
+fulfillment, peer-routed wavefront DAGs, and the satellite regressions
+(shape-change replacement on a long-lived runtime; exit_data with unsettled
+device-ahead write futures)."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ClusterRuntime, DagTask, DevicePool,
+                        HostFunnelTransport, KernelTable, MapSpec, PeerRef,
+                        RuntimeConfig, TargetExecutor, wavefront_offload)
+
+
+def _dp_table():
+    table = KernelTable()
+
+    @table.kernel("mse_grads")
+    def mse_grads(params, batch):
+        def loss(p):
+            pred = batch["x"] @ p["w"] + p["b"]
+            return jnp.mean((pred - batch["y"]) ** 2)
+        return {"grads": jax.grad(loss)(params)}
+
+    return table
+
+
+def _params(d, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.standard_normal((d, d)), jnp.float32),
+            "b": jnp.zeros((d,), jnp.float32)}
+
+
+def _batches(d, nb, n, seed=1):
+    rng = np.random.default_rng(seed)
+    return [{"x": jnp.asarray(rng.standard_normal((nb, d)), jnp.float32),
+             "y": jnp.asarray(rng.standard_normal((nb, d)), jnp.float32)}
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# data_parallel_grads: the ring is real now
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("resident", [True, False])
+def test_direct_grads_match_host_mediated(resident):
+    d, n = 24, 3
+    params, batches = _params(d), _batches(d, 4, n)
+
+    def run(mode):
+        rt = ClusterRuntime(RuntimeConfig(n_virtual=n, comm_mode=mode),
+                            table=_dp_table())
+        g = rt.data_parallel_grads("mse_grads", params, batches,
+                                   resident=resident)
+        g2 = rt.data_parallel_grads("mse_grads", params, batches,
+                                    resident=resident)
+        s = rt.cost.summary()
+        rt.shutdown()
+        return g, g2, s
+
+    gh, gh2, sh = run("host-mediated")
+    gd, gd2, sd = run("direct")
+    for a, b in ((gd, gh), (gd2, gh2)):
+        np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]),
+                                   rtol=1e-5, atol=1e-6)
+    # two calls: the funnel fetched 2 sums, not 2·D gradient copies
+    param_bytes = (d * d + d) * 4
+    assert sd["bytes_from"] == 2 * param_bytes
+    assert sh["bytes_from"] == 2 * n * param_bytes
+    assert sd["bytes_peer"] > 0 and sh["bytes_peer"] == 0
+
+
+def test_direct_grads_int8_wire_within_block_bound():
+    d, n = 32, 4
+    params, batches = _params(d), _batches(d, 4, n)
+    rt = ClusterRuntime(RuntimeConfig(n_virtual=n, comm_mode="host-mediated"),
+                        table=_dp_table())
+    ref = rt.data_parallel_grads("mse_grads", params, batches)
+    rt.shutdown()
+    rt = ClusterRuntime(RuntimeConfig(n_virtual=n, comm_mode="direct",
+                                      compress=True), table=_dp_table())
+    g = rt.data_parallel_grads("mse_grads", params, batches)
+    s = rt.cost.summary()
+    rt.shutdown()
+    err = np.abs(np.asarray(g["w"]) - np.asarray(ref["w"])).max()
+    scale = np.abs(np.asarray(ref["w"])).max()
+    assert err <= scale / 64, (err, scale)
+    # the ring moved compressed messages: block-int8 is ~4x smaller
+    raw_ring = n * (n - 1) * (d * d + d) * 4
+    assert s["bytes_peer"] < 0.4 * raw_ring
+
+
+def test_direct_path_records_no_adjustments():
+    """Acceptance: the direct path's bytes are all real messages — the
+    credit-based ring (`record_adjustment`) is retired."""
+    n = 3
+    params, batches = _params(16), _batches(16, 2, n)
+    rt = ClusterRuntime(RuntimeConfig(n_virtual=n, comm_mode="direct"),
+                        table=_dp_table())
+    rt.data_parallel_grads("mse_grads", params, batches)
+    for _ in range(4):
+        rt.data_parallel_step("mse_grads", params, batches, sync_every=2)
+    assert rt.cost.adjustments == []
+    assert rt.cost.bytes_peer() > 0
+    rt.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# satellite: shape-change replacement on a long-lived runtime
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["host-mediated", "direct"])
+def test_param_shape_change_on_long_lived_runtime(mode):
+    """Regression (PR 4 satellite): swapping in a new model shape under the
+    same resident-entry name must replace the environment — the old code's
+    except-branch freed an entry it never entered under that name."""
+    rt = ClusterRuntime(RuntimeConfig(n_virtual=2, comm_mode=mode),
+                        table=_dp_table())
+    for d in (16, 24, 16):                       # grow, then shrink back
+        params, batches = _params(d), _batches(d, 2, 2)
+        g = rt.data_parallel_grads("mse_grads", params, batches)
+        assert np.asarray(g["w"]).shape == (d, d)
+        # the entry now resident is the new shape, under the runtime's
+        # namespaced name
+        ent = rt.pool.present[0].get("_dpg_params")
+        assert ent is not None and ent.specs[1].shape == (d, d)
+    rt.pool.sync()
+    for dev in range(2):
+        assert (sorted(rt.pool.mirrors[dev].live_handles())
+                == sorted(rt.pool.devices[dev].store.live_handles())), dev
+    rt.shutdown()
+
+
+def test_dp_grads_does_not_clobber_user_params_environment():
+    """The audit behind the satellite: the trainer pins under `_dpg_params`,
+    so a user's own environment named "params" survives a shape change that
+    triggers the replacement path (the old code exited — and could free —
+    the user's entry)."""
+    rt = ClusterRuntime(RuntimeConfig(n_virtual=2), table=_dp_table())
+    mine = jnp.arange(7.0, dtype=jnp.float32)
+    for d in range(2):
+        rt.ex.enter_data(d, "user", params=mine)
+    rt.data_parallel_grads("mse_grads", _params(16), _batches(16, 2, 2))
+    rt.data_parallel_grads("mse_grads", _params(24), _batches(24, 2, 2))
+    for d in range(2):
+        ent = rt.pool.present[d].get("params")
+        assert ent is not None and ent.refcount == 1
+        np.testing.assert_array_equal(
+            np.asarray(rt.ex.fetch_resident(d, "params")), np.asarray(mine))
+    for d in range(2):
+        rt.ex.exit_data(d, "params")
+    rt.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# data_parallel_step: the direct sync path (the ROADMAP open item)
+# ---------------------------------------------------------------------------
+def test_dps_direct_sync_bit_identical_with_fewer_funnel_bytes():
+    d, n, steps, sync_every = 16, 4, 8, 4
+    params, batches = _params(d), _batches(d, 2, n)
+
+    def run(mode):
+        rt = ClusterRuntime(RuntimeConfig(n_virtual=n, comm_mode=mode),
+                            table=_dp_table())
+        p = None
+        for _ in range(steps):
+            p = rt.data_parallel_step("mse_grads", params, batches,
+                                      sync_every=sync_every)
+        s = rt.cost.summary()
+        rt.shutdown()
+        return p, s
+
+    ph, sh = run("host-mediated")
+    pd, sd = run("direct")
+    # bit-identical: the root reduces in the host's association order
+    np.testing.assert_array_equal(np.asarray(ph["w"]), np.asarray(pd["w"]))
+    np.testing.assert_array_equal(np.asarray(ph["b"]), np.asarray(pd["b"]))
+    # each sync: host-mediated fetches D copies and pushes D means; direct
+    # fetches ONE mean and pushes nothing over the funnel
+    param_bytes = (d * d + d) * 4
+    syncs = steps // sync_every
+    assert sh["bytes_from"] == syncs * n * param_bytes
+    assert sd["bytes_from"] == syncs * param_bytes
+    assert sh["bytes_from"] >= 2 * sd["bytes_from"]
+    assert sd["bytes_to"] < sh["bytes_to"]              # no sync re-broadcast
+    assert sd["bytes_peer"] == syncs * 2 * (n - 1) * param_bytes
+
+
+def test_dps_direct_forced_sync_and_handle_agreement():
+    rt = ClusterRuntime(RuntimeConfig(n_virtual=3, comm_mode="direct"),
+                        table=_dp_table())
+    d = 16
+    params = {"w": jnp.eye(d), "b": jnp.zeros((d,))}
+    batches = [{"x": jnp.ones((2, d)), "y": jnp.full((2, d), float(i))}
+               for i in range(3)]
+    for _ in range(5):
+        rt.data_parallel_step("mse_grads", params, batches, sync_every=2)
+    mean = rt.data_parallel_sync()
+    views = [rt.ex.fetch_resident(dev, "_dps_params") for dev in range(3)]
+    for v in views:                       # broadcast delivered the same mean
+        np.testing.assert_array_equal(np.asarray(v["w"]),
+                                      np.asarray(mean["w"]))
+    rt.pool.sync()
+    for dev in range(3):
+        assert (sorted(rt.pool.mirrors[dev].live_handles())
+                == sorted(rt.pool.devices[dev].store.live_handles())), dev
+    rt.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# mediary: device→device PresentEntry fulfillment
+# ---------------------------------------------------------------------------
+def _ex_pool(n=2):
+    table = KernelTable()
+    table.register("bump", lambda a: {"a": a + 1})
+    table.register("gen", lambda x: {"out": x @ x})
+    table.register("consume", lambda lu, a: {"out": lu + 2 * a})
+    pool = DevicePool.virtual(n, table=table)
+    return pool, TargetExecutor(pool)
+
+
+def test_propagate_resident_device_ahead_skips_host():
+    """A device-ahead entry reaches a peer still device-ahead: the bytes
+    moved peer-to-peer, the host funnel saw none of them, and no host
+    reconciliation happened on the way."""
+    pool, ex = _ex_pool(2)
+    v0 = jnp.zeros(8, jnp.float32)
+    ex.ensure_resident(0, a=v0)
+    for _ in range(3):                       # device copy advances past host
+        ex.target("bump", 0, MapSpec(present=("a",), device_out=("a",)))
+    funnel_before = pool.cost.bytes_moved()
+    ex.propagate_resident(0, 1, "a")
+    ent = pool.present[1].get("a")
+    assert ent is not None and ent.device_ahead
+    assert pool.cost.bytes_moved() == funnel_before      # zero funnel bytes
+    assert pool.cost.bytes_peer() == 8 * 4
+    # the peer's copy is the advanced content, host view still reconciles
+    np.testing.assert_allclose(np.asarray(ex.fetch_resident(1, "a")), 3.0)
+    ex.exit_data(0, "a")
+    ex.exit_data(1, "a")
+    pool.sync()
+    for d in range(2):
+        assert pool.devices[d].store.live_handles() == [], d
+    pool.stop_all()
+
+
+def test_propagate_resident_over_host_funnel_transport():
+    pool, ex = _ex_pool(2)
+    ex.ensure_resident(0, a=jnp.arange(4.0, dtype=jnp.float32))
+    before = pool.cost.bytes_moved()
+    ex.propagate_resident(0, 1, "a", transport=HostFunnelTransport())
+    np.testing.assert_allclose(np.asarray(ex.fetch_resident(1, "a")),
+                               np.arange(4.0))
+    # paper topology: the same fulfillment costs a fetch + a re-send
+    assert pool.cost.bytes_moved() - before >= 2 * 4 * 4
+    assert pool.cost.bytes_peer() == 0
+    ex.exit_data(0, "a")
+    ex.exit_data(1, "a")
+    pool.stop_all()
+
+
+def test_propagate_resident_structure_mismatch_raises():
+    pool, ex = _ex_pool(2)
+    ex.ensure_resident(0, a=jnp.ones(4))
+    ex.ensure_resident(1, a=jnp.ones(5))
+    with pytest.raises(ValueError, match="structure differs"):
+        ex.propagate_resident(0, 1, "a")
+    ex.exit_data(0, "a")
+    ex.exit_data(1, "a")
+    pool.stop_all()
+
+
+# ---------------------------------------------------------------------------
+# satellite: exit_data while a device-ahead entry has unsettled write_futs
+# ---------------------------------------------------------------------------
+def test_exit_data_with_unsettled_device_ahead_write_futs():
+    """The previously untested failure path: exiting an entry whose
+    device-side writeback has not run yet (exactly the state a nowait
+    ``device_out`` region leaves behind — marked ahead, write futures
+    pending in the stream).  The FREE is a stream writer of the same
+    handle, so it must run after the writeback; nothing leaks, nothing
+    raises, and the late writeback still lands in a live slot."""
+    pool, ex = _ex_pool(1)
+    ex.ensure_resident(0, a=jnp.zeros(8, jnp.float32))
+    gate = threading.Event()
+    pool._submit(0, gate.wait)               # hold the device stream
+    # the device_out epilogue, as _writeback_ahead performs it: mark ahead
+    # and queue the on-device writeback in one env-lock critical section
+    with pool.env_locks[0]:
+        ent = pool.present[0].get("a")
+        h = ent.handles[0]
+        ent.device_ahead = True
+        ent.version += 1
+        ent.write_futs = [pool.transfer_to_writeback(
+            0, h, jnp.full(8, 3.0, jnp.float32))]
+        wf = list(ent.write_futs)
+    assert not wf[0].done()                  # genuinely unsettled
+    ex.exit_data(0, "a")                     # free with the writeback pending
+    assert pool.present[0].get("a") is None
+    gate.set()
+    pool.sync()                              # writeback then FREE, no error
+    assert pool.devices[0].store.live_handles() == []
+    assert pool.mirrors[0].live_handles() == []
+    pool.stop_all()
+
+
+# ---------------------------------------------------------------------------
+# scheduler: peer-routed wavefront
+# ---------------------------------------------------------------------------
+def _fanout_dag(mat, ams):
+    sds = jax.ShapeDtypeStruct(mat.shape, mat.dtype)
+    tasks = [DagTask("p", "gen", (),
+                     lambda deps: MapSpec(to={"x": mat}, from_={"out": sds}))]
+    for i, a in enumerate(ams):
+        tasks.append(DagTask(
+            f"c{i}", "consume", ("p",),
+            (lambda a=a: lambda deps: MapSpec(
+                to={"lu": deps["p"], "a": a}, from_={"out": sds}))()))
+    return tasks
+
+
+def _run_wave(peer, nowait=True, n_dev=2):
+    rng = np.random.default_rng(0)
+    mat = jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
+    ams = [jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
+           for _ in range(5)]
+    pool, ex = _ex_pool(n_dev)
+    res = wavefront_offload(ex, _fanout_dag(mat, ams), nowait=nowait,
+                            peer=peer)
+    s = pool.cost.summary()
+    for d in range(n_dev):                  # every entry released
+        assert len(pool.present[d]) == 0, pool.present[d].names()
+    pool.sync()
+    for d in range(n_dev):
+        assert pool.devices[d].store.live_handles() == [], d
+        assert pool.mirrors[d].live_handles() == [], d
+    pool.stop_all()
+    return res, s
+
+
+@pytest.mark.parametrize("nowait", [False, True])
+def test_peer_wavefront_matches_host_mediated(nowait):
+    r_host, _ = _run_wave(peer=False, nowait=nowait)
+    r_peer, _ = _run_wave(peer=True, nowait=nowait)
+    assert r_host.keys() == r_peer.keys()
+    for k in r_host:
+        np.testing.assert_allclose(np.asarray(r_peer[k]),
+                                   np.asarray(r_host[k]), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_peer_wavefront_routes_edges_off_the_funnel():
+    _, s_host = _run_wave(peer=False)
+    _, s_peer = _run_wave(peer=True)
+    # the pivot's fan-out edges stop crossing the host: strictly fewer
+    # to-bytes, dependencies ride the peer fabric, final results still
+    # fetched exactly once each
+    assert s_peer["bytes_to"] < s_host["bytes_to"], (s_peer, s_host)
+    assert s_peer["bytes_peer"] > 0 and s_host["bytes_peer"] == 0
+    assert s_peer["bytes_from"] == s_host["bytes_from"]
+
+
+def test_peer_wavefront_failure_releases_entries():
+    pool, ex = _ex_pool(2)
+    table = pool.table
+    table.register("boomk", lambda x: (_ for _ in ()).throw(
+        ValueError("injected kernel failure")))
+    rng = np.random.default_rng(1)
+    mat = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    sds = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    tasks = _fanout_dag(mat, [mat + 1, mat + 2])
+    tasks.append(DagTask("bad", "boomk", ("p",),
+                         lambda deps: MapSpec(to={"x": deps["p"]},
+                                              from_={"out": sds})))
+    with pytest.raises(ValueError, match="injected"):
+        wavefront_offload(ex, tasks, nowait=True, peer=True)
+    for d in range(2):
+        assert len(pool.present[d]) == 0, pool.present[d].names()
+    pool.sync()
+    for d in range(2):
+        assert pool.devices[d].store.live_handles() == [], d
+    pool.stop_all()
+
+
+def test_peer_ref_misuse_raises():
+    pool, ex = _ex_pool(2)
+    sds = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    mat = jnp.eye(4)
+    tasks = [DagTask("p", "gen", (),
+                     lambda deps: MapSpec(to={"x": mat}, from_={"out": sds})),
+             DagTask("c", "bump", ("p",),
+                     lambda deps: MapSpec(tofrom={"a": deps["p"]}))]
+    with pytest.raises(TypeError, match="to= clause"):
+        wavefront_offload(ex, tasks, nowait=False, peer=True)
+    pool.stop_all()
