@@ -1,0 +1,202 @@
+"""Placement policies on the paper's workloads: who moves fewer bytes.
+
+The three patterns now lower into one TaskGraph IR and take pluggable
+placement policies; this benchmark quantifies what each policy buys on the
+two ends of the paper's spectrum:
+
+* **sparselu wavefront** (§5.6, the workload that loses): the task DAG's
+  inter-device edges are the cost.  ``round-robin`` (the historical static
+  placement) scatters producers and consumers; ``locality`` packs consumers
+  onto their inputs' devices; ``heft`` prices every candidate device with
+  the CostModel's link/kernel timings.  Two HEFT operating points are
+  reported: the comm-bound estimate (task time ≪ edge time — §5.6's regime,
+  where HEFT retires nearly every cross-device edge, ≥25% fewer total moved
+  bytes than round-robin, asserted) and a compute-bound estimate (HEFT
+  spreads for makespan and buys it with bytes).  All placements are
+  BIT-identical in results — asserted.
+* **strips** (§5.3–5.4, the workload that wins): no dependencies, no
+  locality signal — every policy must degrade to arrival order.  Asserted
+  byte-identical traffic across policies: cost-driven placement cannot
+  regress the embarrassingly parallel case.
+
+A capacity-capped sparselu run (each device's present table bounded to a
+few blocks) forces LRU eviction + transparent refetch mid-factorization and
+must still match bit-for-bit — the failure-free spill path, asserted.
+
+``--json PATH`` dumps every section's rows (the CI writes
+``artifacts/bench/BENCH_sched.json`` from it — the scheduling-perf artifact
+tracked commit over commit).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from bots_sparselu import _build_dag, _make_table, _matrix
+
+from repro.core import (ClusterRuntime, HeftPlacement, KernelTable, MapSpec,
+                        RuntimeConfig, offload_strips, sec)
+from repro.core.costmodel import PAPER_ETHERNET
+
+
+def _policy_menu():
+    return [
+        ("round-robin", "round-robin"),
+        ("locality", "locality"),
+        # frozen estimates: deterministic placement (measured timings on a
+        # shared host include jit-compile spikes that vary run to run)
+        ("heft (comm-bound)", HeftPlacement(default_task_s=5e-6,
+                                            use_observed=False)),
+        ("heft (compute-bound)", HeftPlacement(default_task_s=100e-6,
+                                               use_observed=False)),
+    ]
+
+
+def run_sparselu(K: int = 4, B: int = 64, n_dev: int = 4) -> List[Dict]:
+    """Policy comparison on the sparselu wavefront (peer-routed edges)."""
+    mat = _matrix(K, B)
+    table = _make_table(K)
+    rows: List[Dict] = []
+    ref = None
+    base_total = None
+    for name, policy in _policy_menu():
+        rt = ClusterRuntime(RuntimeConfig(n_virtual=n_dev,
+                                          link=PAPER_ETHERNET), table=table)
+        res = rt.wavefront_offload(_build_dag(mat, K, B), nowait=True,
+                                   peer=True, policy=policy)
+        s = rt.cost.summary()
+        devs_used = len({c.device for c in rt.cost.compute})
+        rt.shutdown()
+        vals = {k: np.asarray(v) for k, v in res.items()}
+        if ref is None:
+            ref = vals
+        for k in ref:     # placement moves bytes, never values
+            assert np.array_equal(ref[k], vals[k]), (name, k)
+        total = s["bytes_to"] + s["bytes_from"] + s["bytes_peer"]
+        if base_total is None:
+            base_total = total
+        rows.append({"policy": name, "devices": n_dev,
+                     "tasks": K * (K + 1) * (2 * K + 1) // 6,
+                     "bytes_to": s["bytes_to"], "bytes_from": s["bytes_from"],
+                     "bytes_peer": s["bytes_peer"], "total_MB": total / 1e6,
+                     "reduction_pct": 100.0 * (1 - total / base_total),
+                     "devs_used": devs_used,
+                     "makespan_overlap_s": s["makespan_overlap_s"]})
+    # acceptance: cost-driven placement cuts total moved bytes, >=25% for
+    # HEFT in the comm-bound regime
+    by = {r["policy"]: r for r in rows}
+    assert by["locality"]["reduction_pct"] > 0.0, rows
+    assert by["heft (comm-bound)"]["reduction_pct"] >= 25.0, rows
+
+    # capacity-capped re-run: LRU spill + transparent refetch mid-graph,
+    # still bit-for-bit
+    cap = 6 * B * B * 4
+    rt = ClusterRuntime(RuntimeConfig(n_virtual=n_dev, link=PAPER_ETHERNET,
+                                      device_capacity_bytes=cap), table=table)
+    res = rt.wavefront_offload(_build_dag(mat, K, B), nowait=True, peer=True,
+                               policy=HeftPlacement(default_task_s=5e-6,
+                                                    use_observed=False))
+    s = rt.cost.summary()
+    mem = rt.memory_report()
+    rt.shutdown()
+    for k in ref:
+        assert np.array_equal(ref[k], np.asarray(res[k])), ("capped", k)
+    evictions = sum(m["evictions"] for m in mem.values())
+    refetches = sum(m["refetches"] for m in mem.values())
+    assert evictions >= 1, mem
+    total = s["bytes_to"] + s["bytes_from"] + s["bytes_peer"]
+    rows.append({"policy": f"heft (comm-bound, cap={cap}B)",
+                 "devices": n_dev, "tasks": rows[0]["tasks"],
+                 "bytes_to": s["bytes_to"], "bytes_from": s["bytes_from"],
+                 "bytes_peer": s["bytes_peer"], "total_MB": total / 1e6,
+                 "reduction_pct": 100.0 * (1 - total / base_total),
+                 "devs_used": len(mem), "makespan_overlap_s":
+                 s["makespan_overlap_s"], "evictions": evictions,
+                 "refetches": refetches})
+    return rows
+
+
+def run_strips(total: int = 4096, n_dev: int = 4) -> List[Dict]:
+    """Policies on the dependency-free pattern: must not change anything."""
+    table = KernelTable()
+    table.register("sq", lambda xs: {"out": xs * xs})
+    data = jnp.arange(float(total))
+
+    def make_maps(start, length):
+        return MapSpec(to={"xs": sec(data, start, length)},
+                       from_={"out": jax.ShapeDtypeStruct((length,),
+                                                          data.dtype)})
+
+    rows: List[Dict] = []
+    ref = None
+    for name, policy in _policy_menu():
+        rt = ClusterRuntime(RuntimeConfig(n_virtual=n_dev,
+                                          link=PAPER_ETHERNET), table=table)
+        out = offload_strips(rt.ex, "sq", total, make_maps, policy=policy)
+        s = rt.cost.summary()
+        rt.shutdown()
+        if ref is None:
+            ref = np.asarray(out)
+        assert np.array_equal(ref, np.asarray(out)), name
+        rows.append({"policy": name, "devices": n_dev, "strips": n_dev,
+                     "bytes_to": s["bytes_to"], "bytes_from": s["bytes_from"],
+                     "bytes_peer": s["bytes_peer"],
+                     "makespan_overlap_s": s["makespan_overlap_s"]})
+    # no dependencies -> no locality signal -> byte-identical traffic
+    for r in rows[1:]:
+        for key in ("bytes_to", "bytes_from", "bytes_peer"):
+            assert r[key] == rows[0][key], (r["policy"], key, rows)
+    return rows
+
+
+def render_sparselu(rows: List[Dict]) -> str:
+    out = ["## sparselu wavefront: placement policies (peer-routed edges)",
+           f"{'policy':>28} {'tasks':>6} {'funnel_MB':>10} {'peer_MB':>8} "
+           f"{'total_MB':>9} {'saved':>6} {'devs':>5} {'makespan':>9}"]
+    for r in rows:
+        funnel = (r["bytes_to"] + r["bytes_from"]) / 1e6
+        out.append(f"{r['policy']:>28} {r['tasks']:>6} {funnel:>10.2f} "
+                   f"{r['bytes_peer'] / 1e6:>8.2f} {r['total_MB']:>9.2f} "
+                   f"{r['reduction_pct']:>5.1f}% {r['devs_used']:>5} "
+                   f"{r['makespan_overlap_s']:>9.4f}")
+    capped = rows[-1]
+    if "evictions" in capped:
+        out.append(f"  → capacity-capped run: {capped['evictions']} evictions"
+                   f", {capped['refetches']} refetches, bit-identical result")
+    return "\n".join(out)
+
+
+def render_strips(rows: List[Dict]) -> str:
+    out = ["## strips (no dependencies): policies must be byte-identical",
+           f"{'policy':>28} {'MB_to':>8} {'MB_from':>8} {'makespan':>9}"]
+    for r in rows:
+        out.append(f"{r['policy']:>28} {r['bytes_to'] / 1e6:>8.3f} "
+                   f"{r['bytes_from'] / 1e6:>8.3f} "
+                   f"{r['makespan_overlap_s']:>9.4f}")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also dump every section's rows to PATH (the CI "
+                         "writes artifacts/bench/BENCH_sched.json)")
+    args = ap.parse_args()
+    sections = {"sparselu": run_sparselu(), "strips": run_strips()}
+    print(render_sparselu(sections["sparselu"]))
+    print(render_strips(sections["strips"]))
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "sched_policies", "sections": sections},
+                      f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")

@@ -6,6 +6,8 @@ Public API:
   NodeDevice / DevicePool      devices over nodes / mesh slices / virtual shares
   MapSpec / sec / TargetExecutor   target regions with map(to/from/tofrom/alloc)
   strip_partition / offload_strips / recursive_offload / wavefront_offload
+  TaskGraph / TaskNode / run_graph    unified task-graph IR the patterns lower into
+  RoundRobin / LocalityAffinity / HeftPlacement    pluggable placement policies
   Transport / HostFunnelTransport / PeerTransport   device↔device fabric + collectives
   ClusterRuntime / RuntimeConfig   deployable runtime, comm modes, cost model
 """
@@ -21,6 +23,9 @@ from .runtime import ClusterRuntime, RuntimeConfig
 from .scheduler import (DagTask, PeerRef, offload_strips, recursive_offload,
                         strip_partition, wavefront_offload)
 from .target import MapSpec, Section, TargetExecutor, TargetFuture, sec
+from .taskgraph import (HeftPlacement, LocalityAffinity, PlacementContext,
+                        PlacementPolicy, RoundRobin, TaskGraph, TaskNode,
+                        resolve_policy, run_graph)
 from .transport import HostFunnelTransport, PeerTransport, Transport
 
 __all__ = [
@@ -31,6 +36,9 @@ __all__ = [
     "MapSpec", "Section", "sec", "TargetExecutor", "TargetFuture",
     "strip_partition", "offload_strips", "recursive_offload",
     "wavefront_offload", "DagTask", "PeerRef",
+    "TaskGraph", "TaskNode", "run_graph", "resolve_policy",
+    "PlacementPolicy", "PlacementContext", "RoundRobin", "LocalityAffinity",
+    "HeftPlacement",
     "ClusterRuntime", "RuntimeConfig",
     "Transport", "HostFunnelTransport", "PeerTransport",
     "CostModel", "LinkModel", "Event", "PeerRecord", "TimelineSpan",

@@ -63,6 +63,23 @@ class ComputeRecord:
     device: int
     seconds: float          # measured or modeled task compute time
     tag: str = ""
+    kernel: str = ""        # registered kernel name (placement estimates)
+
+
+@dataclass
+class PlacementRecord:
+    """One placement decision a cost-driven policy predicted.
+
+    ``predicted_s`` is the policy's earliest-finish-time estimate at decision
+    time; :meth:`CostModel.placement_report` joins it with the compute
+    records that later ran under ``task`` (the region tag), so benchmarks can
+    quantify how well the model's timings anticipated reality.
+    """
+
+    task: str               # region tag the prediction was made for
+    device: int
+    predicted_s: float      # modeled finish time (policy clock)
+    policy: str = ""
 
 
 @dataclass
@@ -126,6 +143,7 @@ class CostModel:
         self.adjustments: List[TransferRecord] = []
         self.peers: List[PeerRecord] = []
         self.events: List[Event] = []
+        self.placements: List[PlacementRecord] = []
         self._lock = threading.Lock()
 
     def reset(self) -> None:
@@ -135,6 +153,7 @@ class CostModel:
             self.adjustments.clear()
             self.peers.clear()
             self.events.clear()
+            self.placements.clear()
 
     # -- accounting ---------------------------------------------------------
     def record_transfer(self, direction: str, device: int, nbytes: int,
@@ -145,11 +164,54 @@ class CostModel:
             self.events.append(Event("xfer", device, tag=tag, direction=direction,
                                      nbytes=int(nbytes), n_messages=n_messages))
 
-    def record_compute(self, device: int, seconds: float, tag: str = "") -> None:
+    def record_compute(self, device: int, seconds: float, tag: str = "",
+                       kernel: str = "") -> None:
         with self._lock:
-            self.compute.append(ComputeRecord(device, float(seconds), tag))
+            self.compute.append(ComputeRecord(device, float(seconds), tag,
+                                              kernel))
             self.events.append(Event("compute", device, tag=tag,
                                      seconds=float(seconds)))
+
+    def record_placement(self, task: str, device: int, predicted_s: float,
+                         policy: str = "") -> None:
+        """Log a cost-driven placement decision (prediction side)."""
+        with self._lock:
+            self.placements.append(PlacementRecord(task, device,
+                                                   float(predicted_s), policy))
+
+    def kernel_time(self, kernel: str) -> Optional[float]:
+        """Mean observed compute seconds for ``kernel`` (None if never run).
+
+        The estimate a cost-driven placement policy feeds its
+        earliest-finish-time clock; it sharpens as more regions of the same
+        kernel retire.
+        """
+        with self._lock:
+            ts = [c.seconds for c in self.compute if c.kernel == kernel]
+        return sum(ts) / len(ts) if ts else None
+
+    def placement_report(self) -> List[Dict[str, float]]:
+        """Predicted-vs-observed accounting for cost-driven placements.
+
+        Joins each :class:`PlacementRecord` with the compute records that ran
+        under its region tag.  ``observed_s`` is that region's measured
+        compute; ``predicted_s`` is the policy's modeled finish time (a clock
+        value, not a duration — compare *orderings* and per-task compute, not
+        absolute magnitudes).
+        """
+        with self._lock:
+            placements = list(self.placements)
+            compute = list(self.compute)
+        report = []
+        for p in placements:
+            obs = [c for c in compute if _tag_matches(c.tag, p.task)]
+            report.append({
+                "task": p.task, "policy": p.policy, "device": p.device,
+                "predicted_s": p.predicted_s,
+                "observed_s": sum(c.seconds for c in obs),
+                "observed_device_ok": all(c.device == p.device for c in obs),
+            })
+        return report
 
     def record_peer(self, src: int, dst: int, nbytes: int,
                     n_messages: int = 1, tag: str = "") -> None:
@@ -188,7 +250,7 @@ class CostModel:
         with self._lock:
             before = (len(self.transfers) + len(self.compute)
                       + len(self.adjustments) + len(self.peers)
-                      + len(self.events))
+                      + len(self.events) + len(self.placements))
             self.transfers = [t for t in self.transfers
                               if not _tag_matches(t.tag, prefix)]
             self.compute = [c for c in self.compute
@@ -199,9 +261,11 @@ class CostModel:
                           if not _tag_matches(p.tag, prefix)]
             self.events = [e for e in self.events
                            if not _tag_matches(e.tag, prefix)]
+            self.placements = [p for p in self.placements
+                               if not _tag_matches(p.task, prefix)]
             return before - (len(self.transfers) + len(self.compute)
                              + len(self.adjustments) + len(self.peers)
-                             + len(self.events))
+                             + len(self.events) + len(self.placements))
 
     # -- summaries ------------------------------------------------------------
     def bytes_moved(self, direction: Optional[str] = None) -> int:

@@ -68,13 +68,17 @@ class NodeDevice:
 
     def __init__(self, index: int, *, jax_device: Optional[jax.Device] = None,
                  sharding: Optional[jax.sharding.Sharding] = None,
-                 hostname: str = "localhost") -> None:
+                 hostname: str = "localhost",
+                 capacity_bytes: Optional[int] = None) -> None:
         self.index = index
         self.hostname = hostname
         self.jax_device = jax_device
         self.sharding = sharding
         self.store = MediaryStore(sharding=sharding)
         self.stopped = False
+        # resident-memory budget for this device's present table (None =
+        # unbounded); enforced by the executor's LRU spill path, not here
+        self.capacity_bytes = capacity_bytes
         self._jit_cache: Dict[int, Callable] = {}
 
     def _place(self, value: jax.Array) -> jax.Array:
@@ -216,14 +220,18 @@ class DevicePool:
 
     def __init__(self, devices: Sequence[NodeDevice], *,
                  table: Optional[KernelTable] = None,
-                 link: LinkModel = PAPER_ETHERNET) -> None:
+                 link: LinkModel = PAPER_ETHERNET,
+                 capacity_bytes: Optional[int] = None) -> None:
         self.devices = list(devices)
         self.table = table or GLOBAL_KERNEL_TABLE
         self.cost = CostModel(link)
         self.mirrors = [HostMirror() for _ in self.devices]
         # RLocks: _submit re-acquires the issue lock the issue methods hold
         self.locks = [threading.RLock() for _ in self.devices]
-        self.present = [PresentTable() for _ in self.devices]
+        # per-device capacity wins over the pool-wide default
+        self.present = [PresentTable(capacity_bytes=(
+            d.capacity_bytes if d.capacity_bytes is not None
+            else capacity_bytes)) for d in self.devices]
         self.env_locks = [threading.RLock() for _ in self.devices]
         self.trace: List[Command] = []
         # name -> {device: handle}; first-fit may place a global at different
@@ -615,7 +623,8 @@ class DevicePool:
                                reads=reads, extra_deps=extra_deps)
         out, seconds = fut.result()
         self._raise_async(device)
-        self.cost.record_compute(device, seconds, tag=tag or kernel_name)
+        self.cost.record_compute(device, seconds, tag=tag or kernel_name,
+                                 kernel=kernel_name)
         return out
 
     def stop_all(self) -> None:

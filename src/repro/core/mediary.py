@@ -151,6 +151,16 @@ class PresentEntry:
     # wrote it on-device and nothing fetched it yet); host-value matches
     # must miss until fetch_resident or a refresh reconciles the two sides
     device_ahead: bool = False
+    # capacity eviction spilled the device copy: ``handles`` are empty, the
+    # authoritative value lives in ``host_leaves`` (device-ahead entries are
+    # reconciled to the host before their buffers are freed), and the next
+    # present-binding refetches transparently.  A spilled entry holds zero
+    # device memory but keeps its logical identity and references.
+    spilled: bool = False
+    # LRU clock stamp (PresentTable._clock at last touch)
+    last_used: int = 0
+    # pinned entries are never eviction candidates, whatever their refcount
+    pinned: bool = False
 
     def nbytes(self) -> int:
         return sum(int(np.prod(s.shape, dtype=np.int64)) * jnp.dtype(s.dtype).itemsize
@@ -185,14 +195,29 @@ class PresentTable:
     content versions so stale device copies are refreshed exactly when the
     host value changed.  Synchronization is the owner's job (the pool holds
     one data-environment lock per device).
+
+    ``capacity_bytes`` (None = unbounded) caps the *resident* device memory
+    this table may hold.  The table itself never moves bytes — eviction is
+    driven by :meth:`~repro.core.target.TargetExecutor` through
+    :meth:`lru_victim`: the least-recently-used entry that is neither pinned
+    nor retained by an in-flight region (refcount > 1 means a region holds
+    it through an open stream ticket) is *spilled* — device buffers freed,
+    logical entry kept — and transparently refetched on its next binding.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, capacity_bytes: Optional[int] = None) -> None:
         self._entries: Dict[str, PresentEntry] = {}
+        self.capacity_bytes = capacity_bytes
         # observability: how much traffic the table elided
         self.hits = 0
         self.misses = 0
         self.bytes_elided = 0
+        # capacity/eviction observability
+        self.evictions = 0
+        self.refetches = 0
+        self.bytes_reconciled = 0     # device-ahead content fetched at spill
+        self.bytes_refetched = 0      # spilled content re-sent at next bind
+        self._clock = 0               # LRU stamp source
 
     def get(self, name: str) -> Optional[PresentEntry]:
         return self._entries.get(name)
@@ -200,7 +225,37 @@ class PresentTable:
     def add(self, entry: PresentEntry) -> None:
         if entry.name in self._entries:
             raise KeyError(f"{entry.name!r} already present")
+        self.touch(entry)
         self._entries[entry.name] = entry
+
+    def touch(self, entry_or_name) -> None:
+        """Stamp an entry as most-recently-used (LRU bookkeeping)."""
+        e = (self._entries.get(entry_or_name)
+             if isinstance(entry_or_name, str) else entry_or_name)
+        if e is not None:
+            self._clock += 1
+            e.last_used = self._clock
+
+    def used_bytes(self) -> int:
+        """Device bytes currently held by resident (non-spilled) entries."""
+        return sum(e.nbytes() for e in self._entries.values() if not e.spilled)
+
+    def lru_victim(self, protect: Sequence[str] = ()) -> Optional[PresentEntry]:
+        """Least-recently-used evictable entry, or None.
+
+        Evictable: not pinned, not already spilled, not named in ``protect``,
+        and refcount <= 1 — a refcount above the owner's single reference
+        means an in-flight region retains the entry (its handles may be
+        covered by an open stream ticket), so it is skipped.
+        """
+        best: Optional[PresentEntry] = None
+        for e in self._entries.values():
+            if (e.pinned or e.spilled or e.refcount > 1
+                    or e.name in protect):
+                continue
+            if best is None or e.last_used < best.last_used:
+                best = e
+        return best
 
     def names(self) -> List[str]:
         return sorted(self._entries)
@@ -222,15 +277,20 @@ class PresentTable:
         the entry (refcount++); pair with :meth:`release`.
         """
         e = self._entries.get(name)
-        if (e is None or e.device_ahead
+        if (e is None or e.device_ahead or e.spilled
                 or not same_treedef(e.treedef, treedef)
                 or len(e.host_leaves) != len(leaves)
                 or any(a is not b or not isinstance(b, jax.Array)
                        for a, b in zip(e.host_leaves, leaves))):
-            self.misses += 1     # absent OR present-but-stale both miss
+            # absent, present-but-stale and spilled all miss — the TABLE
+            # holds no device buffers for a spilled entry; the executor
+            # revives a would-match entry (transparent refetch) BEFORE
+            # consulting the table, so callers see a hit again
+            self.misses += 1
             return None
         e.refcount += 1
         self.hits += 1
+        self.touch(e)
         self.bytes_elided += max(0, e.nbytes() - e.debit)
         e.debit = 0
         return e
@@ -244,13 +304,15 @@ class PresentTable:
         Retains the entry on success.
         """
         e = self._entries.get(name)
-        if (e is None or not same_treedef(e.treedef, treedef)
+        if (e is None or e.spilled
+                or not same_treedef(e.treedef, treedef)
                 or len(e.specs) != len(specs)
                 or any(a.shape != b.shape or jnp.dtype(a.dtype) != jnp.dtype(b.dtype)
                        for a, b in zip(e.specs, specs))):
             return None
         e.refcount += 1
         self.hits += 1
+        self.touch(e)
         return e
 
     def release(self, name: str) -> Optional[PresentEntry]:
@@ -266,7 +328,15 @@ class PresentTable:
 
     def stats(self) -> Dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
-                "bytes_elided": self.bytes_elided, "resident": len(self._entries)}
+                "bytes_elided": self.bytes_elided,
+                "resident": len(self._entries),
+                "resident_bytes": self.used_bytes(),
+                "capacity_bytes": (-1 if self.capacity_bytes is None
+                                   else self.capacity_bytes),
+                "spilled": sum(1 for e in self._entries.values() if e.spilled),
+                "evictions": self.evictions, "refetches": self.refetches,
+                "bytes_reconciled": self.bytes_reconciled,
+                "bytes_refetched": self.bytes_refetched}
 
 
 class HostMirror(SlotTableBase):

@@ -49,6 +49,12 @@ class RuntimeConfig:
     peer_link: Optional[LinkModel] = None
     compress: bool = False
     max_host_threads: int = 16
+    # resident-memory budget per device's present table, in bytes (None =
+    # unbounded).  When set, making a buffer resident past the budget spills
+    # the least-recently-used evictable entry (device-ahead content is
+    # reconciled to the host first) and the next binding refetches it —
+    # capacity changes traffic, never results.
+    device_capacity_bytes: Optional[int] = None
 
 
 class ClusterRuntime:
@@ -57,9 +63,13 @@ class ClusterRuntime:
             raise ValueError(f"unknown comm_mode {cfg.comm_mode!r}")
         self.cfg = cfg
         if cfg.n_virtual is not None:
-            self.pool = DevicePool.virtual(cfg.n_virtual, table=table, link=cfg.link)
+            self.pool = DevicePool.virtual(
+                cfg.n_virtual, table=table, link=cfg.link,
+                capacity_bytes=cfg.device_capacity_bytes)
         else:
-            self.pool = DevicePool.from_config(cfg.nodes, table=table, link=cfg.link)
+            self.pool = DevicePool.from_config(
+                cfg.nodes, table=table, link=cfg.link,
+                capacity_bytes=cfg.device_capacity_bytes)
         self.ex = TargetExecutor(self.pool, max_host_threads=cfg.max_host_threads)
         # the transport is what "direct" now *means*: a real peer fabric of
         # SEND/RECV stream commands, not a byte-accounting credit
@@ -80,6 +90,30 @@ class ClusterRuntime:
 
     def taskwait(self):
         return self.ex.taskwait()
+
+    def wavefront_offload(self, tasks: Sequence[Any], **kw) -> Dict[str, Any]:
+        """Run a task DAG on this runtime's executor (``policy=...`` picks
+        placement).  ``peer=True`` uses this runtime's transport when it is
+        a peer fabric (``comm_mode="direct"``, so its ``peer_link`` prices
+        the edges); under a host-mediated runtime the scheduler's default
+        :class:`~repro.core.transport.PeerTransport` carries the DAG edges —
+        ``peer=True`` is an explicit request for the peer wire."""
+        from .scheduler import wavefront_offload
+        if (kw.get("peer") and "transport" not in kw
+                and isinstance(self.transport, PeerTransport)):
+            kw["transport"] = self.transport
+        return wavefront_offload(self.ex, tasks, **kw)
+
+    def memory_report(self) -> Dict[int, Dict[str, int]]:
+        """Per-device present-table memory accounting.
+
+        One row per device: resident entry count and bytes against the
+        capacity (``capacity_bytes`` is -1 when unbounded), plus the spill
+        path's counters — evictions, transparent refetches, and the bytes
+        reconciled (device-ahead content fetched at spill) / refetched.
+        """
+        return {d: self.pool.present[d].stats()
+                for d in range(len(self.pool))}
 
     def shutdown(self) -> None:
         self.pool.stop_all()

@@ -1,8 +1,10 @@
 """Task-restructuring patterns from the paper's evaluation (§5).
 
 The paper's methodology for porting task-based OpenMP programs to cluster
-devices distills into three reusable scheduling patterns, implemented here on
-top of :class:`TargetExecutor`:
+devices distills into three reusable scheduling patterns, implemented here as
+*thin builders* that lower into the unified :class:`~repro.core.taskgraph.
+TaskGraph` IR (one node per offloaded region) and run through
+:func:`~repro.core.taskgraph.run_graph`:
 
 * **Strip partitioning** (alignment §5.3, mandelbrot §5.4): split an index
   space into per-device strips, offload each as a ``nowait`` target region
@@ -14,22 +16,27 @@ top of :class:`TargetExecutor`:
   where every inter-device dependency must round-trip through the host —
   the pattern the paper shows does NOT pay on a slow link.
 
+Because the patterns share one executor, they inherit ``nowait``/
+``resident``/``peer`` composition and pluggable *placement policies*
+(``policy="round-robin" | "locality" | "heft"`` or a
+:class:`~repro.core.taskgraph.PlacementPolicy` instance) instead of each
+hard-coding round-robin dispatch.
+
 Beyond-paper: speculative re-dispatch of straggler strips (the paper observes
 fib's imbalance but offers no mitigation), and comm-aware device selection.
 """
 from __future__ import annotations
 
 import concurrent.futures as _cf
-import threading
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .target import (MapSpec, Section, TargetExecutor, TargetFuture,
-                     _alias_map, _flatten_map_value)
+from .target import MapSpec, TargetExecutor, TargetFuture
+from .taskgraph import (PeerRef, PlacementContext, TaskGraph, TaskNode,
+                        resolve_policy, run_graph)
 
 
 # ---------------------------------------------------------------------------
@@ -53,46 +60,69 @@ def strip_partition(total: int, n_devices: int) -> List[Tuple[int, int]]:
     return strips
 
 
+def _strip_nodes(kernel: str, strips: List[Tuple[int, int]],
+                 make_maps: Callable[[int, int], MapSpec],
+                 tags: List[str]) -> List[TaskNode]:
+    return [TaskNode(name=f"strip{i}", kernel=kernel,
+                     make_maps=(lambda s=start, l=length:
+                                lambda deps: make_maps(s, l))(),
+                     tag=tags[i])
+            for i, (start, length) in enumerate(strips)]
+
+
 def offload_strips(ex: TargetExecutor, kernel: str, total: int,
                    make_maps: Callable[[int, int], MapSpec], *,
                    combine_axis: int = 0, out_name: str = "out",
                    speculate: bool = False, nowait: bool = True,
-                   tag: str = "strips") -> jax.Array:
+                   policy: Any = None, tag: str = "strips") -> jax.Array:
     """The alignment/mandelbrot pattern: one nowait region per device strip.
 
     ``make_maps(start, length)`` builds the MapSpec for a strip (only the
-    needed sections move — paper Listing 2).  With ``speculate=True``, once
+    needed sections move — paper Listing 2).  Lowers into a single-wave
+    :class:`TaskGraph`; ``policy`` picks the device per strip (default
+    round-robin, the historical behavior).  With ``speculate=True``, once
     every strip has been dispatched the host re-dispatches not-yet-finished
     strips onto devices that already returned (straggler mitigation;
-    first-completed result wins).
+    first-completed result wins) — the one pattern piece that cannot be
+    wave-synchronous, so it shares the graph's *placement* but keeps its own
+    harvest loop.
     """
     strips = strip_partition(total, len(ex.pool))
-    if not nowait:
-        # serial dispatch: used by the benchmarks so per-task compute times
-        # are uncontended on this 1-core container; the CostModel supplies
-        # the parallel makespan (devices modeled concurrent).
-        parts = [ex.target(kernel, dev, make_maps(start, length), nowait=False,
-                           tag=f"{tag}[{start}:{start+length}]")[out_name]
-                 for dev, (start, length) in enumerate(strips)]
-        return jnp.concatenate(parts, axis=combine_axis)
-    futs: List[TargetFuture] = []
     orig_tags = [f"{tag}[{start}:{start+length}]" for start, length in strips]
-    for dev, (start, length) in enumerate(strips):
+    nodes = _strip_nodes(kernel, strips, make_maps, orig_tags)
+    if not speculate or not nowait:
+        # NOTE ``nowait=False`` keeps serial dispatch (and wins over
+        # ``speculate`` — there is no straggler to race when strips run one
+        # at a time): the benchmarks use it so per-task compute times are
+        # uncontended on this 1-core container; the CostModel supplies the
+        # parallel makespan (devices modeled concurrent).
+        res = run_graph(ex, TaskGraph(nodes), policy=policy,
+                        out_name=out_name, nowait=nowait, tag=tag)
+        return jnp.concatenate([res[n.name] for n in nodes],
+                               axis=combine_axis)
+    pol = resolve_policy(policy)
+    D = len(ex.pool)
+    ctx = PlacementContext(pool=ex.pool, cost=ex.pool.cost, D=D)
+    pol.begin(ctx)
+    futs: List[TargetFuture] = []
+    for i, (start, length) in enumerate(strips):
+        dev = pol.place(ctx, nodes[i], i, orig_tags[i])
+        if not (0 <= dev < D):
+            raise ValueError(f"policy {pol.name!r} placed strip {i} on "
+                             f"device {dev} of {D}")
+        ctx.load[dev] = ctx.load.get(dev, 0) + 1
+        ctx.home[nodes[i].name] = dev
         futs.append(ex.target(kernel, dev, make_maps(start, length),
-                              nowait=True, tag=orig_tags[dev]))
-    if not speculate:
-        results = ex.drain(futs)
-    else:
-        results: List[Optional[Dict[str, jax.Array]]] = [None] * len(strips)
-        respawned: Dict[int, TargetFuture] = {}
-        try:
-            results = _speculative_harvest(ex, kernel, strips, make_maps,
-                                           futs, respawned, orig_tags, tag)
-        finally:
-            # a failed strip propagates, but every dispatched future must be
-            # unregistered either way (they are settled or abandoned here)
-            ex.retire(futs)
-            ex.retire(list(respawned.values()))
+                              nowait=True, tag=orig_tags[i]))
+    respawned: Dict[int, TargetFuture] = {}
+    try:
+        results = _speculative_harvest(ex, kernel, strips, make_maps,
+                                       futs, respawned, orig_tags, tag)
+    finally:
+        # a failed strip propagates, but every dispatched future must be
+        # unregistered either way (they are settled or abandoned here)
+        ex.retire(futs)
+        ex.retire(list(respawned.values()))
     parts = [r[out_name] for r in results]
     return jnp.concatenate(parts, axis=combine_axis)
 
@@ -143,7 +173,10 @@ def _speculative_harvest(ex: TargetExecutor, kernel: str,
     # Settle BOTH copies of every duplicated strip BEFORE striking the losing
     # copy's compute + transfers from the cost model — a discard issued while
     # the loser still runs would miss its late records and leave phantom work
-    # inflating the modeled makespan.
+    # inflating the modeled makespan.  ``discard_tag`` strikes EVERY record
+    # lane carrying the loser's tag — funnel transfers, compute, adjustments
+    # AND peer SEND/RECV records (regions whose inputs rode the peer fabric
+    # tag those edges per region, so the strike reaches them).
     for i, spec_fut in respawned.items():
         try:
             spec_out = spec_fut.result()
@@ -175,7 +208,7 @@ def recursive_offload(ex: TargetExecutor, kernel: str,
                       host_combine: Callable[[Any, List[Any]], Any],
                       make_maps: Callable[[Any], MapSpec], *,
                       out_name: str = "out", nowait: bool = True,
-                      tag: str = "rec") -> Any:
+                      policy: Any = None, tag: str = "rec") -> Any:
     """Expand the recursion on the host until ≥1 task per device, then offload.
 
     Paper §5.5: "the host executes the first recursive calls. When the
@@ -185,6 +218,8 @@ def recursive_offload(ex: TargetExecutor, kernel: str,
 
     ``split(payload)`` returns child payloads (or None at a leaf);
     ``host_combine(payload, child_results)`` folds children back up the tree.
+    The frontier lowers into a single-wave :class:`TaskGraph` (``policy``
+    places it; default round-robin, the paper's one-task-per-device).
     """
     n_dev = len(ex.pool)
 
@@ -210,20 +245,18 @@ def recursive_offload(ex: TargetExecutor, kernel: str,
         node.children = [_Node(k) for k in kids]
         frontier.extend(node.children)
 
-    # Offload the frontier round-robin (paper: one task per device; if the
-    # tree yields more tasks than devices we round-robin — imbalance noted).
-    if nowait:
-        futs: List[Tuple[_Node, TargetFuture]] = []
-        for i, node in enumerate(frontier):
-            futs.append((node, ex.target(kernel, i % n_dev, make_maps(node.payload),
-                                         nowait=True, tag=f"{tag}[{i}]")))
-        outs = ex.drain([f for _, f in futs])   # retires even on failure
-        for (node, _), out in zip(futs, outs):
-            node.result = out[out_name]
-    else:
-        for i, node in enumerate(frontier):
-            node.result = ex.target(kernel, i % n_dev, make_maps(node.payload),
-                                    nowait=False, tag=f"{tag}[{i}]")[out_name]
+    # Offload the frontier as one graph wave (paper: one task per device; if
+    # the tree yields more tasks than devices the policy spreads them —
+    # round-robin by default, imbalance noted in the paper).
+    gnodes = [TaskNode(name=f"leaf{i}", kernel=kernel,
+                       make_maps=(lambda p=node.payload:
+                                  lambda deps: make_maps(p))(),
+                       tag=f"{tag}[{i}]")
+              for i, node in enumerate(frontier)]
+    res = run_graph(ex, TaskGraph(gnodes), policy=policy, out_name=out_name,
+                    nowait=nowait, tag=tag)
+    for i, node in enumerate(frontier):
+        node.result = res[f"leaf{i}"]
 
     # Host-side combine, bottom-up.
     def fold(node: _Node) -> Any:
@@ -243,210 +276,37 @@ class DagTask:
     kernel: str
     deps: Tuple[str, ...]
     make_maps: Callable[[Dict[str, Any]], MapSpec]   # dep results -> maps
-    device: Optional[int] = None                      # None = scheduler picks
-
-
-@dataclass(frozen=True)
-class PeerRef:
-    """A dependency value that lives on a device, not on the host.
-
-    Under ``wavefront_offload(peer=True)`` the ``deps`` dict handed to a
-    task's ``make_maps`` holds these placeholders instead of host arrays: a
-    callback that treats dependency values *opaquely* (placing them in a
-    ``to=`` clause) works unchanged, and the runner rewrites any ``to``
-    entry holding a PeerRef into a ``present`` binding — propagating the
-    producer's resident entry device→device first if the consumer runs
-    elsewhere.  A callback that does arithmetic on dependency values cannot
-    be peer-routed (the value genuinely is not on the host).
-    """
-
-    task: str
-    entry: str
-    device: int
+    device: Optional[int] = None                      # None = policy picks
 
 
 def wavefront_offload(ex: TargetExecutor, tasks: Sequence[DagTask], *,
                       out_name: str = "out", nowait: bool = True,
                       resident: bool = False, peer: bool = False,
                       transport: Optional[Any] = None,
+                      policy: Any = None,
                       tag: str = "dag") -> Dict[str, Any]:
     """Run a dependency DAG where every edge crosses the host (OpenMP rule).
 
-    Tasks whose dependencies are satisfied run as concurrent nowait regions,
-    one wave at a time.  Each inter-device value is fetched to the host and
-    re-sent to the consumer — the comm pattern that makes sparselu lose
-    (paper §5.6: "the whole array must be transferred two times").
+    Thin builder: lowers the :class:`DagTask` list into a
+    :class:`~repro.core.taskgraph.TaskGraph` and runs it through
+    :func:`~repro.core.taskgraph.run_graph`, which owns the wave dispatch,
+    the ``resident`` per-wave pinning, the ``peer`` edge routing and the
+    placement ``policy`` — see its docstring for the full semantics.  Tasks
+    whose dependencies are satisfied run as concurrent nowait regions, one
+    wave at a time; by default each inter-device value is fetched to the
+    host and re-sent to the consumer — the comm pattern that makes sparselu
+    lose (paper §5.6: "the whole array must be transferred two times").
 
     ``peer=True`` (beyond-paper) retires that funnel for the DAG's internal
-    edges: every task's ``out_name`` output stays *resident* on its device
-    (``device_out`` into an entry named after the task — ALLOC only, no
-    host transfer), consumers bind it with a ``present`` map, and a
-    cross-device edge moves once, device→device, via
-    :meth:`TargetExecutor.propagate_resident` over ``transport`` (default
-    :class:`~repro.core.transport.PeerTransport`) instead of
-    fetch-then-re-map.  ``make_maps`` receives :class:`PeerRef`
-    placeholders for its deps and must treat them opaquely (all the BOTS
-    DAGs do).  Host inputs (``to`` values that are real arrays) and the
-    final result fetch are unchanged, so ``results`` still holds host
-    arrays for every task.
-
-    ``resident=True`` pins the wave's *shared* plain input buffers — a
-    (device, name) whose value is identical across several tasks, e.g. the
-    pivot block LU in sparselu's fwd/bdiv fan-out — in the device's data
-    environment for the duration of the wave, so each crosses the wire once
-    per device per wave instead of once per task.  This composes with
-    ``nowait=True``: pins are taken under the data-environment lock before
-    dispatch, and the dependency-aware device stream orders each region's
-    EXEC between the pinned content's producer transfer and any later
-    refresh of the same name — concurrent regions share present-table
-    entries without racing.  Should a name still be refreshed mid-wave (a
-    pin colliding with a pre-existing resident entry), an in-flight region
-    that matched the older version keeps its ordering (its EXEC runs before
-    the refresh lands), it simply stops eliding.  Pins are released only
-    after the whole wave has settled.
+    edges (outputs stay resident via ``device_out``, consumers bind
+    ``present`` maps, cross-device edges move once device→device over
+    ``transport``); ``resident=True`` pins the wave's shared plain inputs
+    once per device per wave; ``policy`` replaces round-robin placement with
+    locality- or cost-driven choices (``"locality"``, ``"heft"``, or any
+    :class:`~repro.core.taskgraph.PlacementPolicy`) — results are
+    bit-identical under every policy, only the traffic changes.
     """
-    if peer and transport is None:
-        from .transport import PeerTransport
-        transport = PeerTransport()
-    # peer mode: every (device, entry-name) this run pinned — producer
-    # outputs and their propagated peer copies — released in the final
-    # teardown; ``producer`` maps a task to its output's home device/entry
-    peer_entries: Dict[Tuple[int, str], bool] = {}
-    producer: Dict[str, Tuple[int, str]] = {}
-
-    def _peer_rewrite(t: DagTask, dev: int, maps: MapSpec) -> MapSpec:
-        new_to: Dict[str, Any] = {}
-        pres: Dict[str, str] = {}
-        for k, v in maps.to.items():
-            if isinstance(v, PeerRef):
-                if v.device != dev and (dev, v.entry) not in peer_entries:
-                    ex.propagate_resident(v.device, dev, v.entry,
-                                          transport=transport,
-                                          tag=f"{tag}:edge")
-                    peer_entries[(dev, v.entry)] = True
-                pres[k] = v.entry
-            else:
-                new_to[k] = v
-        for k, v in {**maps.tofrom, **maps.alloc,
-                     **{n: s for n, s in maps.from_.items()}}.items():
-            if isinstance(v, PeerRef):
-                raise TypeError(
-                    f"task {t.name!r}: a PeerRef dependency may only appear "
-                    f"in a to= clause (got it in {k!r})")
-        if out_name not in maps.from_:
-            raise ValueError(
-                f"peer wavefront requires task {t.name!r} to declare "
-                f"from_[{out_name!r}] (its resident output shape)")
-        entry = f"{tag}:{t.name}"
-        ex.alloc_resident(dev, entry, maps.from_[out_name], tag=f"{tag}:out")
-        peer_entries[(dev, entry)] = True
-        producer[t.name] = (dev, entry)
-        return MapSpec(to=new_to,
-                       from_={n: s for n, s in maps.from_.items()
-                              if n != out_name},
-                       tofrom=maps.tofrom, alloc=maps.alloc,
-                       firstprivate=maps.firstprivate,
-                       use_globals=maps.use_globals,
-                       present={**_alias_map(maps.present), **pres},
-                       device_out={**_alias_map(maps.device_out),
-                                   out_name: entry})
-
-    results: Dict[str, Any] = {}
-    remaining = {t.name: t for t in tasks}
-    wave_idx = 0
-    while remaining:
-        ready = [t for t in remaining.values() if all(d in results for d in t.deps)]
-        if not ready:
-            raise ValueError(f"dependency cycle among {sorted(remaining)}")
-        entered: List[Tuple[int, str]] = []
-        futs: List[Tuple[DagTask, TargetFuture]] = []
-        joined = False
-        try:
-            plans: List[Tuple[DagTask, int, MapSpec]] = []
-            for j, t in enumerate(ready):
-                dev = t.device if t.device is not None else j % len(ex.pool)
-                maps = t.make_maps({d: results[d] for d in t.deps})
-                if peer:
-                    maps = _peer_rewrite(t, dev, maps)
-                plans.append((t, dev, maps))
-            if resident:
-                # pin only values genuinely shared: a (device, name) whose
-                # plain to/tofrom value is identical across >=2 of the wave's
-                # tasks.  Pinning per-task-varying values would gain nothing
-                # and each refresh could race an in-flight sibling region out
-                # of its elision (value-correct either way, but the byte
-                # savings would depend on thread scheduling).
-                usage: Dict[Tuple[int, str], List[Tuple[Tuple[int, ...], Any]]] = {}
-                for _, dev, maps in plans:
-                    # to-maps only: tofrom buffers are written back per task,
-                    # and two regions sharing one pinned output handle would
-                    # fetch each other's results
-                    for n, v in maps.to.items():
-                        leaves, _ = _flatten_map_value(v)
-                        if any(isinstance(l, Section) for l in leaves):
-                            continue   # sections differ per task: not pinnable
-                        usage.setdefault((dev, n), []).append(
-                            (tuple(id(l) for l in leaves), v))
-                for (dev, n), uses in usage.items():
-                    if len(uses) < 2 or len({k for k, _ in uses}) != 1:
-                        continue       # unique or conflicting values: no pin
-                    try:
-                        ex.enter_data(dev, f"{tag}:w{wave_idx}", **{n: uses[0][1]})
-                        entered.append((dev, n))
-                    except ValueError:
-                        pass           # shape changed under this name: skip pin
-            for t, dev, maps in plans:
-                if nowait:
-                    futs.append((t, ex.target(t.kernel, dev, maps, nowait=True,
-                                              tag=f"{tag}:w{wave_idx}:{t.name}")))
-                else:
-                    out = ex.target(t.kernel, dev, maps, nowait=False,
-                                    tag=f"{tag}:w{wave_idx}:{t.name}")
-                    results[t.name] = (PeerRef(t.name, producer[t.name][1],
-                                               producer[t.name][0])
-                                       if peer else out[out_name])
-                    del remaining[t.name]
-            if futs:
-                # drain waits for EVERY region to settle (even past a
-                # failure), so the pin release below can never pull a
-                # buffer out from under a still-running region
-                joined = True
-                outs = ex.drain([f for _, f in futs])
-                for (t, _), out in zip(futs, outs):
-                    results[t.name] = (PeerRef(t.name, producer[t.name][1],
-                                               producer[t.name][0])
-                                       if peer else out[out_name])
-                    del remaining[t.name]
-        except BaseException:
-            if peer:
-                # failed run: nothing will fetch the resident outputs, so
-                # release every pinned entry.  Safe even before the finally
-                # below joins a mid-dispatch wave: in-flight regions hold
-                # their own present-table references, so an entry is only
-                # freed once its last region has released it.
-                for dev, n in peer_entries:
-                    ex.exit_data(dev, n)
-            raise
-        finally:
-            if futs and not joined:
-                # a mid-dispatch failure (a later task's make_maps or launch
-                # raised): the already-launched regions must still be joined
-                # and retired before their pins are released
-                try:
-                    ex.drain([f for _, f in futs])
-                except BaseException:
-                    pass               # the dispatch error propagates
-            for dev, n in entered:      # wave boundary: release pins
-                ex.exit_data(dev, n)
-        wave_idx += 1
-    if peer:
-        # materialize the host view — one fetch per task output, exactly
-        # what the host-mediated run's from_ maps moved — then release
-        # every entry this run pinned (outputs and propagated peer copies)
-        try:
-            for name, (dev, entry) in producer.items():
-                results[name] = ex.fetch_resident(dev, entry)
-        finally:
-            for dev, n in peer_entries:
-                ex.exit_data(dev, n)
-    return results
+    graph = TaskGraph.from_tasks(tasks)
+    return run_graph(ex, graph, policy=policy, out_name=out_name,
+                     nowait=nowait, resident=resident, peer=peer,
+                     transport=transport, tag=tag)

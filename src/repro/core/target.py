@@ -242,10 +242,15 @@ class TargetExecutor:
         with pool.env_locks[device]:
             ent = pool.present[device].get(name)
             if ent is None:
+                # convert before allocating: a bad leaf must fail with zero
+                # device state, and the capacity reservation needs the size
+                vals = [jnp.asarray(leaf) for leaf in leaves]
+                self._reserve_capacity(
+                    device, sum(v.size * v.dtype.itemsize for v in vals),
+                    tag=tag)
                 hs, specs, hosts, wfuts = [], [], [], []
                 try:
-                    for leaf in leaves:
-                        v = jnp.asarray(leaf)
+                    for leaf, v in zip(leaves, vals):
                         h = pool.alloc(device, v.shape, v.dtype, tag=f"{tag}:{name}")
                         hs.append(h)
                         wfuts.append(pool.transfer_to(device, h, v,
@@ -253,9 +258,9 @@ class TargetExecutor:
                         specs.append(jax.ShapeDtypeStruct(v.shape, v.dtype))
                         hosts.append(leaf)
                 except BaseException:
-                    # a later leaf failed (unconvertible value, stopped
-                    # device): free the allocations already made so nothing
-                    # leaks on the device or its mirror
+                    # a later leaf failed (stopped device): free the
+                    # allocations already made so nothing leaks on the
+                    # device or its mirror
                     with contextlib.suppress(DeviceStoppedError):
                         for h in hs:
                             pool.free(device, h)
@@ -266,9 +271,14 @@ class TargetExecutor:
                 entry.debit = entry.nbytes()
                 pool.present[device].add(entry)
             else:
-                # refresh first: a structure-mismatch error must not leak a
-                # reference (the caller never sees the entry as entered)
-                self._refresh(device, ent, leaves, treedef, tag)
+                # refresh (or revive a spilled entry) first: a structure-
+                # mismatch error must not leak a reference (the caller never
+                # sees the entry as entered)
+                if ent.spilled:
+                    self._revive(device, ent, leaves, treedef, tag)
+                else:
+                    self._refresh(device, ent, leaves, treedef, tag)
+                pool.present[device].touch(ent)
                 if retain:
                     ent.refcount += 1
 
@@ -330,6 +340,143 @@ class TargetExecutor:
             raise
         return hs
 
+    # -- capacity-bounded residency: LRU spill + transparent refetch ----------
+    def _spill_locked(self, device: int, ent: PresentEntry, tag: str) -> None:
+        """Free ``ent``'s device buffers but keep the logical entry (spill).
+
+        Caller holds ``env_locks[device]``.  Device-ahead content — and
+        ``alloc_resident`` buffers whose host view is still a placeholder —
+        is reconciled to the host *before* the buffers are freed, so a spill
+        can never lose a value: the failure-free path the capacity bound
+        rides on.  The reconcile fetch and the eventual refetch are ordinary
+        stream commands, ordered after the entry's in-flight writers.
+        """
+        pool = self.pool
+        table = pool.present[device]
+        if ent.device_ahead or any(l is None for l in ent.host_leaves):
+            fetched = [pool.transfer_from(device, h,
+                                          tag=f"{tag}:reconcile:{ent.name}")
+                       for h in ent.handles]
+            ent.host_leaves = list(fetched)
+            ent.device_ahead = False
+            table.bytes_reconciled += ent.nbytes()
+        for h in ent.handles:
+            pool.free(device, h)
+        ent.handles = []
+        ent.write_futs = []
+        ent.debit = 0
+        ent.spilled = True
+        table.evictions += 1
+
+    def _reserve_capacity(self, device: int, nbytes: int, *,
+                          tag: str = "capacity",
+                          protect: Sequence[str] = ()) -> None:
+        """Make room for ``nbytes`` more resident bytes; caller holds env lock.
+
+        Evicts least-recently-used entries (skipping pinned entries,
+        ``protect`` names, and anything an in-flight region retains) until
+        the budget fits.  Soft cap: when nothing is evictable the residency
+        proceeds over budget rather than failing — capacity pressure must
+        never change a program's result, only its traffic.
+        """
+        table = self.pool.present[device]
+        if table.capacity_bytes is None:
+            return
+        while table.used_bytes() + nbytes > table.capacity_bytes:
+            victim = table.lru_victim(protect)
+            if victim is None:
+                break
+            self._spill_locked(device, victim, tag)
+
+    def _refetch_locked(self, device: int, ent: PresentEntry, tag: str) -> None:
+        """Re-materialize a spilled entry from its host view.
+
+        Caller holds ``env_locks[device]``.  The transparent half of the
+        spill path: a binding that *requires* residency (``present`` /
+        ``device_out`` maps, a peer propagation source) finds the entry
+        spilled, and this re-allocates and re-sends it — possibly evicting
+        someone else to make room.
+        """
+        pool = self.pool
+        table = pool.present[device]
+        self._reserve_capacity(device, ent.nbytes(), tag=tag,
+                               protect=(ent.name,))
+        hs = self._alloc_specs(device, ent.specs, f"{tag}:refetch:{ent.name}")
+        ent.handles = hs
+        ent.write_futs = [pool.transfer_to(device, h, jnp.asarray(leaf),
+                                           tag=f"{tag}:refetch:{ent.name}")
+                          for h, leaf in zip(hs, ent.host_leaves)]
+        ent.spilled = False
+        ent.version += 1
+        ent.debit = ent.nbytes()   # the refetch re-paid the entry's transfer
+        table.refetches += 1
+        table.bytes_refetched += ent.nbytes()
+        table.touch(ent)
+
+    def _revive(self, device: int, ent: PresentEntry, leaves: List[Any],
+                treedef: Any, tag: str) -> None:
+        """Refresh a *spilled* entry with a (possibly new) host value."""
+        if not same_treedef(ent.treedef, treedef) or len(ent.host_leaves) != len(leaves):
+            raise ValueError(
+                f"resident buffer {ent.name!r} structure changed; "
+                f"exit_data it first")
+        for i, leaf in enumerate(leaves):
+            v = jnp.asarray(leaf)
+            if v.shape != ent.specs[i].shape or v.dtype != jnp.dtype(ent.specs[i].dtype):
+                raise ValueError(
+                    f"resident buffer {ent.name!r} leaf {i} changed "
+                    f"shape/dtype {ent.specs[i]} -> {v.shape}/{v.dtype}; "
+                    f"exit_data it first")
+        ent.host_leaves = list(leaves)
+        self._refetch_locked(device, ent, tag)
+
+    def _maybe_revive_value(self, device: int, name: str, leaves: List[Any],
+                            treedef: Any, tag: str) -> None:
+        """Refetch a spilled entry that would value-match ``leaves``.
+
+        Caller holds ``env_locks[device]``.  Without this, a spilled entry
+        would miss the match and go stale relative to the uncapped run
+        (whose hit keeps the entry live through the region's write-back) —
+        the cap must change traffic, never any later ``fetch_resident``.
+        """
+        ent = self.pool.present[device].get(name)
+        if ent is None or not ent.spilled or ent.device_ahead:
+            return
+        if (same_treedef(ent.treedef, treedef)
+                and len(ent.host_leaves) == len(leaves)
+                and all(a is b and isinstance(b, jax.Array)
+                        for a, b in zip(ent.host_leaves, leaves))):
+            self._refetch_locked(device, ent, tag)
+
+    def _maybe_revive_specs(self, device: int, name: str,
+                            specs: Sequence[jax.ShapeDtypeStruct],
+                            treedef: Any, tag: str) -> None:
+        """Refetch a spilled entry that would spec-match (output reuse).
+
+        Caller holds ``env_locks[device]``.  The content comes back too, not
+        just fresh handles: a kernel that declares its output name as a
+        parameter reads the buffer's prior value, exactly as it would have
+        without the cap.
+        """
+        ent = self.pool.present[device].get(name)
+        if ent is None or not ent.spilled:
+            return
+        if (same_treedef(ent.treedef, treedef)
+                and len(ent.specs) == len(specs)
+                and all(a.shape == b.shape
+                        and jnp.dtype(a.dtype) == jnp.dtype(b.dtype)
+                        for a, b in zip(ent.specs, specs))):
+            self._refetch_locked(device, ent, tag)
+
+    def pin_resident(self, device: int, *names: str, pinned: bool = True) -> None:
+        """Exempt resident entries from capacity eviction (or re-admit them)."""
+        with self.pool.env_locks[device]:
+            for name in names:
+                ent = self.pool.present[device].get(name)
+                if ent is None:
+                    raise KeyError(f"{name!r} is not resident on device {device}")
+                ent.pinned = pinned
+
     def alloc_resident(self, device: int, name: str, template: Any, *,
                        tag: str = "alloc_resident") -> None:
         """Pin an *uninitialized* buffer: ALLOC only, zero host transfer.
@@ -349,6 +496,10 @@ class TargetExecutor:
         with pool.env_locks[device]:
             if pool.present[device].get(name) is not None:
                 raise KeyError(f"{name!r} is already resident on device {device}")
+            self._reserve_capacity(
+                device,
+                sum(int(np.prod(s.shape, dtype=np.int64)) * jnp.dtype(s.dtype).itemsize
+                    for s in specs), tag=tag)
             hs = self._alloc_specs(device, specs, f"{tag}:{name}")
             pool.present[device].add(PresentEntry(
                 name=name, handles=hs, treedef=treedef,
@@ -382,6 +533,10 @@ class TargetExecutor:
                 raise KeyError(f"{name!r} is not resident on device {src}")
             sent.refcount += 1         # hold: a concurrent exit_data must not
                                        # free the source handles mid-copy
+            # a spilled source holds no device bytes; its reconciled host
+            # view is authoritative and fulfills dst straight from the host
+            # (one funnel send) instead of refetching src only to re-send
+            src_spilled = sent.spilled
             # snapshot under the src lock: `snap` is an immutable-by-
             # convention copy whose fields stay coherent after release
             src_handles = list(sent.handles)
@@ -400,12 +555,27 @@ class TargetExecutor:
                             f"resident buffer {name!r} structure differs "
                             f"between devices {src} and {dst}; exit_data the "
                             f"stale one first")
+                    if dent.spilled:
+                        # about to be overwritten whole: fresh buffers, no
+                        # stale-content refetch
+                        self._reserve_capacity(dst, snap.nbytes(), tag=tag,
+                                               protect=(name,))
+                        dent.handles = self._alloc_specs(dst, specs,
+                                                         f"{tag}:{name}")
+                        dent.spilled = False
                     dst_handles = list(dent.handles)
                 else:
+                    self._reserve_capacity(dst, snap.nbytes(), tag=tag,
+                                           protect=(name,))
                     dst_handles = self._alloc_specs(dst, specs, f"{tag}:{name}")
-                futs = [transport.sendrecv(pool, src, sh, dst, dh,
-                                           tag=f"{tag}:{name}")
-                        for sh, dh in zip(src_handles, dst_handles)]
+                if src_spilled:
+                    futs = [pool.transfer_to(dst, dh, jnp.asarray(leaf),
+                                             tag=f"{tag}:{name}")
+                            for dh, leaf in zip(dst_handles, snap.host_leaves)]
+                else:
+                    futs = [transport.sendrecv(pool, src, sh, dst, dh,
+                                               tag=f"{tag}:{name}")
+                            for sh, dh in zip(src_handles, dst_handles)]
                 if dent is None:
                     pool.present[dst].add(snap.peer_clone(dst_handles, futs))
                 else:
@@ -414,6 +584,7 @@ class TargetExecutor:
                     dent.device_ahead = snap.device_ahead
                     dent.write_futs = futs
                     dent.version += 1
+                    pool.present[dst].touch(dent)
         finally:
             self.exit_data(src, name)  # release the hold taken above
 
@@ -457,6 +628,12 @@ class TargetExecutor:
             ent = pool.present[device].get(name)
             if ent is None:
                 raise KeyError(f"{name!r} is not resident on device {device}")
+            if ent.spilled:
+                # the device copy was evicted after reconciliation: the host
+                # view IS the value — no device traffic, entry stays spilled
+                leaves = [jnp.asarray(l) for l in ent.host_leaves]
+                return (leaves[0] if ent.treedef is None
+                        else jax.tree.unflatten(ent.treedef, leaves))
             ent.refcount += 1          # hold the entry: a concurrent
                                        # exit_data must not free (and first-
                                        # fit-recycle) the handles mid-fetch
@@ -522,7 +699,12 @@ class TargetExecutor:
                         raise KeyError(
                             f"map(present) name {rname!r} is not resident on "
                             f"device {device}; enter_data/ensure_resident it first")
+                    if ent.spilled:
+                        # a present binding REQUIRES residency: transparently
+                        # refetch the evicted content before binding handles
+                        self._refetch_locked(device, ent, tag or "present")
                     ent.refcount += 1
+                    pool.present[device].touch(ent)
                     hs = _retain_ticketed(rname, ent)
                     treedef = ent.treedef
                 handles[kwarg] = hs[0] if treedef is None else hs
@@ -536,6 +718,8 @@ class TargetExecutor:
                 ent = None
                 if not any(isinstance(l, Section) for l in leaves):
                     with pool.env_locks[device]:
+                        self._maybe_revive_value(device, name, leaves,
+                                                 treedef, tag or name)
                         ent = pool.present[device].match_value(name, leaves, treedef)
                         if ent is not None:
                             hs = _retain_ticketed(name, ent)
@@ -556,6 +740,8 @@ class TargetExecutor:
                 leaves, treedef = _flatten_map_value(spec)
                 specs = [_as_spec(leaf) for leaf in leaves]
                 with pool.env_locks[device]:
+                    self._maybe_revive_specs(device, name, specs, treedef,
+                                             tag or name)
                     ent = pool.present[device].match_specs(name, specs, treedef)
                     if ent is not None:
                         hs = _retain_ticketed(name, ent)

@@ -1,0 +1,585 @@
+"""Unified TaskGraph IR + cost-driven placement policies.
+
+The paper's three restructuring patterns (strips §5.3–5.4, recursive unroll
+§5.5, wavefront §5.6) each used to carry their own dispatch loop and their
+own static device choice (round-robin over arrival order) — blind to where
+the data already lives and to what the links cost.  §5.6's lesson is that
+the wavefront loses exactly when dependencies cross devices; the OpenMP
+Cluster model (arXiv:2207.05677) and HDArray (arXiv:1809.05657) both answer
+by lowering everything to one task-graph representation scheduled by a
+cost-aware policy.  This module is that layer:
+
+* :class:`TaskNode` / :class:`TaskGraph` — the IR.  A node names its kernel,
+  its dependency edges (producer task names), the logical buffer names it
+  reads/writes, and a ``make_maps`` callback producing the region's
+  :class:`~repro.core.target.MapSpec` from its dependencies' values.
+* :func:`run_graph` — the one executor every pattern lowers into: waves of
+  ready nodes dispatched as ``nowait`` regions, with per-wave resident pins
+  (``resident=True``) and device→device edge routing (``peer=True``)
+  inherited by *all* patterns instead of re-implemented per pattern.
+* :class:`PlacementPolicy` — who decides where a node runs:
+
+  - :class:`RoundRobin` — arrival order modulo device count (the historical
+    behavior, and the baseline every policy is judged against),
+  - :class:`LocalityAffinity` — prefer the device already holding the node's
+    inputs (producer homes and present-table residents), tie-break by the
+    wave's queue depth,
+  - :class:`HeftPlacement` — earliest-finish-time list scheduling: per-device
+    ready clocks, observed kernel timings (:meth:`CostModel.kernel_time`),
+    and per-dependency edge costs under the transport's link model, choosing
+    host-funnel vs peer routing per edge and logging each prediction for
+    :meth:`CostModel.placement_report`.
+
+Placement never changes *values* — every policy runs the same kernels on the
+same operands, so results are bit-identical across policies (property-tested)
+— it changes which bytes move over which wire.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .target import (MapSpec, Section, TargetExecutor, TargetFuture,
+                     _alias_map, _flatten_map_value)
+from .transport import HostFunnelTransport
+
+
+# ---------------------------------------------------------------------------
+# The IR
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PeerRef:
+    """A dependency value that lives on a device, not on the host.
+
+    Under ``run_graph(peer=True)`` the ``deps`` dict handed to a node's
+    ``make_maps`` holds these placeholders instead of host arrays: a
+    callback that treats dependency values *opaquely* (placing them in a
+    ``to=`` clause) works unchanged, and the runner rewrites any ``to``
+    entry holding a PeerRef into a ``present`` binding.  Resolution is
+    placement-independent: the runner locates the producer's *current* home
+    through its live producer map, so the same DAG (and the same refs) runs
+    under any placement policy.  ``device`` records where the entry lived
+    when the ref was minted — informational only, never consulted to route.
+    A callback that does arithmetic on dependency values cannot be
+    peer-routed (the value genuinely is not on the host).
+    """
+
+    task: str
+    entry: str
+    device: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class TaskNode:
+    """One node of the IR: kernel + map-building callback + edge names.
+
+    ``deps`` are producer task names (the dataflow edges); ``reads`` extends
+    them with logical buffer names the node consumes without a producer in
+    the graph (policies score both for locality); ``writes`` names what it
+    produces (defaults to the node's own name — carried for graph
+    introspection and future anti-dependency tracking, placement consults
+    ``reads`` only).  ``device`` forces placement; ``tag`` overrides the
+    region tag (pattern builders use it to keep their historical per-region
+    tags).
+    """
+
+    name: str
+    kernel: str
+    deps: Tuple[str, ...] = ()
+    make_maps: Callable[[Dict[str, Any]], MapSpec] = None
+    device: Optional[int] = None
+    tag: Optional[str] = None
+    reads: Tuple[str, ...] = ()
+    writes: Tuple[str, ...] = ()
+
+
+class TaskGraph:
+    """An ordered collection of :class:`TaskNode`\\ s forming a DAG."""
+
+    def __init__(self, nodes: Iterable[Any] = ()) -> None:
+        self._nodes: Dict[str, TaskNode] = {}
+        for n in nodes:
+            self.add(n)
+
+    @classmethod
+    def from_tasks(cls, tasks: Iterable[Any]) -> "TaskGraph":
+        """Build from anything node-shaped (``TaskNode``, ``DagTask``, …).
+
+        Duck-typed on ``name/kernel/deps/make_maps`` with optional
+        ``device/tag/reads/writes`` — the lowering entry point the pattern
+        builders use.
+        """
+        g = cls()
+        for t in tasks:
+            g.add(t)
+        return g
+
+    def add(self, node: Any) -> TaskNode:
+        if not isinstance(node, TaskNode):
+            node = TaskNode(
+                name=node.name, kernel=node.kernel,
+                deps=tuple(node.deps), make_maps=node.make_maps,
+                device=getattr(node, "device", None),
+                tag=getattr(node, "tag", None),
+                reads=tuple(getattr(node, "reads", ()) or ()),
+                writes=tuple(getattr(node, "writes", ()) or ()))
+        if node.name in self._nodes:
+            raise ValueError(f"duplicate task {node.name!r}")
+        if not node.reads:
+            node = TaskNode(**{**node.__dict__, "reads": node.deps})
+        if not node.writes:
+            node = TaskNode(**{**node.__dict__, "writes": (node.name,)})
+        self._nodes[node.name] = node
+        return node
+
+    @property
+    def nodes(self) -> Dict[str, TaskNode]:
+        return dict(self._nodes)
+
+    def node(self, name: str) -> TaskNode:
+        return self._nodes[name]
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    def __iter__(self):
+        return iter(self._nodes.values())
+
+    def waves(self) -> List[List[str]]:
+        """Topological wave decomposition (raises on cycles/missing deps)."""
+        done: set = set()
+        remaining = dict(self._nodes)
+        out: List[List[str]] = []
+        while remaining:
+            ready = [n for n in remaining.values()
+                     if all(d in done for d in n.deps)]
+            if not ready:
+                raise ValueError(
+                    f"dependency cycle among {sorted(remaining)}")
+            out.append([n.name for n in ready])
+            for n in ready:
+                done.add(n.name)
+                del remaining[n.name]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Placement policies
+# ---------------------------------------------------------------------------
+@dataclass
+class PlacementContext:
+    """What a policy may look at when placing a node.
+
+    ``home`` maps every already-placed task to its device; ``out_bytes`` to
+    its output size (producers placed in earlier waves, or earlier in this
+    wave).  ``load`` counts this wave's placements per device (queue depth).
+    """
+
+    pool: Any
+    cost: Any
+    D: int
+    peer: bool = False
+    transport: Any = None
+    home: Dict[str, int] = field(default_factory=dict)
+    out_bytes: Dict[str, int] = field(default_factory=dict)
+    load: Dict[int, int] = field(default_factory=dict)
+    # task -> devices holding a live copy of its output (the home plus every
+    # peer-propagated replica).  The runner moves a cross-device edge ONCE
+    # per (entry, device) and binds it free afterwards; a cost-aware policy
+    # must price repeat edges at zero or it will overestimate spreading.
+    replicas: Dict[str, set] = field(default_factory=dict)
+    wave: int = 0
+
+
+class PlacementPolicy:
+    """Where does a ready node run, and over which wire do its edges ride."""
+
+    name = "abstract"
+
+    def begin(self, ctx: PlacementContext) -> None:
+        """Reset per-run state (policies may be reused across runs)."""
+
+    def place(self, ctx: PlacementContext, node: TaskNode,
+              ready_index: int, region_tag: str) -> int:
+        raise NotImplementedError
+
+    def route_edge(self, ctx: PlacementContext, src: int, dst: int,
+                   nbytes: int) -> str:
+        """``"peer"`` or ``"funnel"`` for one cross-device dependency edge."""
+        return "peer"
+
+
+class RoundRobin(PlacementPolicy):
+    """Arrival order modulo device count — the historical static placement."""
+
+    name = "round-robin"
+
+    def place(self, ctx: PlacementContext, node: TaskNode,
+              ready_index: int, region_tag: str) -> int:
+        return node.device if node.device is not None else ready_index % ctx.D
+
+
+class LocalityAffinity(PlacementPolicy):
+    """Prefer the device that already holds the node's inputs.
+
+    Scores each device by the bytes of the node's ``reads`` homed there —
+    producer outputs via the runner's live placement map, producer-less
+    names via the device present tables — and breaks ties by this wave's
+    queue depth (then lowest index, for determinism).  With no locality
+    signal it degrades to arrival order, i.e. exactly :class:`RoundRobin`.
+    """
+
+    name = "locality"
+
+    def place(self, ctx: PlacementContext, node: TaskNode,
+              ready_index: int, region_tag: str) -> int:
+        if node.device is not None:
+            return node.device
+        score = [0] * ctx.D
+        for dep in node.reads:
+            if dep in ctx.replicas:
+                nb = ctx.out_bytes.get(dep, 0) or 1
+                for d in ctx.replicas[dep]:   # home + propagated copies
+                    score[d] += nb
+                continue
+            src = ctx.home.get(dep)
+            if src is not None:
+                score[src] += ctx.out_bytes.get(dep, 0) or 1
+                continue
+            for d in range(ctx.D):
+                e = ctx.pool.present[d].get(dep)
+                if e is not None and not e.spilled:
+                    score[d] += e.nbytes()
+        best = max(score)
+        if best == 0:
+            return ready_index % ctx.D
+        tied = [d for d in range(ctx.D) if score[d] == best]
+        return min(tied, key=lambda d: (ctx.load.get(d, 0), d))
+
+
+class HeftPlacement(PlacementPolicy):
+    """Earliest-finish-time placement under the recorded cost model.
+
+    Classic HEFT list scheduling specialized to the wave dispatcher: each
+    device carries a modeled ready clock; a node's candidate finish time on
+    device ``d`` is ``max(ready[d], latest edge arrival) + est`` where
+    ``est`` is the mean observed compute time of the node's kernel
+    (:meth:`CostModel.kernel_time`; ``default_task_s`` before any
+    observation) and each cross-device edge costs the cheaper of the host
+    funnel (fetch + re-send on the NIC) and the peer fabric
+    (:meth:`Transport.edge_time`) — the same comparison
+    :meth:`route_edge` answers, so the runner moves each dependency over
+    the wire the policy priced.  Every decision is logged via
+    :meth:`CostModel.record_placement` for predicted-vs-observed reports.
+    """
+
+    name = "heft"
+
+    def __init__(self, default_task_s: float = 1e-3,
+                 use_observed: bool = True) -> None:
+        self.default_task_s = default_task_s
+        # use_observed=False freezes the compute estimate at
+        # ``default_task_s`` — deterministic placement for tests/benchmarks
+        # (measured timings on a shared host include jit-compile spikes that
+        # would drown the modeled link and vary run to run)
+        self.use_observed = use_observed
+        self._ready: Dict[int, float] = {}
+
+    def begin(self, ctx: PlacementContext) -> None:
+        self._ready = {d: 0.0 for d in range(ctx.D)}
+
+    _FUNNEL = HostFunnelTransport()     # prices the fetch + re-send wire
+
+    def _edge(self, ctx: PlacementContext, src: int, dst: int,
+              nbytes: int) -> Tuple[float, str]:
+        # the funnel price comes from the transport layer's own model, so
+        # the two can never drift apart
+        funnel = self._FUNNEL.edge_time(ctx.cost, src, dst, nbytes)
+        if ctx.peer and ctx.transport is not None:
+            peer_s = ctx.transport.edge_time(ctx.cost, src, dst, nbytes)
+            if peer_s <= funnel:
+                return peer_s, "peer"
+        return funnel, "funnel"
+
+    def route_edge(self, ctx: PlacementContext, src: int, dst: int,
+                   nbytes: int) -> str:
+        return self._edge(ctx, src, dst, nbytes)[1]
+
+    def place(self, ctx: PlacementContext, node: TaskNode,
+              ready_index: int, region_tag: str) -> int:
+        est = ctx.cost.kernel_time(node.kernel) if self.use_observed else None
+        if est is None:
+            est = self.default_task_s
+        candidates = ((node.device,) if node.device is not None
+                      else range(ctx.D))
+        best, best_t = None, None
+        for d in candidates:
+            arrive = 0.0
+            for dep in node.deps:
+                src = ctx.home.get(dep)
+                if (src is None or src == d
+                        or d in ctx.replicas.get(dep, ())):
+                    continue   # already local (home or replica): free edge
+                s, _ = self._edge(ctx, src, d, ctx.out_bytes.get(dep, 0))
+                arrive = max(arrive, s)
+            t = max(self._ready.get(d, 0.0), arrive) + est
+            if best_t is None or t < best_t:
+                best, best_t = d, t
+        self._ready[best] = best_t
+        ctx.cost.record_placement(region_tag, best, best_t, policy=self.name)
+        return best
+
+
+_POLICIES = {"round-robin": RoundRobin, "locality": LocalityAffinity,
+             "heft": HeftPlacement}
+
+
+def resolve_policy(policy: Any) -> PlacementPolicy:
+    """None | name | class | instance → a ready :class:`PlacementPolicy`."""
+    if policy is None:
+        return RoundRobin()
+    if isinstance(policy, str):
+        try:
+            return _POLICIES[policy]()
+        except KeyError:
+            raise ValueError(f"unknown placement policy {policy!r}; "
+                             f"one of {sorted(_POLICIES)}") from None
+    if isinstance(policy, type) and issubclass(policy, PlacementPolicy):
+        return policy()
+    if isinstance(policy, PlacementPolicy):
+        return policy
+    raise TypeError(f"not a placement policy: {policy!r}")
+
+
+def _value_nbytes(val: Any) -> int:
+    """Bytes of a value / ShapeDtypeStruct template / pytree of either."""
+    total = 0
+    for l in jax.tree.leaves(
+            val, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)):
+        shape = getattr(l, "shape", ())
+        dtype = jnp.dtype(getattr(l, "dtype", jnp.float32))
+        total += int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# The executor every pattern lowers into
+# ---------------------------------------------------------------------------
+def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
+              policy: Any = None, out_name: str = "out",
+              nowait: bool = True, resident: bool = False,
+              peer: bool = False, transport: Optional[Any] = None,
+              tag: str = "graph") -> Dict[str, Any]:
+    """Run a :class:`TaskGraph`: waves of ready nodes, policy-placed.
+
+    The semantics previously private to ``wavefront_offload`` — and now
+    shared by every pattern that lowers here:
+
+    * nodes whose dependencies are satisfied dispatch as concurrent
+      ``nowait`` regions, one wave at a time; host-mediated edges fetch the
+      producer's value and re-send it (the paper's funnel);
+    * ``resident=True`` pins a wave's *shared* plain ``to`` inputs once per
+      device per wave (present-table elision for fan-outs);
+    * ``peer=True`` keeps every node's ``out_name`` output resident on its
+      device (``device_out``), hands consumers :class:`PeerRef`
+      placeholders, and moves each cross-device edge once over the wire the
+      policy routes it to — device→device via
+      :meth:`TargetExecutor.propagate_resident` (tagged per consumer
+      region, so a discarded region's peer records are struck with it), or
+      through the host funnel when the policy prices that cheaper.
+
+    ``policy`` (default :class:`RoundRobin`) decides device placement per
+    ready node; placement affects traffic, never values.  Returns
+    ``{task: host value}`` for every node.
+    """
+    policy = resolve_policy(policy)
+    if peer and transport is None:
+        from .transport import PeerTransport
+        transport = PeerTransport()
+    pool = ex.pool
+    D = len(pool)
+    ctx = PlacementContext(pool=pool, cost=pool.cost, D=D, peer=peer,
+                           transport=transport)
+    policy.begin(ctx)
+
+    # peer mode: every (device, entry-name) this run pinned — producer
+    # outputs and their propagated peer copies — released in the final
+    # teardown; ``producer`` maps a task to its output's CURRENT home
+    # device/entry (the live map PeerRef resolution consults)
+    peer_entries: Dict[Tuple[int, str], bool] = {}
+    producer: Dict[str, Tuple[int, str]] = {}
+    funnel_cache: Dict[str, Any] = {}   # producer task -> fetched host value
+
+    def _peer_rewrite(t: TaskNode, dev: int, maps: MapSpec,
+                      region_tag: str) -> MapSpec:
+        new_to: Dict[str, Any] = {}
+        pres: Dict[str, str] = {}
+        for k, v in maps.to.items():
+            if isinstance(v, PeerRef):
+                # placement-independent resolution: the live producer map,
+                # not the device the ref was minted with
+                src_dev, entry = producer[v.task]
+                if src_dev == dev or (dev, entry) in peer_entries:
+                    pres[k] = entry
+                else:
+                    nb = ctx.out_bytes.get(v.task, 0)
+                    if policy.route_edge(ctx, src_dev, dev, nb) == "funnel":
+                        # the policy priced the funnel cheaper for this edge:
+                        # fetch + re-map, exactly the paper's wire — ONE
+                        # fetch per producer (outputs are write-once here),
+                        # re-sent per consumer, like the faithful pattern
+                        if v.task not in funnel_cache:
+                            funnel_cache[v.task] = ex.fetch_resident(src_dev,
+                                                                     entry)
+                        new_to[k] = funnel_cache[v.task]
+                    else:
+                        # per-region edge tag: a later discard_tag of this
+                        # region (a speculation loser) strikes these peer
+                        # records too, not only its funnel records
+                        ex.propagate_resident(src_dev, dev, entry,
+                                              transport=transport,
+                                              tag=f"{region_tag}:edge")
+                        peer_entries[(dev, entry)] = True
+                        ctx.replicas.setdefault(v.task, set()).add(dev)
+                        pres[k] = entry
+            else:
+                new_to[k] = v
+        for k, v in {**maps.tofrom, **maps.alloc,
+                     **{n: s for n, s in maps.from_.items()}}.items():
+            if isinstance(v, PeerRef):
+                raise TypeError(
+                    f"task {t.name!r}: a PeerRef dependency may only appear "
+                    f"in a to= clause (got it in {k!r})")
+        if out_name not in maps.from_:
+            raise ValueError(
+                f"peer graph requires task {t.name!r} to declare "
+                f"from_[{out_name!r}] (its resident output shape)")
+        entry = f"{tag}:{t.name}"
+        ex.alloc_resident(dev, entry, maps.from_[out_name], tag=f"{tag}:out")
+        peer_entries[(dev, entry)] = True
+        producer[t.name] = (dev, entry)
+        ctx.out_bytes[t.name] = _value_nbytes(maps.from_[out_name])
+        return MapSpec(to=new_to,
+                       from_={n: s for n, s in maps.from_.items()
+                              if n != out_name},
+                       tofrom=maps.tofrom, alloc=maps.alloc,
+                       firstprivate=maps.firstprivate,
+                       use_globals=maps.use_globals,
+                       present={**_alias_map(maps.present), **pres},
+                       device_out={**_alias_map(maps.device_out),
+                                   out_name: entry})
+
+    results: Dict[str, Any] = {}
+    # the topological decomposition is the graph's own (one wave drains
+    # fully before the next is planned, so ready == waves()); cycles and
+    # missing deps surface here, before anything is dispatched
+    for wave_idx, wave in enumerate(graph.waves()):
+        ready = [graph.node(n) for n in wave]
+        ctx.wave = wave_idx
+        ctx.load = {d: 0 for d in range(D)}
+        entered: List[Tuple[int, str]] = []
+        futs: List[Tuple[TaskNode, str, TargetFuture]] = []
+        joined = False
+        try:
+            plans: List[Tuple[TaskNode, int, str, MapSpec]] = []
+            for j, t in enumerate(ready):
+                region_tag = t.tag or f"{tag}:w{wave_idx}:{t.name}"
+                dev = policy.place(ctx, t, j, region_tag)
+                if not (0 <= dev < D):
+                    raise ValueError(
+                        f"policy {policy.name!r} placed {t.name!r} on "
+                        f"device {dev} of {D}")
+                ctx.load[dev] = ctx.load.get(dev, 0) + 1
+                ctx.home[t.name] = dev
+                ctx.replicas.setdefault(t.name, set()).add(dev)
+                maps = t.make_maps({d: results[d] for d in t.deps})
+                if peer:
+                    maps = _peer_rewrite(t, dev, maps, region_tag)
+                plans.append((t, dev, region_tag, maps))
+            if resident:
+                # pin only values genuinely shared: a (device, name) whose
+                # plain to/tofrom value is identical across >=2 of the wave's
+                # tasks.  Pinning per-task-varying values would gain nothing
+                # and each refresh could race an in-flight sibling region out
+                # of its elision (value-correct either way, but the byte
+                # savings would depend on thread scheduling).
+                usage: Dict[Tuple[int, str], List[Tuple[Tuple[int, ...], Any]]] = {}
+                for _, dev, _, maps in plans:
+                    # to-maps only: tofrom buffers are written back per task,
+                    # and two regions sharing one pinned output handle would
+                    # fetch each other's results
+                    for n, v in maps.to.items():
+                        leaves, _ = _flatten_map_value(v)
+                        if any(isinstance(l, Section) for l in leaves):
+                            continue   # sections differ per task: not pinnable
+                        usage.setdefault((dev, n), []).append(
+                            (tuple(id(l) for l in leaves), v))
+                for (dev, n), uses in usage.items():
+                    if len(uses) < 2 or len({k for k, _ in uses}) != 1:
+                        continue       # unique or conflicting values: no pin
+                    try:
+                        ex.enter_data(dev, f"{tag}:w{wave_idx}", **{n: uses[0][1]})
+                        entered.append((dev, n))
+                    except ValueError:
+                        pass           # shape changed under this name: skip pin
+            for t, dev, region_tag, maps in plans:
+                if nowait:
+                    futs.append((t, region_tag,
+                                 ex.target(t.kernel, dev, maps, nowait=True,
+                                           tag=region_tag)))
+                else:
+                    out = ex.target(t.kernel, dev, maps, nowait=False,
+                                    tag=region_tag)
+                    results[t.name] = (PeerRef(t.name, producer[t.name][1],
+                                               producer[t.name][0])
+                                       if peer else out[out_name])
+                    if not peer:
+                        ctx.out_bytes[t.name] = _value_nbytes(results[t.name])
+            if futs:
+                # drain waits for EVERY region to settle (even past a
+                # failure), so the pin release below can never pull a
+                # buffer out from under a still-running region
+                joined = True
+                outs = ex.drain([f for _, _, f in futs])
+                for (t, _, _), out in zip(futs, outs):
+                    results[t.name] = (PeerRef(t.name, producer[t.name][1],
+                                               producer[t.name][0])
+                                       if peer else out[out_name])
+                    if not peer:
+                        ctx.out_bytes[t.name] = _value_nbytes(results[t.name])
+        except BaseException:
+            if peer:
+                # failed run: nothing will fetch the resident outputs, so
+                # release every pinned entry.  Safe even before the finally
+                # below joins a mid-dispatch wave: in-flight regions hold
+                # their own present-table references, so an entry is only
+                # freed once its last region has released it.
+                for dev, n in peer_entries:
+                    ex.exit_data(dev, n)
+            raise
+        finally:
+            if futs and not joined:
+                # a mid-dispatch failure (a later task's make_maps or launch
+                # raised): the already-launched regions must still be joined
+                # and retired before their pins are released
+                try:
+                    ex.drain([f for _, _, f in futs])
+                except BaseException:
+                    pass               # the dispatch error propagates
+            for dev, n in entered:      # wave boundary: release pins
+                ex.exit_data(dev, n)
+    if peer:
+        # materialize the host view — one fetch per task output, exactly
+        # what the host-mediated run's from_ maps moved — then release
+        # every entry this run pinned (outputs and propagated peer copies)
+        try:
+            for name, (dev, entry) in producer.items():
+                results[name] = ex.fetch_resident(dev, entry)
+        finally:
+            for dev, n in peer_entries:
+                ex.exit_data(dev, n)
+    return results

@@ -90,6 +90,16 @@ class Transport:
         """
         raise NotImplementedError
 
+    def edge_time(self, cost, src: int, dst: int, nbytes: int) -> float:
+        """Modeled seconds to carry one ``nbytes`` dependency edge src→dst.
+
+        What a cost-driven placement policy charges for routing an edge over
+        this fabric (``cost`` is the pool's :class:`~repro.core.costmodel.
+        CostModel`).  The base transport is the host funnel: a device→device
+        copy is a fetch plus a re-send, two messages on the host NIC.
+        """
+        return cost.link.time(nbytes, 1) * 2
+
     # -- collectives -----------------------------------------------------------
     def ring_allreduce(self, pool, handles: Sequence[Sequence[int]],
                        specs: Sequence[jax.ShapeDtypeStruct], *,
@@ -292,3 +302,8 @@ class PeerTransport(Transport):
                  nbytes: Optional[int] = None, tag: str = ""):
         return pool.peer_copy(src, src_handle, dst, dst_handle,
                               nbytes=nbytes, tag=tag)
+
+    def edge_time(self, cost, src: int, dst: int, nbytes: int) -> float:
+        """One message on the directed (src, dst) peer link — no funnel hop."""
+        plink = self.link or cost.peer_link or cost.link
+        return plink.time(nbytes, 1)
