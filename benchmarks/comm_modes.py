@@ -38,11 +38,21 @@ moves ≥2× fewer host-funnel bytes than host-mediated syncs at equal
 ``--json PATH`` dumps every section's rows (the CI writes
 ``artifacts/bench/BENCH_comm.json`` from it, so the perf trajectory is
 tracked commit over commit).
+
+``--inject-p P`` runs every section under seeded peer-fabric chaos:
+``FlakyDevice`` faults SEND/RECV at probability ``P`` on every device
+(``--inject-seed`` keys the schedule), direct-mode runtimes get transport
+retries + funnel fallback, and peer graphs recover through ``run_graph``
+— every bit-identity assertion in the sections must STILL hold.  The CI
+chaos job runs the smoke sizes this way and uploads the
+``--failure-report`` JSON (injected fault counts per run, fallback
+counts) as an artifact.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 from typing import Dict, List
 
 import jax
@@ -53,6 +63,49 @@ from repro.core import (ClusterRuntime, DagTask, KernelTable, MapSpec,
                         RuntimeConfig, wavefront_offload)
 from repro.core.costmodel import PAPER_ETHERNET
 from repro.optim import AdamW, AdamWConfig
+
+#: --inject-p/--inject-seed state; _runtime() applies it to every pool.
+_INJECT = {"p": 0.0, "seed": 0}
+_CHAOS_RUNS: List[Dict] = []
+
+
+def _runtime(cfg: RuntimeConfig, table: KernelTable) -> ClusterRuntime:
+    """ClusterRuntime factory honoring the chaos flags.
+
+    With ``--inject-p`` > 0 every device is wrapped in a seeded
+    :class:`~repro.ft.FlakyDevice` faulting the peer fabric (SEND/RECV);
+    direct-mode runtimes additionally get ``transport_retries`` so the
+    collectives ride the retry + funnel-fallback path.  Values delivered
+    are identical either way — the sections' assertions are the check.
+    """
+    if _INJECT["p"] > 0 and cfg.comm_mode == "direct":
+        cfg.transport_retries = max(cfg.transport_retries, 3)
+    rt = ClusterRuntime(cfg, table=table)
+    if _INJECT["p"] > 0:
+        from repro.ft import inject_flaky
+        inject_flaky(rt.pool, p=_INJECT["p"], seed=_INJECT["seed"],
+                     ops=("SEND", "RECV"))
+        _CHAOS_RUNS.append({"mode": cfg.comm_mode, "devices": len(rt.pool),
+                            "pool": rt.pool, "transport": rt.transport})
+    return rt
+
+
+def _failure_report() -> Dict:
+    """Aggregate injected-fault counts across every chaos run."""
+    runs = []
+    for r in _CHAOS_RUNS:
+        by_op: Dict[str, int] = {}
+        for d in r["pool"].devices:
+            for op, n in getattr(d, "failures_by_op", {}).items():
+                by_op[op] = by_op.get(op, 0) + n
+        runs.append({"mode": r["mode"], "devices": r["devices"],
+                     "failures": sum(by_op.values()),
+                     "failures_by_op": by_op,
+                     "transport_fallbacks": getattr(r["transport"],
+                                                    "fallbacks", 0)})
+    return {"inject_p": _INJECT["p"], "inject_seed": _INJECT["seed"],
+            "ops": ["SEND", "RECV"], "runs": runs,
+            "total_failures": sum(r["failures"] for r in runs)}
 
 
 def _make_table(d: int) -> KernelTable:
@@ -96,7 +149,7 @@ def run(d_model: int = 512, n_batch: int = 64,
     for mode, compress in (("host-mediated", False), ("direct", False),
                            ("direct+int8", True)):
         for n in device_counts:
-            rt = ClusterRuntime(RuntimeConfig(
+            rt = _runtime(RuntimeConfig(
                 n_virtual=n, comm_mode=mode.split("+")[0], compress=compress,
                 link=PAPER_ETHERNET), table=table)
             g = rt.data_parallel_grads("mse_grads", params, all_batches[n])
@@ -128,7 +181,7 @@ def run_resident(d_model: int = 512, n_batch: int = 64, n: int = 4,
     rows = []
     grads = {}
     for resident in (False, True):
-        rt = ClusterRuntime(RuntimeConfig(n_virtual=n,
+        rt = _runtime(RuntimeConfig(n_virtual=n,
                                           link=PAPER_ETHERNET), table=table)
         g = None
         for _ in range(steps):
@@ -183,7 +236,7 @@ def run_wavefront(B: int = 64, fan: int = 8, n_dev: int = 2,
     rows, results = [], {}
     for mapping, kw in (("per-task", {}), ("resident", {"resident": True}),
                         ("peer", {"peer": True})):
-        rt = ClusterRuntime(RuntimeConfig(n_virtual=n_dev,
+        rt = _runtime(RuntimeConfig(n_virtual=n_dev,
                                           link=PAPER_ETHERNET), table=table)
         results[mapping] = wavefront_offload(rt.ex, list(tasks), nowait=True,
                                              **kw)
@@ -226,7 +279,7 @@ def run_dps(d_model: int = 256, n_batch: int = 16, n: int = 4,
     batches = _make_batches(d_model, n_batch, n)
     rows = []
 
-    rt = ClusterRuntime(RuntimeConfig(n_virtual=n, link=PAPER_ETHERNET),
+    rt = _runtime(RuntimeConfig(n_virtual=n, link=PAPER_ETHERNET),
                         table=_make_table(d_model))
     opt, state, host_params = AdamW(AdamWConfig()), None, params
     state = opt.init(params)
@@ -243,7 +296,7 @@ def run_dps(d_model: int = 256, n_batch: int = 16, n: int = 4,
 
     dps_params = {}
     for mode in ("host-mediated", "direct"):
-        rt = ClusterRuntime(RuntimeConfig(n_virtual=n, comm_mode=mode,
+        rt = _runtime(RuntimeConfig(n_virtual=n, comm_mode=mode,
                                           link=PAPER_ETHERNET),
                             table=_make_table(d_model))
         p = None
@@ -342,7 +395,17 @@ if __name__ == "__main__":
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also dump every section's rows to PATH (the CI "
                          "writes artifacts/bench/BENCH_comm.json)")
+    ap.add_argument("--inject-p", type=float, default=0.0, metavar="P",
+                    help="seeded SEND/RECV fault probability per device "
+                         "command (0 disables chaos)")
+    ap.add_argument("--inject-seed", type=int, default=0, metavar="SEED",
+                    help="seed keying the chaos schedule")
+    ap.add_argument("--failure-report", metavar="PATH", default=None,
+                    help="dump injected-fault counts per run to PATH "
+                         "(the CI chaos job uploads it as an artifact)")
     args = ap.parse_args()
+    _INJECT["p"] = args.inject_p
+    _INJECT["seed"] = args.inject_seed
     if args.smoke:
         sections = {
             "modes": run(d_model=128, n_batch=16, device_counts=(2, 4)),
@@ -358,8 +421,20 @@ if __name__ == "__main__":
     print(render_wavefront(sections["wavefront"]))
     print(render_dps(sections["dps"]))
     if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         with open(args.json, "w") as f:
             json.dump({"benchmark": "comm_modes",
                        "smoke": bool(args.smoke), "sections": sections},
                       f, indent=2, sort_keys=True)
         print(f"wrote {args.json}")
+    if _INJECT["p"] > 0:
+        report = _failure_report()
+        print(f"## chaos: injected {report['total_failures']} SEND/RECV "
+              f"faults at p={_INJECT['p']} seed={_INJECT['seed']} across "
+              f"{len(report['runs'])} runs — all assertions held")
+        if args.failure_report:
+            os.makedirs(os.path.dirname(args.failure_report) or ".",
+                        exist_ok=True)
+            with open(args.failure_report, "w") as f:
+                json.dump(report, f, indent=2, sort_keys=True)
+            print(f"wrote {args.failure_report}")

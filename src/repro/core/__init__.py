@@ -14,8 +14,8 @@ Public API:
 from .costmodel import (CostModel, Event, LinkModel, PAPER_ETHERNET,
                         PeerRecord, TimelineSpan, TPU_DCN, TPU_ICI,
                         PEAK_FLOPS_BF16, HBM_BW_Bps, ICI_BW_Bps)
-from .device import (Command, DevicePool, DeviceStoppedError, NodeDevice,
-                     SLOT_STREAM, StreamTicket)
+from .device import (Command, DeviceFailure, DevicePool, DeviceStoppedError,
+                     HealthRegistry, NodeDevice, SLOT_STREAM, StreamTicket)
 from .kernel_table import GLOBAL_KERNEL_TABLE, KernelTable, kernel
 from .mediary import (RESERVED, HostMirror, MediaryStore, PresentEntry,
                       PresentTable)
@@ -32,6 +32,7 @@ __all__ = [
     "KernelTable", "kernel", "GLOBAL_KERNEL_TABLE",
     "MediaryStore", "HostMirror", "RESERVED", "PresentTable", "PresentEntry",
     "NodeDevice", "DevicePool", "Command", "DeviceStoppedError",
+    "DeviceFailure", "HealthRegistry",
     "SLOT_STREAM", "StreamTicket",
     "MapSpec", "Section", "sec", "TargetExecutor", "TargetFuture",
     "strip_partition", "offload_strips", "recursive_offload",

@@ -267,6 +267,31 @@ class CostModel:
                              + len(self.adjustments) + len(self.peers)
                              + len(self.events) + len(self.placements))
 
+    def rename_tag(self, prefix: str, new_prefix: str) -> int:
+        """Rewrite every record in region ``prefix`` into ``new_prefix``.
+
+        Used when a speculative re-dispatch WINS: the surviving copy's
+        records are canonicalized onto the original task's tag, so the
+        modeled work is identical no matter which physical copy raced to the
+        result.  Returns the number of records renamed.
+        """
+        renamed = 0
+
+        def swap(tag: str) -> str:
+            nonlocal renamed
+            if _tag_matches(tag, prefix):
+                renamed += 1
+                return new_prefix + tag[len(prefix):]
+            return tag
+
+        with self._lock:
+            for rec in (*self.transfers, *self.compute, *self.adjustments,
+                        *self.peers, *self.events):
+                rec.tag = swap(rec.tag)
+            for p in self.placements:
+                p.task = swap(p.task)
+        return renamed
+
     # -- summaries ------------------------------------------------------------
     def bytes_moved(self, direction: Optional[str] = None) -> int:
         return sum(t.nbytes for t in self.transfers + self.adjustments

@@ -156,6 +156,76 @@ class DeviceStoppedError(RuntimeError):
     """Command issued to a device whose queue has been closed by stop_all."""
 
 
+class DeviceFailure(RuntimeError):
+    """A device-side command failed (injected or real).
+
+    Carries enough context for graph-level recovery: ``op`` names the failed
+    command (EXEC / SEND / RECV / XFER_TO / XFER_FROM) and ``device`` the
+    device that raised.  Lives in ``core`` so the runtime can catch it
+    without importing ``ft``; ``repro.ft`` re-exports it.
+    """
+
+    def __init__(self, message: str, *, op: str = "EXEC",
+                 device: Optional[int] = None,
+                 kernel_index: Optional[int] = None) -> None:
+        super().__init__(message)
+        self.op = op
+        self.device = device
+        self.kernel_index = kernel_index
+
+
+class HealthRegistry:
+    """Shared device-health bookkeeping for failure-aware scheduling.
+
+    Placement policies consult :meth:`healthy`; recovery paths call
+    :meth:`mark_failed` when a device raises :class:`DeviceFailure`.  A
+    device is blacklisted once its failure count reaches ``max_failures`` —
+    one transient fault does not remove a device, a repeat offender does.
+    When *every* device is blacklisted, :meth:`healthy` falls back to the
+    full set (availability beats avoidance: with p<1 injection a retry on a
+    flaky device still converges).
+    """
+
+    def __init__(self, max_failures: int = 2) -> None:
+        self.max_failures = max_failures
+        self._lock = threading.Lock()
+        self._counts: Dict[int, int] = {}
+        self._blacklist: set = set()
+
+    def mark_failed(self, device: Optional[int]) -> None:
+        if device is None:
+            return
+        with self._lock:
+            self._counts[device] = self._counts.get(device, 0) + 1
+            if self._counts[device] >= self.max_failures:
+                self._blacklist.add(device)
+
+    def mark_healthy(self, device: int) -> None:
+        """Forget a device's failure history (rejoin after repair)."""
+        with self._lock:
+            self._counts.pop(device, None)
+            self._blacklist.discard(device)
+
+    def failures(self, device: int) -> int:
+        with self._lock:
+            return self._counts.get(device, 0)
+
+    @property
+    def blacklist(self) -> set:
+        with self._lock:
+            return set(self._blacklist)
+
+    def is_healthy(self, device: int) -> bool:
+        with self._lock:
+            return device not in self._blacklist
+
+    def healthy(self, n: int) -> List[int]:
+        """Non-blacklisted device indices in ``range(n)`` (all if none are)."""
+        with self._lock:
+            out = [d for d in range(n) if d not in self._blacklist]
+        return out if out else list(range(n))
+
+
 class _WorkItem:
     """One enqueued command: a closure the device worker runs in order."""
 
@@ -225,6 +295,10 @@ class DevicePool:
         self.devices = list(devices)
         self.table = table or GLOBAL_KERNEL_TABLE
         self.cost = CostModel(link)
+        # pool-wide default budget for devices joining later (add_device)
+        self._default_capacity = capacity_bytes
+        # shared failure bookkeeping consulted by placement policies
+        self.health = HealthRegistry()
         self.mirrors = [HostMirror() for _ in self.devices]
         # RLocks: _submit re-acquires the issue lock the issue methods hold
         self.locks = [threading.RLock() for _ in self.devices]
@@ -237,6 +311,9 @@ class DevicePool:
         # name -> {device: handle}; first-fit may place a global at different
         # slots across devices when other buffers are already pinned on some
         self.globals: Dict[str, Dict[int, int]] = {}
+        # name -> host value, retained so devices joining later (add_device)
+        # can replay the install sequence
+        self._global_values: Dict[str, Any] = {}
         self._trace_lock = threading.Lock()
         self._queues: List["queue.SimpleQueue[Optional[_WorkItem]]"] = [
             queue.SimpleQueue() for _ in self.devices]
@@ -370,6 +447,23 @@ class DevicePool:
         err, self._async_errors[device] = self._async_errors[device], None
         if err is not None:
             raise err
+
+    def absorb_failures(self) -> List[BaseException]:
+        """Clear stashed *injected* async errors pool-wide; return them.
+
+        Graph-level recovery handles :class:`DeviceFailure` itself (re-place,
+        reroute, replay); leaving the stash armed would make an innocent
+        region's next sync op steal the error.  Non-DeviceFailure errors are
+        left in place — they surface as before.
+        """
+        absorbed: List[BaseException] = []
+        for d in range(len(self.devices)):
+            with self.locks[d]:
+                err = self._async_errors[d]
+                if isinstance(err, DeviceFailure):
+                    self._async_errors[d] = None
+                    absorbed.append(err)
+        return absorbed
 
     def _traced(self, device: int, cmd: Command,
                 fn: Callable[[], Any]) -> Callable[[], Any]:
@@ -627,33 +721,112 @@ class DevicePool:
                                  kernel=kernel_name)
         return out
 
+    def _stop_device(self, i: int) -> Optional["_cf.Future"]:
+        """Close device ``i``'s stream: gate a STOP on everything in flight,
+        mark the queue refused, and schedule the worker-exit sentinel."""
+        with self.locks[i]:                  # atomic with any in-flight issue
+            if self._stopped[i]:
+                return None
+            cmd = Command("STOP", i)
+            self._log(cmd)
+            # STOP runs after every outstanding command has settled;
+            # _submit would refuse once the stopped flag is up, so gate
+            # it by hand on a snapshot of the in-flight futures.
+            deps = [f for f in self._outstanding[i] if not f.done()]
+            fut: "_cf.Future" = _cf.Future()
+            self._outstanding[i].append(fut)
+            self._stopped[i] = True
+        self._gate(i, _WorkItem(
+            self._traced(i, cmd,
+                         lambda i=i, cmd=cmd: self.devices[i].execute(cmd, self.table)),
+            fut), deps)
+        # worker exits once STOP has executed; nothing can trail it
+        # (every earlier command is a dependency of STOP, and the
+        # stopped flag refuses new submissions)
+        fut.add_done_callback(lambda _f, i=i: self._queues[i].put(None))
+        return fut
+
     def stop_all(self) -> None:
-        futs = []
-        for d in self.devices:
-            i = d.index
-            with self.locks[i]:              # atomic with any in-flight issue
-                if self._stopped[i]:
-                    continue
-                cmd = Command("STOP", i)
-                self._log(cmd)
-                # STOP runs after every outstanding command has settled;
-                # _submit would refuse once the stopped flag is up, so gate
-                # it by hand on a snapshot of the in-flight futures.
-                deps = [f for f in self._outstanding[i] if not f.done()]
-                fut: "_cf.Future" = _cf.Future()
-                self._outstanding[i].append(fut)
-                self._stopped[i] = True
-            self._gate(i, _WorkItem(
-                self._traced(i, cmd,
-                             lambda i=i, cmd=cmd: self.devices[i].execute(cmd, self.table)),
-                fut), deps)
-            # worker exits once STOP has executed; nothing can trail it
-            # (every earlier command is a dependency of STOP, and the
-            # stopped flag refuses new submissions)
-            fut.add_done_callback(lambda _f, i=i: self._queues[i].put(None))
-            futs.append(fut)
+        futs = [self._stop_device(d.index) for d in self.devices]
         for f in futs:
-            f.result()
+            if f is not None:
+                f.result()
+
+    # -- elastic pool membership (beyond-paper: nodes join/leave mid-job) -----
+    def add_device(self, hostname: Optional[str] = None,
+                   capacity_bytes: Optional[int] = None) -> int:
+        """Grow the pool by one device, placeable immediately.
+
+        Appends every piece of per-device parallel state, starts the worker
+        thread, and replays ``install_global`` history onto the newcomer so
+        declare-target globals resolve there too.  Returns the new index.
+        """
+        i = len(self.devices)
+        dev = NodeDevice(i, jax_device=jax.devices()[0],
+                         hostname=hostname or f"vnode{i}",
+                         capacity_bytes=capacity_bytes)
+        self.devices.append(dev)
+        self.mirrors.append(HostMirror())
+        self.locks.append(threading.RLock())
+        self.present.append(PresentTable(capacity_bytes=(
+            capacity_bytes if capacity_bytes is not None
+            else self._default_capacity)))
+        self.env_locks.append(threading.RLock())
+        self._queues.append(queue.SimpleQueue())
+        self._stopped.append(False)
+        self._async_errors.append(None)
+        self._last_write.append({})
+        self._readers.append({})
+        self._outstanding.append([])
+        self.stream_traces.append(collections.deque(maxlen=4096))
+        t = threading.Thread(target=self._worker, args=(i,),
+                             name=f"omp-dev{i}", daemon=True)
+        t.start()
+        self._workers.append(t)
+        self.health.mark_healthy(i)          # fresh device, clean slate
+        # declare-target globals must exist on every device (paper §4.2)
+        for name, value in self._global_values.items():
+            h = self.alloc(i, value.shape, value.dtype, tag=f"global:{name}")
+            self.transfer_to(i, h, value, tag=f"global:{name}")
+            self.globals[name][i] = h
+        return i
+
+    def remove_tail(self, count: int) -> None:
+        """Shrink the pool by its last ``count`` devices.
+
+        Callers must have drained the departing devices' present tables
+        first (see ``ft.elastic.rescale_pool``); this only closes streams
+        and truncates the parallel state lists.
+        """
+        if count <= 0:
+            return
+        n = len(self.devices)
+        if count >= n:
+            raise ValueError("cannot remove every device from the pool")
+        departing = list(range(n - count, n))
+        futs = [self._stop_device(i) for i in departing]
+        for f in futs:
+            if f is not None:
+                f.result()
+        for i in departing:
+            self._raise_async(i)             # surface anything left stashed
+            for handles in self.globals.values():
+                handles.pop(i, None)
+            self.health.mark_healthy(i)      # stale marks must not outlive it
+        keep = n - count
+        del self.devices[keep:]
+        del self.mirrors[keep:]
+        del self.locks[keep:]
+        del self.present[keep:]
+        del self.env_locks[keep:]
+        del self._queues[keep:]
+        del self._stopped[keep:]
+        del self._async_errors[keep:]
+        del self._last_write[keep:]
+        del self._readers[keep:]
+        del self._outstanding[keep:]
+        del self.stream_traces[keep:]
+        del self._workers[keep:]
 
     # -- declare-target globals (paper §4.2 last ¶) ---------------------------
     def install_global(self, name: str, value: Any, tag: str = "") -> int:
@@ -679,4 +852,5 @@ class DevicePool:
             self.transfer_to(i, h, value, tag=tag or f"global:{name}")
             handles[i] = h
         self.globals[name] = handles
+        self._global_values[name] = value
         return handles[0]

@@ -315,6 +315,27 @@ class PresentTable:
         self.touch(e)
         return e
 
+    def pop_entry(self, name: str) -> Optional[PresentEntry]:
+        """Remove and return an entry without touching refcounts or buffers.
+
+        Used by elastic rescale to *relocate* a (spilled) logical entry to a
+        surviving device's table; the caller owns the device-buffer
+        lifecycle on both sides.
+        """
+        return self._entries.pop(name, None)
+
+    def adopt(self, entry: PresentEntry) -> bool:
+        """Install a relocated entry; False (no-op) if the name is taken.
+
+        The adopting table keeps its own copy on a name clash — the survivor
+        was reachable all along, the migrant was not.
+        """
+        if entry.name in self._entries:
+            return False
+        self.touch(entry)
+        self._entries[entry.name] = entry
+        return True
+
     def release(self, name: str) -> Optional[PresentEntry]:
         """Refcount--; returns the now-dead entry (caller frees) or None."""
         e = self._entries.get(name)

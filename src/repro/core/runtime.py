@@ -55,6 +55,11 @@ class RuntimeConfig:
     # reconciled to the host first) and the next binding refetches it —
     # capacity changes traffic, never results.
     device_capacity_bytes: Optional[int] = None
+    # comm_mode="direct" fault tolerance: >0 makes the peer transport wait
+    # each sendrecv, retry injected SEND/RECV failures this many times, then
+    # fall back to the host funnel — values are identical either way.  The
+    # default keeps the fire-and-forget peer fabric (no per-message wait).
+    transport_retries: int = 0
 
 
 class ClusterRuntime:
@@ -74,9 +79,9 @@ class ClusterRuntime:
         # the transport is what "direct" now *means*: a real peer fabric of
         # SEND/RECV stream commands, not a byte-accounting credit
         self.pool.cost.peer_link = cfg.peer_link
-        self.transport: Transport = (PeerTransport(cfg.peer_link)
-                                     if cfg.comm_mode == "direct"
-                                     else HostFunnelTransport())
+        self.transport: Transport = (
+            PeerTransport(cfg.peer_link, retries=cfg.transport_retries)
+            if cfg.comm_mode == "direct" else HostFunnelTransport())
         self._ef_residual: Optional[Any] = None
         self._dps: Optional[Dict[str, Any]] = None   # data_parallel_step state
 

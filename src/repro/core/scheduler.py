@@ -190,6 +190,12 @@ def _speculative_harvest(ex: TargetExecutor, kernel: str,
                 pass                     # loser failed after losing: moot
         # else: the original was settled by the selection loop
         ex.pool.cost.discard_tag(orig_tags[i] if won_spec else spec_tags[i])
+        if won_spec:
+            # canonicalize the winner onto the strip's own tag: the model
+            # must read the same whichever copy won the race (asserted by
+            # the no-op-speculation test), and downstream consumers
+            # (placement_report, discard by region) key on the strip tag
+            ex.pool.cost.rename_tag(spec_tags[i], orig_tags[i])
     return results
 
 

@@ -55,7 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .device import DevicePool, DeviceStoppedError, StreamTicket
+from .device import DeviceFailure, DevicePool, DeviceStoppedError, StreamTicket
 from .mediary import PresentEntry, same_treedef
 
 
@@ -413,6 +413,52 @@ class TargetExecutor:
         table.bytes_refetched += ent.nbytes()
         table.touch(ent)
 
+    def _heal_locked(self, device: int, ent: PresentEntry, tag: str) -> None:
+        """Repair a resident entry whose last writer failed (injected fault).
+
+        Caller holds ``env_locks[device]``.  A failed XFER_TO/RECV leaves the
+        device buffer unwritten while the entry still *looks* bound; a region
+        that matched it would compute on garbage.  When the entry has an
+        authoritative host view, re-send it (self-healing pin); when it does
+        not (device-ahead, or an ``alloc_resident`` placeholder), raise the
+        stored :class:`DeviceFailure` so graph-level recovery re-propagates
+        or replays the producer.  Non-injected errors always re-raise.
+        """
+        pool = self.pool
+        for i, f in enumerate(ent.write_futs):
+            if f is None or not f.done():
+                continue
+            err = f.exception()
+            if err is None:
+                continue
+            if not isinstance(err, DeviceFailure):
+                raise err
+            leaf = (ent.host_leaves[i]
+                    if i < len(ent.host_leaves) else None)
+            if ent.device_ahead or leaf is None:
+                # the write never landed and the host holds no copy: the
+                # entry is unrecoverable on this device.  Drop it (free the
+                # buffers, strike the name) so graph-level recovery replays
+                # the producer / re-propagates the edge instead of
+                # re-binding the same corpse on every retry.
+                for h in ent.handles:
+                    pool.free(device, h)
+                ent.handles = []
+                ent.write_futs = []
+                pool.present[device].pop_entry(ent.name)
+                with pool.locks[device]:
+                    if pool._async_errors[device] is err:
+                        pool._async_errors[device] = None
+                raise err
+            ent.write_futs[i] = pool.transfer_to(
+                device, ent.handles[i], jnp.asarray(leaf),
+                tag=f"{tag}:heal:{ent.name}")
+            ent.version += 1
+            # the failure is handled; don't let an innocent sync op trip it
+            with pool.locks[device]:
+                if pool._async_errors[device] is err:
+                    pool._async_errors[device] = None
+
     def _revive(self, device: int, ent: PresentEntry, leaves: List[Any],
                 treedef: Any, tag: str) -> None:
         """Refresh a *spilled* entry with a (possibly new) host value."""
@@ -531,6 +577,9 @@ class TargetExecutor:
             sent = pool.present[src].get(name)
             if sent is None:
                 raise KeyError(f"{name!r} is not resident on device {src}")
+            # a damaged source (failed refetch/refresh) must not propagate
+            # garbage: heal from the host view or surface the stored failure
+            self._heal_locked(src, sent, tag)
             sent.refcount += 1         # hold: a concurrent exit_data must not
                                        # free the source handles mid-copy
             # a spilled source holds no device bytes; its reconciled host
@@ -634,6 +683,10 @@ class TargetExecutor:
                 leaves = [jnp.asarray(l) for l in ent.host_leaves]
                 return (leaves[0] if ent.treedef is None
                         else jax.tree.unflatten(ent.treedef, leaves))
+            # a failed writer means the device copy is garbage: re-send from
+            # the host view, or surface the stored DeviceFailure so graph
+            # recovery replays the producer
+            self._heal_locked(device, ent, f"fetch:{name}")
             ent.refcount += 1          # hold the entry: a concurrent
                                        # exit_data must not free (and first-
                                        # fit-recycle) the handles mid-fetch
@@ -673,6 +726,7 @@ class TargetExecutor:
         exec_deps: List[Any] = []
 
         def _retain_ticketed(name: str, ent: PresentEntry) -> List[int]:
+            self._heal_locked(device, ent, tag or name)
             hs = list(ent.handles)
             retained.append(name)
             if name not in tickets:    # same name in two clauses reuses the
@@ -728,7 +782,12 @@ class TargetExecutor:
                     for leaf in leaves:
                         v = leaf.value if isinstance(leaf, Section) else jnp.asarray(leaf)
                         h = pool.alloc(device, v.shape, v.dtype, tag=f"{tag}:{name}")
-                        pool.transfer_to(device, h, v, tag=f"{tag}:{name}")
+                        # the send is a dep of our EXEC: the post-EXEC check
+                        # below must see ITS failure, not let it surface (and
+                        # be absorbed) at some other region's sync point
+                        # while this kernel's garbage result stands
+                        exec_deps.append(
+                            pool.transfer_to(device, h, v, tag=f"{tag}:{name}"))
                         hs.append(h)
                         owned.append(h)
                 handles[name] = hs[0] if treedef is None else hs
@@ -766,6 +825,14 @@ class TargetExecutor:
                                       firstprivate=maps.firstprivate, tag=tag,
                                       skip_reads=tuple(ticketed),
                                       extra_deps=tuple(exec_deps))
+            # the EXEC was *ordered* after its deps, not gated on their
+            # success: a dep that failed between retain and EXEC left its
+            # buffer unwritten, so the kernel just computed on garbage —
+            # surface the dep's error instead of returning the result.  All
+            # deps are settled here (the EXEC ran), so this never blocks.
+            for f in exec_deps:
+                if f is not None and f.done() and f.exception() is not None:
+                    raise f.exception()
             returned: Dict[str, Any] = {}
             if result is not None:
                 if not isinstance(result, Mapping):

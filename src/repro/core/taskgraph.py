@@ -36,6 +36,7 @@ same operands, so results are bit-identical across policies (property-tested)
 """
 from __future__ import annotations
 
+import concurrent.futures as _cf
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -43,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .device import DeviceFailure
 from .target import (MapSpec, Section, TargetExecutor, TargetFuture,
                      _alias_map, _flatten_map_value)
 from .transport import HostFunnelTransport
@@ -193,6 +195,19 @@ class PlacementContext:
     # must price repeat edges at zero or it will overestimate spreading.
     replicas: Dict[str, set] = field(default_factory=dict)
     wave: int = 0
+    # device indices the pool's HealthRegistry considers placeable this wave
+    # (None = no health information: every device is a candidate).  Policies
+    # must place only onto these; the runner refreshes the list per wave and
+    # after every recovered failure.
+    healthy: Optional[List[int]] = None
+
+    def candidates(self) -> List[int]:
+        """The devices a policy may place onto, always non-empty."""
+        if self.healthy:
+            cands = [d for d in self.healthy if d < self.D]
+            if cands:
+                return cands
+        return list(range(self.D))
 
 
 class PlacementPolicy:
@@ -220,7 +235,13 @@ class RoundRobin(PlacementPolicy):
 
     def place(self, ctx: PlacementContext, node: TaskNode,
               ready_index: int, region_tag: str) -> int:
-        return node.device if node.device is not None else ready_index % ctx.D
+        cands = ctx.candidates()
+        if node.device is not None:
+            # a forced device is honored while healthy; a blacklisted one
+            # falls back to policy placement among the survivors
+            if ctx.healthy is None or node.device in cands:
+                return node.device
+        return cands[ready_index % len(cands)]
 
 
 class LocalityAffinity(PlacementPolicy):
@@ -237,27 +258,31 @@ class LocalityAffinity(PlacementPolicy):
 
     def place(self, ctx: PlacementContext, node: TaskNode,
               ready_index: int, region_tag: str) -> int:
-        if node.device is not None:
+        cands = ctx.candidates()
+        if node.device is not None and (ctx.healthy is None
+                                        or node.device in cands):
             return node.device
-        score = [0] * ctx.D
+        score = {d: 0 for d in cands}
         for dep in node.reads:
             if dep in ctx.replicas:
                 nb = ctx.out_bytes.get(dep, 0) or 1
                 for d in ctx.replicas[dep]:   # home + propagated copies
-                    score[d] += nb
+                    if d in score:            # elastic shrink may strand a
+                        score[d] += nb        # replica on a removed index
                 continue
             src = ctx.home.get(dep)
             if src is not None:
-                score[src] += ctx.out_bytes.get(dep, 0) or 1
+                if src in score:
+                    score[src] += ctx.out_bytes.get(dep, 0) or 1
                 continue
-            for d in range(ctx.D):
+            for d in cands:
                 e = ctx.pool.present[d].get(dep)
                 if e is not None and not e.spilled:
                     score[d] += e.nbytes()
-        best = max(score)
+        best = max(score.values())
         if best == 0:
-            return ready_index % ctx.D
-        tied = [d for d in range(ctx.D) if score[d] == best]
+            return cands[ready_index % len(cands)]
+        tied = [d for d in cands if score[d] == best]
         return min(tied, key=lambda d: (ctx.load.get(d, 0), d))
 
 
@@ -314,10 +339,12 @@ class HeftPlacement(PlacementPolicy):
         est = ctx.cost.kernel_time(node.kernel) if self.use_observed else None
         if est is None:
             est = self.default_task_s
-        candidates = ((node.device,) if node.device is not None
-                      else range(ctx.D))
+        cands = ctx.candidates()
+        if node.device is not None and (ctx.healthy is None
+                                        or node.device in cands):
+            cands = [node.device]
         best, best_t = None, None
-        for d in candidates:
+        for d in cands:
             arrive = 0.0
             for dep in node.deps:
                 src = ctx.home.get(dep)
@@ -373,7 +400,7 @@ def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
               policy: Any = None, out_name: str = "out",
               nowait: bool = True, resident: bool = False,
               peer: bool = False, transport: Optional[Any] = None,
-              tag: str = "graph") -> Dict[str, Any]:
+              tag: str = "graph", max_retries: int = 8) -> Dict[str, Any]:
     """Run a :class:`TaskGraph`: waves of ready nodes, policy-placed.
 
     The semantics previously private to ``wavefront_offload`` — and now
@@ -392,6 +419,35 @@ def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
       region, so a discarded region's peer records are struck with it), or
       through the host funnel when the policy prices that cheaper.
 
+    **Failure awareness** (beyond-paper): a region that fails with
+    :class:`DeviceFailure` is recovered, up to ``max_retries`` attempts per
+    node, instead of aborting the graph:
+
+    * a failed **EXEC** marks its device in the pool's
+      :class:`~repro.core.device.HealthRegistry` and the node is re-placed
+      by the *active policy* over the surviving candidates (a blacklisted
+      device leaves the candidate set); in peer mode its resident output
+      entry moves with it and the live producer map is updated, so later
+      :class:`PeerRef` consumers re-resolve transparently;
+    * a failed **SEND/RECV** (peer-fabric fault) reroutes the node's
+      incoming edges through the host funnel — the same
+      ``route_edge``-priced wire the policy could have chosen — and
+      re-dispatches on the same device;
+    * a failed **XFER** retries in place: resident inputs self-heal from
+      their host views (:meth:`TargetExecutor._heal_locked`);
+    * lost resident state is rebuilt from present-table *lineage*: when a
+      producer's device-ahead entry is gone (evicted device, elastic
+      shrink), its :class:`TaskNode` is **replayed** from its recorded
+      dependencies and the producer map re-pointed at the new copy.
+
+    Recovery never changes values — a recovered run is bit-identical to the
+    fault-free run (chaos-tested) because every retry re-runs the same
+    kernel on the same declared operands.
+
+    The pool's membership is re-read at every wave boundary, so devices
+    added by ``rescale_pool`` mid-graph become placeable on the next wave
+    and removed devices leave the candidate set.
+
     ``policy`` (default :class:`RoundRobin`) decides device placement per
     ready node; placement affects traffic, never values.  Returns
     ``{task: host value}`` for every node.
@@ -403,16 +459,87 @@ def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
     pool = ex.pool
     D = len(pool)
     ctx = PlacementContext(pool=pool, cost=pool.cost, D=D, peer=peer,
-                           transport=transport)
+                           transport=transport,
+                           healthy=pool.health.healthy(D))
     policy.begin(ctx)
 
     # peer mode: every (device, entry-name) this run pinned — producer
     # outputs and their propagated peer copies — released in the final
     # teardown; ``producer`` maps a task to its output's CURRENT home
-    # device/entry (the live map PeerRef resolution consults)
+    # device/entry (the live map PeerRef resolution consults);
+    # ``entry_owner`` is its inverse (entry name -> producing task), the
+    # lineage index recovery replays from
     peer_entries: Dict[Tuple[int, str], bool] = {}
     producer: Dict[str, Tuple[int, str]] = {}
+    entry_owner: Dict[str, str] = {}
     funnel_cache: Dict[str, Any] = {}   # producer task -> fetched host value
+    results: Dict[str, Any] = {}
+
+    def _refresh_membership() -> None:
+        ctx.D = len(pool)
+        ctx.healthy = pool.health.healthy(ctx.D)
+
+    def _absorb() -> None:
+        pool.absorb_failures()
+
+    def _entry_live(dev: int, entry: str) -> bool:
+        return (0 <= dev < len(pool)
+                and pool.present[dev].get(entry) is not None)
+
+    def _replay_producer(name: str) -> None:
+        """Lineage replay: re-derive a lost resident output by re-running
+        its producer node synchronously.
+
+        The present-table entry for ``name``'s output is gone (shrunk
+        device, dropped relocation) or permanently unreadable; its
+        *lineage* — the producer :class:`TaskNode` and its already-settled
+        dependency values in ``results`` — is not.  Replaying re-places the
+        node on a healthy device, re-allocates the entry there, and
+        re-points the live producer map; recursion through ``_peer_rewrite``
+        covers multi-level loss, bounded by DAG depth.
+        """
+        t = graph.node(name)
+        old = producer.get(name)
+        if old is not None and old in peer_entries and _entry_live(*old):
+            ex.exit_data(old[0], old[1])   # drop the dead copy's pin
+        if old is not None:
+            peer_entries.pop(old, None)
+        ctx.replicas.pop(name, None)
+        _refresh_membership()
+        rtag = t.tag or f"{tag}:replay:{name}"
+        dev = policy.place(ctx, t, 0, rtag)
+        ctx.home[name] = dev
+        ctx.replicas.setdefault(name, set()).add(dev)
+        maps = t.make_maps({d: results[d] for d in t.deps})
+        maps = _peer_rewrite(t, dev, maps, rtag)
+        attempts = 0
+        while True:
+            try:
+                ex.target(t.kernel, dev, maps, nowait=False, tag=rtag)
+                return
+            except (DeviceFailure, KeyError):
+                _absorb()
+                attempts += 1
+                if attempts > max_retries:
+                    raise
+
+    def _fetch_task(name: str) -> Any:
+        """fetch_resident with bounded fault retry + lineage-replay rescue."""
+        attempts = 0
+        while True:
+            dev, entry = producer[name]
+            try:
+                if not _entry_live(dev, entry):
+                    raise KeyError(entry)
+                return ex.fetch_resident(dev, entry)
+            except (DeviceFailure, KeyError):
+                _absorb()
+                attempts += 1
+                if attempts > max_retries:
+                    raise
+                # a fetch that keeps failing (or a vanished entry) means the
+                # device copy is unrecoverable: rebuild it from lineage
+                _replay_producer(name)
 
     def _peer_rewrite(t: TaskNode, dev: int, maps: MapSpec,
                       region_tag: str) -> MapSpec:
@@ -423,7 +550,16 @@ def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
                 # placement-independent resolution: the live producer map,
                 # not the device the ref was minted with
                 src_dev, entry = producer[v.task]
-                if src_dev == dev or (dev, entry) in peer_entries:
+                if not _entry_live(src_dev, entry):
+                    # producer copy lost (elastic shrink, dropped
+                    # relocation): rebuild it from lineage, then re-resolve
+                    if v.task in funnel_cache:
+                        new_to[k] = funnel_cache[v.task]
+                        continue
+                    _replay_producer(v.task)
+                    src_dev, entry = producer[v.task]
+                if src_dev == dev or ((dev, entry) in peer_entries
+                                      and _entry_live(dev, entry)):
                     pres[k] = entry
                 else:
                     nb = ctx.out_bytes.get(v.task, 0)
@@ -433,8 +569,7 @@ def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
                         # fetch per producer (outputs are write-once here),
                         # re-sent per consumer, like the faithful pattern
                         if v.task not in funnel_cache:
-                            funnel_cache[v.task] = ex.fetch_resident(src_dev,
-                                                                     entry)
+                            funnel_cache[v.task] = _fetch_task(v.task)
                         new_to[k] = funnel_cache[v.task]
                     else:
                         # per-region edge tag: a later discard_tag of this
@@ -459,9 +594,14 @@ def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
                 f"peer graph requires task {t.name!r} to declare "
                 f"from_[{out_name!r}] (its resident output shape)")
         entry = f"{tag}:{t.name}"
-        ex.alloc_resident(dev, entry, maps.from_[out_name], tag=f"{tag}:out")
+        # re-entrant on retry: a recovered node re-placed on the SAME device
+        # (or onto a device already holding a replica) reuses the live entry
+        # as its output buffer instead of re-allocating
+        if not _entry_live(dev, entry):
+            ex.alloc_resident(dev, entry, maps.from_[out_name], tag=f"{tag}:out")
         peer_entries[(dev, entry)] = True
         producer[t.name] = (dev, entry)
+        entry_owner[entry] = t.name
         ctx.out_bytes[t.name] = _value_nbytes(maps.from_[out_name])
         return MapSpec(to=new_to,
                        from_={n: s for n, s in maps.from_.items()
@@ -473,19 +613,151 @@ def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
                        device_out={**_alias_map(maps.device_out),
                                    out_name: entry})
 
-    results: Dict[str, Any] = {}
+    def _recover(rec: Dict[str, Any], err: DeviceFailure) -> None:
+        """Mutate a failed node record so it can be re-dispatched.
+
+        EXEC faults re-place via the active policy (the failed device is
+        marked in the health registry); SEND/RECV faults reroute the node's
+        peer edges through the host funnel on the same device; XFER faults
+        retry in place (resident inputs self-heal at the next binding).
+        """
+        t = rec["t"]
+        # a KeyError means the region bound a replica another region's heal
+        # had just dropped — recover it like an XFER fault (rebuild edges)
+        op = getattr(err, "op", "XFER_TO")
+        if op == "EXEC":
+            fdev = err.device if err.device is not None else rec["dev"]
+            pool.health.mark_failed(fdev)
+            _refresh_membership()
+            new_dev = policy.place(ctx, t, rec["index"], rec["tag"])
+            if not (0 <= new_dev < ctx.D):
+                raise ValueError(
+                    f"policy {policy.name!r} re-placed {t.name!r} on "
+                    f"device {new_dev} of {ctx.D}")
+            ctx.load[new_dev] = ctx.load.get(new_dev, 0) + 1
+            ctx.home[t.name] = new_dev
+            if peer:
+                entry = f"{tag}:{t.name}"
+                if new_dev != rec["dev"]:
+                    # abandon the unwritten output entry on the failed device
+                    if (rec["dev"], entry) in peer_entries:
+                        ex.exit_data(rec["dev"], entry)
+                        peer_entries.pop((rec["dev"], entry), None)
+                    ctx.replicas.setdefault(t.name, set()).discard(rec["dev"])
+                ctx.replicas.setdefault(t.name, set()).add(new_dev)
+                rec["maps"] = _peer_rewrite(t, new_dev, rec["orig_maps"],
+                                            rec["tag"])
+            rec["dev"] = new_dev
+        elif op in ("SEND", "RECV") and peer:
+            # peer fabric fault: force this node's incoming edges through
+            # the host funnel (route_edge's other wire), same device
+            funnel = HostFunnelTransport()
+            for entry in _alias_map(rec["maps"].present).values():
+                src_task = entry_owner.get(entry)
+                if src_task is None:
+                    continue               # user-supplied present binding
+                src_dev, src_entry = producer[src_task]
+                if not _entry_live(src_dev, src_entry):
+                    _replay_producer(src_task)
+                    src_dev, src_entry = producer[src_task]
+                if src_dev != rec["dev"]:
+                    ex.propagate_resident(src_dev, rec["dev"], src_entry,
+                                          transport=funnel,
+                                          tag=f"{rec['tag']}:edge")
+                    peer_entries[(rec["dev"], src_entry)] = True
+        elif peer:
+            # XFER fault (or a corpse replica dropped by _heal_locked):
+            # healable resident inputs re-send from their host views at the
+            # next binding; an edge whose replica was dropped must be
+            # re-propagated, so rebuild the node's maps before re-dispatch
+            rec["maps"] = _peer_rewrite(t, rec["dev"], rec["orig_maps"],
+                                        rec["tag"])
+        # XFER_TO/XFER_FROM outside peer mode: plain retry — _heal_locked
+        # re-sends damaged resident inputs at the next binding
+
+    def _run_recovering(rec: Dict[str, Any]) -> Dict[str, Any]:
+        """Synchronous dispatch with the same recovery loop (nowait=False)."""
+        while True:
+            try:
+                return ex.target(rec["t"].kernel, rec["dev"], rec["maps"],
+                                 nowait=False, tag=rec["tag"])
+            except (DeviceFailure, KeyError) as err:
+                _absorb()
+                while True:
+                    rec["attempts"] += 1
+                    if rec["attempts"] > max_retries:
+                        raise err
+                    try:
+                        _recover(rec, err)
+                        break
+                    except (DeviceFailure, KeyError) as err2:
+                        _absorb()
+                        err = err2
+
+    def _join_recovering(records: List[Dict[str, Any]]) -> None:
+        """Join a wave's ``nowait`` regions, recovering failed ones.
+
+        Like :meth:`TargetExecutor.drain` this returns only once EVERY
+        region (including re-dispatched ones) has settled, so pin releases
+        after it can never pull a buffer from under a running region.
+        Outcomes land in each record's ``out``.
+        """
+        all_futs: List[TargetFuture] = [r["fut"] for r in records]
+        pending = list(records)
+        try:
+            while pending:
+                _cf.wait([r["fut"]._fut for r in pending])
+                nxt: List[Dict[str, Any]] = []
+                for rec in pending:
+                    err = rec["fut"]._fut.exception()
+                    if err is None:
+                        rec["out"] = rec["fut"]._fut.result()
+                        continue
+                    if not isinstance(err, (DeviceFailure, KeyError)):
+                        raise err
+                    _absorb()
+                    while True:
+                        rec["attempts"] += 1
+                        if rec["attempts"] > max_retries:
+                            raise err
+                        try:
+                            _recover(rec, err)
+                            break
+                        except (DeviceFailure, KeyError) as err2:
+                            _absorb()
+                            err = err2
+                    rec["fut"] = ex.target(rec["t"].kernel, rec["dev"],
+                                           rec["maps"], nowait=True,
+                                           tag=rec["tag"])
+                    all_futs.append(rec["fut"])
+                    nxt.append(rec)
+                pending = nxt
+        finally:
+            # error path: settle everything still in flight before the
+            # caller's teardown releases pins
+            live = [f._fut for f in all_futs if not f._fut.done()]
+            if live:
+                _cf.wait(live)
+            ex.retire(all_futs)
+
     # the topological decomposition is the graph's own (one wave drains
     # fully before the next is planned, so ready == waves()); cycles and
     # missing deps surface here, before anything is dispatched
     for wave_idx, wave in enumerate(graph.waves()):
         ready = [graph.node(n) for n in wave]
         ctx.wave = wave_idx
+        # wave boundary: re-read pool membership and device health, so a
+        # device joined mid-graph is placeable from the next wave on and a
+        # removed/blacklisted one leaves the candidate set
+        _refresh_membership()
+        D = ctx.D
         ctx.load = {d: 0 for d in range(D)}
         entered: List[Tuple[int, str]] = []
-        futs: List[Tuple[TaskNode, str, TargetFuture]] = []
+        futs: List[TargetFuture] = []
+        records: List[Dict[str, Any]] = []
         joined = False
         try:
-            plans: List[Tuple[TaskNode, int, str, MapSpec]] = []
+            plans: List[Dict[str, Any]] = []
             for j, t in enumerate(ready):
                 region_tag = t.tag or f"{tag}:w{wave_idx}:{t.name}"
                 dev = policy.place(ctx, t, j, region_tag)
@@ -496,10 +768,12 @@ def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
                 ctx.load[dev] = ctx.load.get(dev, 0) + 1
                 ctx.home[t.name] = dev
                 ctx.replicas.setdefault(t.name, set()).add(dev)
-                maps = t.make_maps({d: results[d] for d in t.deps})
-                if peer:
-                    maps = _peer_rewrite(t, dev, maps, region_tag)
-                plans.append((t, dev, region_tag, maps))
+                orig_maps = t.make_maps({d: results[d] for d in t.deps})
+                maps = (_peer_rewrite(t, dev, orig_maps, region_tag)
+                        if peer else orig_maps)
+                plans.append({"t": t, "dev": dev, "tag": region_tag,
+                              "maps": maps, "orig_maps": orig_maps,
+                              "index": j, "attempts": 0, "out": None})
             if resident:
                 # pin only values genuinely shared: a (device, name) whose
                 # plain to/tofrom value is identical across >=2 of the wave's
@@ -508,7 +782,8 @@ def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
                 # of its elision (value-correct either way, but the byte
                 # savings would depend on thread scheduling).
                 usage: Dict[Tuple[int, str], List[Tuple[Tuple[int, ...], Any]]] = {}
-                for _, dev, _, maps in plans:
+                for p in plans:
+                    dev, maps = p["dev"], p["maps"]
                     # to-maps only: tofrom buffers are written back per task,
                     # and two regions sharing one pinned output handle would
                     # fetch each other's results
@@ -526,29 +801,32 @@ def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
                         entered.append((dev, n))
                     except ValueError:
                         pass           # shape changed under this name: skip pin
-            for t, dev, region_tag, maps in plans:
+            for p in plans:
+                t = p["t"]
                 if nowait:
-                    futs.append((t, region_tag,
-                                 ex.target(t.kernel, dev, maps, nowait=True,
-                                           tag=region_tag)))
+                    p["fut"] = ex.target(t.kernel, p["dev"], p["maps"],
+                                         nowait=True, tag=p["tag"])
+                    futs.append(p["fut"])
+                    records.append(p)
                 else:
-                    out = ex.target(t.kernel, dev, maps, nowait=False,
-                                    tag=region_tag)
+                    out = _run_recovering(p)
                     results[t.name] = (PeerRef(t.name, producer[t.name][1],
                                                producer[t.name][0])
                                        if peer else out[out_name])
                     if not peer:
                         ctx.out_bytes[t.name] = _value_nbytes(results[t.name])
-            if futs:
-                # drain waits for EVERY region to settle (even past a
-                # failure), so the pin release below can never pull a
-                # buffer out from under a still-running region
+            if records:
+                # the join waits for EVERY region to settle (even past a
+                # failure, even across re-dispatches), so the pin release
+                # below can never pull a buffer out from under a
+                # still-running region
                 joined = True
-                outs = ex.drain([f for _, _, f in futs])
-                for (t, _, _), out in zip(futs, outs):
+                _join_recovering(records)
+                for p in records:
+                    t = p["t"]
                     results[t.name] = (PeerRef(t.name, producer[t.name][1],
                                                producer[t.name][0])
-                                       if peer else out[out_name])
+                                       if peer else p["out"][out_name])
                     if not peer:
                         ctx.out_bytes[t.name] = _value_nbytes(results[t.name])
         except BaseException:
@@ -559,7 +837,8 @@ def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
                 # their own present-table references, so an entry is only
                 # freed once its last region has released it.
                 for dev, n in peer_entries:
-                    ex.exit_data(dev, n)
+                    if dev < len(pool):    # elastic shrink may have removed it
+                        ex.exit_data(dev, n)
             raise
         finally:
             if futs and not joined:
@@ -567,19 +846,21 @@ def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
                 # raised): the already-launched regions must still be joined
                 # and retired before their pins are released
                 try:
-                    ex.drain([f for _, _, f in futs])
+                    ex.drain(futs)
                 except BaseException:
                     pass               # the dispatch error propagates
             for dev, n in entered:      # wave boundary: release pins
-                ex.exit_data(dev, n)
+                if dev < len(pool):
+                    ex.exit_data(dev, n)
     if peer:
         # materialize the host view — one fetch per task output, exactly
         # what the host-mediated run's from_ maps moved — then release
         # every entry this run pinned (outputs and propagated peer copies)
         try:
-            for name, (dev, entry) in producer.items():
-                results[name] = ex.fetch_resident(dev, entry)
+            for name in list(producer):
+                results[name] = _fetch_task(name)
         finally:
             for dev, n in peer_entries:
-                ex.exit_data(dev, n)
+                if dev < len(pool):
+                    ex.exit_data(dev, n)
     return results

@@ -290,18 +290,52 @@ class PeerTransport(Transport):
     it yourself on a bare pool) — a transfer never re-times a shared cost
     model as a side effect.  ``link`` documents the fabric this transport
     was built for; owners install it explicitly.
+
+    ``retries > 0`` makes the fabric *fault tolerant*: each ``sendrecv``
+    waits for its RECV, and an injected :class:`~repro.core.device.
+    DeviceFailure` re-sends the message, falling back to the host funnel
+    (fetch + re-send — always available) once the peer wire has failed
+    ``retries`` times.  The delivered value is identical regardless of the
+    wire, so collectives stay bit-identical under injection.  The default
+    (``retries=0``) keeps the zero-overhead fire-and-forget behavior.
     """
 
     kind = "peer"
 
-    def __init__(self, link: Optional[LinkModel] = None) -> None:
+    def __init__(self, link: Optional[LinkModel] = None,
+                 retries: int = 0) -> None:
         self.link = link
+        self.retries = retries
+        self.fallbacks = 0      # observability: edges rerouted to the funnel
 
     def sendrecv(self, pool, src: int, src_handle: int,
                  dst: int, dst_handle: int, *,
                  nbytes: Optional[int] = None, tag: str = ""):
-        return pool.peer_copy(src, src_handle, dst, dst_handle,
-                              nbytes=nbytes, tag=tag)
+        if self.retries <= 0:
+            return pool.peer_copy(src, src_handle, dst, dst_handle,
+                                  nbytes=nbytes, tag=tag)
+        from .device import DeviceFailure
+        attempt = 0
+        while True:
+            fut = pool.peer_copy(src, src_handle, dst, dst_handle,
+                                 nbytes=nbytes, tag=tag)
+            err = fut.exception()          # blocks until the RECV settles
+            if err is None:
+                return fut
+            if not isinstance(err, DeviceFailure):
+                raise err
+            # the SEND/RECV stashed async errors on both endpoints; this
+            # failure is being handled here, so absorb them
+            pool.absorb_failures()
+            attempt += 1
+            if attempt > self.retries:
+                # peer wire is persistently down for this edge: reroute
+                # through the host funnel (fetch + re-send), which delivers
+                # the same bytes over the paper-faithful wire
+                self.fallbacks += 1
+                value = pool.transfer_from(src, src_handle, tag=f"{tag}:fallback")
+                return pool.transfer_to(dst, dst_handle, value,
+                                        tag=f"{tag}:fallback")
 
     def edge_time(self, cost, src: int, dst: int, nbytes: int) -> float:
         """One message on the directed (src, dst) peer link — no funnel hop."""

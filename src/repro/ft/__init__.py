@@ -1,5 +1,7 @@
-from .failures import FlakyDevice, inject_flaky, DeviceFailure
+from ..core.device import DeviceFailure, HealthRegistry
+from .failures import FAULT_OPS, FlakyDevice, inject_flaky, with_retry
 from .elastic import elastic_shardings, rescale_pool
 
-__all__ = ["FlakyDevice", "inject_flaky", "DeviceFailure",
+__all__ = ["FlakyDevice", "inject_flaky", "with_retry", "FAULT_OPS",
+           "DeviceFailure", "HealthRegistry",
            "elastic_shardings", "rescale_pool"]

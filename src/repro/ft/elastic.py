@@ -7,13 +7,34 @@ Two layers, matching the two runtimes:
   checkpoint manager's ``restore(..., shardings=...)`` then places the saved
   global arrays onto the new mesh.  Losing a pod means restoring yesterday's
   16×16×2 checkpoint onto 16×16 — no format change, no re-partition tool.
-* **pool path** — :func:`rescale_pool` re-derives the strip partition for a
-  grown/shrunk DevicePool; offload patterns in ``core.scheduler`` take the
-  pool size per call, so elasticity is a restart-free re-dispatch.
+* **pool path** — :func:`rescale_pool` resizes the runtime's
+  :class:`~repro.core.device.DevicePool` **in place**.  The pool and
+  executor objects keep their identity (present tables, cost accounting,
+  health registry, in-flight machinery all survive), so a graph already
+  running against ``runtime.ex`` sees the new membership at its next wave
+  boundary — a joined device becomes placeable mid-graph, and a departing
+  device's resident state is *drained*, never dropped:
+
+  1. the departing device's stream is synced;
+  2. every present entry is pushed through the LRU **spill** path
+     (:meth:`TargetExecutor._spill_locked`), which reconciles device-ahead
+     content to the host before freeing the device buffers — no update can
+     be lost;
+  3. the now host-authoritative logical entry is **relocated** to the
+     survivor currently holding the fewest resident bytes (deterministic
+     ties to the lowest index — the :class:`~repro.core.taskgraph.
+     LocalityAffinity` balance criterion), where the next binding refetches
+     it transparently with zero eager traffic;
+  4. only then is the device's worker stopped and its slot truncated.
+
+  A name already resident on the chosen survivor keeps the survivor's copy
+  (it was reachable all along); the migrant is reported as dropped and, on
+  the TaskGraph path, is rebuilt from lineage by replaying its producer
+  node if ever needed again.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, Dict, Optional
 
 import jax
 
@@ -32,14 +53,69 @@ def elastic_shardings(abstract_params: Any, rules: AxisRules, mesh,
     return p_sh, opt_state_shardings(p_sh, mesh)
 
 
-def rescale_pool(runtime, n_virtual: int):
-    """Replace the runtime's pool with a resized one (virtual devices)."""
-    from ..core.device import DevicePool
-    from ..core.target import TargetExecutor
-    old_cost = runtime.pool.cost
-    runtime.pool = DevicePool.virtual(n_virtual, table=runtime.pool.table,
-                                      link=runtime.pool.cost.link)
-    runtime.pool.cost = old_cost            # keep cumulative accounting
-    runtime.ex = TargetExecutor(runtime.pool,
-                                max_host_threads=runtime.cfg.max_host_threads)
-    return runtime
+def rescale_pool(runtime, n_virtual: int) -> Dict[str, Any]:
+    """Elastically resize ``runtime.pool`` to ``n_virtual`` devices in place.
+
+    Grow: appends fresh devices (worker thread, mirror, present table,
+    stream state) and replays declare-target globals onto them; they are
+    placeable immediately — a running ``run_graph`` picks them up at its
+    next wave.  Shrink: drains each departing device's present table
+    through the spill path (reconciling device-ahead content to the host)
+    and relocates the logical entries to the least-loaded survivors before
+    stopping the device — resident state survives the rescale.
+
+    Safe mid-job: a shrink first joins every in-flight ``nowait`` region
+    (``ex.taskwait()``) so a departing device's stream holds no half-issued
+    work when its residency is drained.  Returns a report::
+
+        {"from": int, "to": int,
+         "moved":   [(name, from_dev, to_dev), ...],
+         "dropped": [(name, from_dev, to_dev), ...],   # survivor kept its own
+         "reconciled_bytes": int}                      # device-ahead drained
+    """
+    pool = runtime.pool
+    ex = runtime.ex
+    n_old = len(pool)
+    if n_virtual < 1:
+        raise ValueError(f"cannot rescale to {n_virtual} devices")
+    report: Dict[str, Any] = {"from": n_old, "to": n_virtual,
+                              "moved": [], "dropped": [],
+                              "reconciled_bytes": 0}
+    if n_virtual > n_old:
+        for _ in range(n_virtual - n_old):
+            pool.add_device()
+        return report
+    if n_virtual == n_old:
+        return report
+
+    # join in-flight nowait regions: a region mid-dispatch on a departing
+    # device would race the drain (its writeback frees/installs handles the
+    # spill is about to free)
+    ex.taskwait()
+    for d in range(n_virtual, n_old):
+        pool.sync(d)                       # settle the stream before draining
+        migrants = []
+        with pool.env_locks[d]:
+            table = pool.present[d]
+            for name in table.names():
+                ent = table.get(name)
+                if not ent.spilled:
+                    before = table.bytes_reconciled
+                    ex._spill_locked(d, ent, tag="rescale")
+                    report["reconciled_bytes"] += table.bytes_reconciled - before
+                table.pop_entry(name)
+                migrants.append(ent)
+        # relocation happens outside the departing device's lock (never two
+        # env locks held at once); entries are spilled = host-authoritative,
+        # so adoption is pure metadata — zero eager traffic, the survivor's
+        # next binding refetches transparently
+        for ent in migrants:
+            target = min(range(n_virtual),
+                         key=lambda s: (pool.present[s].used_bytes(), s))
+            with pool.env_locks[target]:
+                adopted = pool.present[target].adopt(ent)
+            report["moved" if adopted else "dropped"].append(
+                (ent.name, d, target))
+        pool.sync(d)                       # the spill frees are in flight
+    pool.remove_tail(n_old - n_virtual)
+    return report

@@ -1,46 +1,82 @@
 """Failure injection + retry/blacklist policy for the offload runtime.
 
-At 1000-node scale, EXEC commands fail (preempted node, flaky NIC, ECC
-error).  The paper's runtime has no story for this; ours does:
+At 1000-node scale, commands fail (preempted node, flaky NIC, ECC error).
+The paper's runtime has no story for this; ours does:
 
 * :class:`FlakyDevice` wraps a :class:`NodeDevice` and fails a configurable
-  fraction of EXEC commands (deterministic, seeded) — the chaos-monkey used
-  by the fault-tolerance tests.
+  fraction of device commands (deterministic, seeded) — the chaos-monkey
+  used by the fault-tolerance suite.  Beyond EXEC it can fault the
+  transport ops (``SEND``/``RECV``) and the host wire (``XFER_TO``/
+  ``XFER_FROM``), so every recovery path in the runtime is testable.
+* :class:`DeviceFailure` now lives in :mod:`repro.core.device` (the runtime
+  catches it without importing ``ft``); re-exported here for compatibility.
 * :func:`with_retry` re-issues a failed target region on the next healthy
-  device (round-robin), blacklisting devices that exceed ``max_failures``.
-  Because every region's data movement is declared in its MapSpec, a retry
-  is a pure re-execution — no partial state can leak (the mediary handles of
-  the failed attempt are freed by the region teardown).
+  device, feeding both the caller's ``blacklist`` set and the pool's shared
+  :class:`~repro.core.device.HealthRegistry`.  Dispatch rides the normal
+  ``nowait`` path — the region's commands flow through the dependency-aware
+  device streams exactly like any other region, so retry composes with
+  resident buffers and concurrent regions.  Because every region's data
+  movement is declared in its MapSpec, a retry is a pure re-execution — no
+  partial state can leak (the mediary handles of the failed attempt are
+  freed by the region teardown, and damaged resident entries self-heal from
+  their host views at the next binding).
+
+Graph-level recovery (failed nodes re-placed by the active policy, peer
+edges rerouted through the funnel, lost entries replayed from lineage)
+lives in :func:`repro.core.taskgraph.run_graph`; this module is the
+injection side plus the single-region retry primitive.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Dict, Optional, Sequence
 
 import numpy as np
 
-from ..core.device import Command, NodeDevice
+from ..core.device import Command, DeviceFailure, NodeDevice
 from ..core.target import MapSpec, TargetExecutor
 
+__all__ = ["DeviceFailure", "FlakyDevice", "inject_flaky", "with_retry",
+           "FAULT_OPS"]
 
-class DeviceFailure(RuntimeError):
-    pass
+#: Ops eligible for injection.  STOP/ALLOC/FREE are deliberately excluded:
+#: faulting them would desynchronize the host mirror's first-fit prediction
+#: from the device store — a *runtime bug* simulation, not a *fault*
+#: simulation (a real lost ALLOC aborts the job in the paper's model too).
+FAULT_OPS = ("EXEC", "SEND", "RECV", "XFER_TO", "XFER_FROM")
 
 
 class FlakyDevice:
-    """Proxy over NodeDevice failing EXECs with probability ``p`` (seeded)."""
+    """Proxy over NodeDevice failing selected ops with probability ``p``.
 
-    def __init__(self, inner: NodeDevice, p: float, seed: int = 0) -> None:
+    Deterministic and seeded: the RNG is keyed on ``(seed, device index)``,
+    so a given (seed, p, ops) chaos schedule replays exactly for a fixed
+    per-device command sequence.  ``failures`` counts every injected fault;
+    ``failures_by_op`` breaks them down per command type.
+    """
+
+    def __init__(self, inner: NodeDevice, p: float, seed: int = 0,
+                 ops: Sequence[str] = ("EXEC",)) -> None:
+        bad = set(ops) - set(FAULT_OPS)
+        if bad:
+            raise ValueError(f"cannot inject faults on ops {sorted(bad)}; "
+                             f"eligible: {FAULT_OPS}")
         self._inner = inner
         self._p = p
+        self._ops = frozenset(ops)
         self._rng = np.random.default_rng((seed, inner.index))
         self.failures = 0
+        self.failures_by_op: Dict[str, int] = {}
 
     def execute(self, cmd: Command, table, payload=None):
-        if cmd.op == "EXEC" and self._rng.random() < self._p:
+        if cmd.op in self._ops and self._rng.random() < self._p:
             self.failures += 1
+            self.failures_by_op[cmd.op] = self.failures_by_op.get(cmd.op, 0) + 1
             raise DeviceFailure(
-                f"injected failure on device {self._inner.index} "
-                f"(kernel index {cmd.kernel_index})")
+                f"injected {cmd.op} failure on device {self._inner.index}"
+                + (f" (kernel index {cmd.kernel_index})"
+                   if cmd.op == "EXEC" else ""),
+                op=cmd.op, device=self._inner.index,
+                kernel_index=cmd.kernel_index)
         return self._inner.execute(cmd, table, payload)
 
     def __getattr__(self, name):
@@ -48,11 +84,12 @@ class FlakyDevice:
 
 
 def inject_flaky(pool, p: float, seed: int = 0,
-                 devices: Optional[Sequence[int]] = None) -> None:
+                 devices: Optional[Sequence[int]] = None,
+                 ops: Sequence[str] = ("EXEC",)) -> None:
     """Wrap (some of) a pool's devices with failure injection, in place."""
     for i, d in enumerate(pool.devices):
         if devices is None or i in devices:
-            pool.devices[i] = FlakyDevice(d, p, seed)
+            pool.devices[i] = FlakyDevice(d, p, seed, ops=ops)
 
 
 def with_retry(ex: TargetExecutor, kernel: str, device: int, maps: MapSpec, *,
@@ -62,21 +99,39 @@ def with_retry(ex: TargetExecutor, kernel: str, device: int, maps: MapSpec, *,
 
     Returns the region outputs; raises the last error if every candidate
     device fails.  ``blacklist`` (shared across calls) accumulates devices
-    that failed, implementing a simple health registry.
+    that failed; the pool's :class:`~repro.core.device.HealthRegistry` is
+    fed in parallel, so graph-level placement learns from region-level
+    failures too.
+
+    The region is dispatched ``nowait`` and joined immediately: its
+    commands flow through the dependency-aware device streams (not the
+    legacy synchronous bypass), so retry now composes with resident
+    buffers, open stream tickets, and concurrent ``nowait`` regions.  After
+    a failed attempt the pool's stashed injected errors are absorbed —
+    recovery handles them here; they must not resurface at an innocent
+    region's next sync point.
     """
     blacklist = blacklist if blacklist is not None else set()
-    n = len(ex.pool)
+    pool = ex.pool
+    n = len(pool)
     last: Optional[BaseException] = None
     candidates = [device] + [d for d in range(n) if d != device]
     tried = 0
     for d in candidates:
-        if d in blacklist or tried > max_retries:
+        if d in blacklist or not pool.health.is_healthy(d) or tried > max_retries:
             continue
         tried += 1
         try:
-            return ex.target(kernel, d, maps, nowait=False, tag=tag or kernel)
+            fut = ex.target(kernel, d, maps, nowait=True, tag=tag or kernel)
+            out = ex.drain([fut])[0]
+            return out
         except DeviceFailure as e:
             last = e
             blacklist.add(d)
+            fdev = getattr(e, "device", None)
+            pool.health.mark_failed(d if fdev is None else fdev)
+            pool.absorb_failures()
             continue
-    raise last if last is not None else RuntimeError("no healthy devices")
+    if last is not None:
+        raise last
+    raise RuntimeError("no healthy devices")
