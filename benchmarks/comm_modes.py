@@ -64,9 +64,18 @@ from repro.core import (ClusterRuntime, DagTask, KernelTable, MapSpec,
 from repro.core.costmodel import PAPER_ETHERNET
 from repro.optim import AdamW, AdamWConfig
 
-#: --inject-p/--inject-seed state; _runtime() applies it to every pool.
-_INJECT = {"p": 0.0, "seed": 0}
+#: chaos flag state; _runtime() applies it to every pool.
+#: p — SEND/RECV crash-fault probability; hang_p — SEND/RECV gray-failure
+#: (hang) probability; slow_ms — EXEC stall injected at _SLOW_P probability.
+_INJECT = {"p": 0.0, "seed": 0, "hang_p": 0.0, "slow_ms": 0.0}
+_SLOW_P = 0.3
 _CHAOS_RUNS: List[Dict] = []
+_DETECTORS: List = []
+
+
+def _chaos_active() -> bool:
+    return (_INJECT["p"] > 0 or _INJECT["hang_p"] > 0
+            or _INJECT["slow_ms"] > 0)
 
 
 def _runtime(cfg: RuntimeConfig, table: KernelTable) -> ClusterRuntime:
@@ -75,18 +84,40 @@ def _runtime(cfg: RuntimeConfig, table: KernelTable) -> ClusterRuntime:
     With ``--inject-p`` > 0 every device is wrapped in a seeded
     :class:`~repro.ft.FlakyDevice` faulting the peer fabric (SEND/RECV);
     direct-mode runtimes additionally get ``transport_retries`` so the
-    collectives ride the retry + funnel-fallback path.  Values delivered
-    are identical either way — the sections' assertions are the check.
+    collectives ride the retry + funnel-fallback path.  ``--hang-p`` > 0
+    injects HANG gray failures on the same ops instead, with a command
+    deadline on the pool (wedge backstop) and a per-op transport timeout so
+    hung collective messages are shed to the funnel; ``--slow-ms`` > 0
+    stalls EXEC commands (straggler injection — the wavefront section then
+    runs with hedging, see :func:`run_wavefront`).  Values delivered are
+    identical either way — the sections' assertions are the check.
     """
-    if _INJECT["p"] > 0 and cfg.comm_mode == "direct":
+    if cfg.comm_mode == "direct" and (_INJECT["p"] > 0
+                                      or _INJECT["hang_p"] > 0):
         cfg.transport_retries = max(cfg.transport_retries, 3)
+    if _INJECT["hang_p"] > 0:
+        # deadline is a backstop for true wedges — generous, so JIT-compile
+        # spikes on first execution never trip a false straggler fault
+        if cfg.command_deadline_s is None:
+            cfg.command_deadline_s = 10.0
+        if cfg.transport_op_timeout_s is None:
+            cfg.transport_op_timeout_s = 0.1
     rt = ClusterRuntime(cfg, table=table)
+    if not _chaos_active():
+        return rt
+    from repro.ft import inject_flaky
     if _INJECT["p"] > 0:
-        from repro.ft import inject_flaky
         inject_flaky(rt.pool, p=_INJECT["p"], seed=_INJECT["seed"],
                      ops=("SEND", "RECV"))
-        _CHAOS_RUNS.append({"mode": cfg.comm_mode, "devices": len(rt.pool),
-                            "pool": rt.pool, "transport": rt.transport})
+    if _INJECT["hang_p"] > 0:
+        inject_flaky(rt.pool, p=_INJECT["hang_p"], seed=_INJECT["seed"] + 1,
+                     ops=("SEND", "RECV"), mode="hang", hang_s=0.2)
+    if _INJECT["slow_ms"] > 0:
+        inject_flaky(rt.pool, p=_SLOW_P, seed=_INJECT["seed"] + 2,
+                     ops=("EXEC",), mode="slow",
+                     slow_s=_INJECT["slow_ms"] / 1e3)
+    _CHAOS_RUNS.append({"mode": cfg.comm_mode, "devices": len(rt.pool),
+                        "pool": rt.pool, "transport": rt.transport})
     return rt
 
 
@@ -106,6 +137,31 @@ def _failure_report() -> Dict:
     return {"inject_p": _INJECT["p"], "inject_seed": _INJECT["seed"],
             "ops": ["SEND", "RECV"], "runs": runs,
             "total_failures": sum(r["failures"] for r in runs)}
+
+
+def _hedge_report() -> Dict:
+    """Straggler/hedge accounting across every chaos run (CI artifact)."""
+    runs = []
+    for r in _CHAOS_RUNS:
+        tr = r["transport"]
+        runs.append({
+            "mode": r["mode"], "devices": r["devices"],
+            "straggler_timeouts": dict(r["pool"].straggler_timeouts),
+            "stalls": sum(getattr(d, "stalls", 0)
+                          for d in r["pool"].devices),
+            "transport_timeouts": getattr(tr, "timeouts", 0),
+            "transport_fallbacks": getattr(tr, "fallbacks", 0),
+            "transport_backoffs": getattr(tr, "backoffs", 0),
+            "transport_backoff_s": getattr(tr, "backoff_s", 0.0),
+        })
+    return {"hang_p": _INJECT["hang_p"], "slow_ms": _INJECT["slow_ms"],
+            "slow_p": _SLOW_P if _INJECT["slow_ms"] > 0 else 0.0,
+            "inject_seed": _INJECT["seed"], "runs": runs,
+            "detectors": [d.report() for d in _DETECTORS],
+            "hedges_launched": sum(d.report()["hedges_launched"]
+                                   for d in _DETECTORS),
+            "hedge_wins": sum(d.report()["hedge_wins"]
+                              for d in _DETECTORS)}
 
 
 def _make_table(d: int) -> KernelTable:
@@ -238,6 +294,16 @@ def run_wavefront(B: int = 64, fan: int = 8, n_dev: int = 2,
                         ("peer", {"peer": True})):
         rt = _runtime(RuntimeConfig(n_virtual=n_dev,
                                           link=PAPER_ETHERNET), table=table)
+        if _INJECT["slow_ms"] > 0:
+            # straggler injection: race the stalled tasks against hedged
+            # duplicates — the identity assertions below still gate
+            from repro.ft import StragglerDetector
+            det = StragglerDetector(rt.cost, k=3.0, grace_s=0.05,
+                                    max_hedges=32,
+                                    baseline={"wf_gen": 0.005,
+                                              "wf_consume": 0.005})
+            _DETECTORS.append(det)
+            kw = dict(kw, stragglers=det)
         results[mapping] = wavefront_offload(rt.ex, list(tasks), nowait=True,
                                              **kw)
         s = rt.cost.summary()
@@ -403,9 +469,20 @@ if __name__ == "__main__":
     ap.add_argument("--failure-report", metavar="PATH", default=None,
                     help="dump injected-fault counts per run to PATH "
                          "(the CI chaos job uploads it as an artifact)")
+    ap.add_argument("--hang-p", type=float, default=0.0, metavar="P",
+                    help="seeded SEND/RECV HANG (gray-failure) probability; "
+                         "adds a command deadline + transport op timeouts")
+    ap.add_argument("--slow-ms", type=float, default=0.0, metavar="MS",
+                    help="inject EXEC stalls of MS milliseconds at p=0.3; "
+                         "the wavefront section races them against hedges")
+    ap.add_argument("--hedge-report", metavar="PATH", default=None,
+                    help="dump straggler-timeout/hedge/backoff counts to "
+                         "PATH (the CI straggler-chaos job uploads it)")
     args = ap.parse_args()
     _INJECT["p"] = args.inject_p
     _INJECT["seed"] = args.inject_seed
+    _INJECT["hang_p"] = args.hang_p
+    _INJECT["slow_ms"] = args.slow_ms
     if args.smoke:
         sections = {
             "modes": run(d_model=128, n_batch=16, device_counts=(2, 4)),
@@ -438,3 +515,20 @@ if __name__ == "__main__":
             with open(args.failure_report, "w") as f:
                 json.dump(report, f, indent=2, sort_keys=True)
             print(f"wrote {args.failure_report}")
+    if _INJECT["hang_p"] > 0 or _INJECT["slow_ms"] > 0:
+        hreport = _hedge_report()
+        timeouts = sum(sum(r["straggler_timeouts"].values())
+                       for r in hreport["runs"])
+        tr_timeouts = sum(r["transport_timeouts"] for r in hreport["runs"])
+        stalls = sum(r["stalls"] for r in hreport["runs"])
+        print(f"## gray chaos: hang_p={_INJECT['hang_p']} "
+              f"slow_ms={_INJECT['slow_ms']} — {timeouts} command-deadline "
+              f"trips, {tr_timeouts} transport op timeouts, {stalls} "
+              f"injected stalls, {hreport['hedges_launched']} hedges "
+              f"({hreport['hedge_wins']} won) — all assertions held")
+        if args.hedge_report:
+            os.makedirs(os.path.dirname(args.hedge_report) or ".",
+                        exist_ok=True)
+            with open(args.hedge_report, "w") as f:
+                json.dump(hreport, f, indent=2, sort_keys=True)
+            print(f"wrote {args.hedge_report}")

@@ -15,7 +15,8 @@ from .costmodel import (CostModel, Event, LinkModel, PAPER_ETHERNET,
                         PeerRecord, TimelineSpan, TPU_DCN, TPU_ICI,
                         PEAK_FLOPS_BF16, HBM_BW_Bps, ICI_BW_Bps)
 from .device import (Command, DeviceFailure, DevicePool, DeviceStoppedError,
-                     HealthRegistry, NodeDevice, SLOT_STREAM, StreamTicket)
+                     HealthRegistry, NodeDevice, SLOT_STREAM, StragglerTimeout,
+                     StreamTicket)
 from .kernel_table import GLOBAL_KERNEL_TABLE, KernelTable, kernel
 from .mediary import (RESERVED, HostMirror, MediaryStore, PresentEntry,
                       PresentTable)
@@ -23,8 +24,9 @@ from .runtime import ClusterRuntime, RuntimeConfig
 from .scheduler import (DagTask, PeerRef, offload_strips, recursive_offload,
                         strip_partition, wavefront_offload)
 from .target import MapSpec, Section, TargetExecutor, TargetFuture, sec
-from .taskgraph import (HeftPlacement, LocalityAffinity, PlacementContext,
-                        PlacementPolicy, RoundRobin, TaskGraph, TaskNode,
+from .taskgraph import (GraphCheckpoint, GraphInterrupted, HeftPlacement,
+                        LocalityAffinity, PlacementContext, PlacementPolicy,
+                        RoundRobin, TaskGraph, TaskNode, load_graph_checkpoint,
                         resolve_policy, run_graph)
 from .transport import HostFunnelTransport, PeerTransport, Transport
 
@@ -32,12 +34,13 @@ __all__ = [
     "KernelTable", "kernel", "GLOBAL_KERNEL_TABLE",
     "MediaryStore", "HostMirror", "RESERVED", "PresentTable", "PresentEntry",
     "NodeDevice", "DevicePool", "Command", "DeviceStoppedError",
-    "DeviceFailure", "HealthRegistry",
+    "DeviceFailure", "HealthRegistry", "StragglerTimeout",
     "SLOT_STREAM", "StreamTicket",
     "MapSpec", "Section", "sec", "TargetExecutor", "TargetFuture",
     "strip_partition", "offload_strips", "recursive_offload",
     "wavefront_offload", "DagTask", "PeerRef",
     "TaskGraph", "TaskNode", "run_graph", "resolve_policy",
+    "GraphCheckpoint", "GraphInterrupted", "load_graph_checkpoint",
     "PlacementPolicy", "PlacementContext", "RoundRobin", "LocalityAffinity",
     "HeftPlacement",
     "ClusterRuntime", "RuntimeConfig",

@@ -190,6 +190,15 @@ class CostModel:
             ts = [c.seconds for c in self.compute if c.kernel == kernel]
         return sum(ts) / len(ts) if ts else None
 
+    def kernel_observations(self, kernel: str) -> int:
+        """How many retired regions back the :meth:`kernel_time` estimate.
+
+        Straggler detection gates on this: hedging off a one-sample estimate
+        (often a JIT-compile spike) would duplicate healthy work.
+        """
+        with self._lock:
+            return sum(1 for c in self.compute if c.kernel == kernel)
+
     def placement_report(self) -> List[Dict[str, float]]:
         """Predicted-vs-observed accounting for cost-driven placements.
 

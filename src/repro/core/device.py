@@ -174,6 +174,18 @@ class DeviceFailure(RuntimeError):
         self.kernel_index = kernel_index
 
 
+class StragglerTimeout(DeviceFailure):
+    """A command missed its deadline — a gray failure, not a crash.
+
+    Subclasses :class:`DeviceFailure` so every existing recovery path
+    (re-place, reroute, heal) treats a blown deadline as just another
+    recoverable fault.  The wedged command keeps running on its worker and
+    settles harmlessly later; by then the host has already recovered
+    elsewhere and :meth:`DevicePool.absorb_failures` clears whatever the
+    abandoned copy stashed.
+    """
+
+
 class HealthRegistry:
     """Shared device-health bookkeeping for failure-aware scheduling.
 
@@ -184,19 +196,37 @@ class HealthRegistry:
     When *every* device is blacklisted, :meth:`healthy` falls back to the
     full set (availability beats avoidance: with p<1 injection a retry on a
     flaky device still converges).
+
+    ``probation_waves=N`` enables blacklist *probation*: the graph executor
+    calls :meth:`tick_wave` at every wave boundary, and a blacklisted device
+    that stays clean for ``N`` consecutive waves rejoins the candidate set
+    with one strike left (``max_failures - 1``) — a transiently-slow node
+    comes back, a chronic one re-blacklists on its next fault.  Rejoins are
+    capped at ``max_rejoins`` per device; past the cap the device stays out
+    for the rest of the run.  Default ``None`` keeps the PR-6 behavior
+    (blacklisted for the whole run).
     """
 
-    def __init__(self, max_failures: int = 2) -> None:
+    def __init__(self, max_failures: int = 2, *,
+                 probation_waves: Optional[int] = None,
+                 max_rejoins: int = 2) -> None:
         self.max_failures = max_failures
+        self.probation_waves = probation_waves
+        self.max_rejoins = max_rejoins
         self._lock = threading.Lock()
         self._counts: Dict[int, int] = {}
         self._blacklist: set = set()
+        self._clean: Dict[int, int] = {}     # consecutive clean waves
+        self._rejoins: Dict[int, int] = {}   # probation rejoins so far
+        self._dirty: set = set()             # failed since last tick_wave
 
     def mark_failed(self, device: Optional[int]) -> None:
         if device is None:
             return
         with self._lock:
             self._counts[device] = self._counts.get(device, 0) + 1
+            self._dirty.add(device)
+            self._clean.pop(device, None)
             if self._counts[device] >= self.max_failures:
                 self._blacklist.add(device)
 
@@ -205,6 +235,38 @@ class HealthRegistry:
         with self._lock:
             self._counts.pop(device, None)
             self._blacklist.discard(device)
+            self._clean.pop(device, None)
+            self._rejoins.pop(device, None)
+            self._dirty.discard(device)
+
+    def tick_wave(self) -> List[int]:
+        """Advance probation at a wave boundary; returns devices rejoined.
+
+        A blacklisted device with no failures since the last tick accrues
+        one clean wave; at ``probation_waves`` it rejoins with its count
+        reset to ``max_failures - 1`` (one strike from re-blacklisting),
+        unless it has already used its ``max_rejoins`` budget.
+        """
+        rejoined: List[int] = []
+        with self._lock:
+            dirty, self._dirty = self._dirty, set()
+            if self.probation_waves is None:
+                return rejoined
+            for d in sorted(self._blacklist):
+                if d in dirty:
+                    self._clean[d] = 0
+                    continue
+                self._clean[d] = self._clean.get(d, 0) + 1
+                if self._clean[d] < self.probation_waves:
+                    continue
+                if self._rejoins.get(d, 0) >= self.max_rejoins:
+                    continue                 # chronic offender: stays out
+                self._rejoins[d] = self._rejoins.get(d, 0) + 1
+                self._blacklist.discard(d)
+                self._clean.pop(d, None)
+                self._counts[d] = self.max_failures - 1
+                rejoined.append(d)
+        return rejoined
 
     def failures(self, device: int) -> int:
         with self._lock:
@@ -291,12 +353,19 @@ class DevicePool:
     def __init__(self, devices: Sequence[NodeDevice], *,
                  table: Optional[KernelTable] = None,
                  link: LinkModel = PAPER_ETHERNET,
-                 capacity_bytes: Optional[int] = None) -> None:
+                 capacity_bytes: Optional[int] = None,
+                 deadline_s: Optional[float] = None) -> None:
         self.devices = list(devices)
         self.table = table or GLOBAL_KERNEL_TABLE
         self.cost = CostModel(link)
         # pool-wide default budget for devices joining later (add_device)
         self._default_capacity = capacity_bytes
+        # per-command deadline on the value-producing ops (EXEC, XFER_FROM):
+        # a blown deadline raises StragglerTimeout instead of waiting forever
+        # on a wedged worker.  None (default) = wait indefinitely.
+        self.deadline_s = deadline_s
+        # observability: blown deadlines by op (guarded by _trace_lock)
+        self.straggler_timeouts: Dict[str, int] = {}
         # shared failure bookkeeping consulted by placement policies
         self.health = HealthRegistry()
         self.mirrors = [HostMirror() for _ in self.devices]
@@ -447,6 +516,30 @@ class DevicePool:
         err, self._async_errors[device] = self._async_errors[device], None
         if err is not None:
             raise err
+
+    def _await_deadline(self, device: int, fut: "_cf.Future", cmd: Command):
+        """Block on a value-producing command under the pool deadline.
+
+        The deadline is end-to-end (queue wait + dependency gating +
+        execution): a command starved behind a wedged producer is just as
+        much a straggler as a slow one.  A blown deadline raises
+        :class:`StragglerTimeout`; the command itself is NOT cancelled — it
+        settles whenever the worker gets to it, and recovery routes around
+        it in the meantime.
+        """
+        if self.deadline_s is None:
+            return fut.result()
+        try:
+            return fut.result(timeout=self.deadline_s)
+        except _cf.TimeoutError:
+            with self._trace_lock:
+                self.straggler_timeouts[cmd.op] = (
+                    self.straggler_timeouts.get(cmd.op, 0) + 1)
+            raise StragglerTimeout(
+                f"{cmd.op} on device {device} exceeded the "
+                f"{self.deadline_s}s command deadline",
+                op=cmd.op, device=device,
+                kernel_index=cmd.kernel_index) from None
 
     def absorb_failures(self) -> List[BaseException]:
         """Clear stashed *injected* async errors pool-wide; return them.
@@ -611,7 +704,7 @@ class DevicePool:
                              lambda: jax.block_until_ready(
                                  self.devices[device].execute(cmd, self.table, payload))),
                 reads=cmd.reads)
-        out = fut.result()
+        out = self._await_deadline(device, fut, cmd)
         self._raise_async(device)
         nbytes = out.size * out.dtype.itemsize
         self.cost.record_transfer("from", device, nbytes, tag=tag)
@@ -715,7 +808,7 @@ class DevicePool:
 
             fut = self._submit(device, self._traced(device, cmd, run_exec),
                                reads=reads, extra_deps=extra_deps)
-        out, seconds = fut.result()
+        out, seconds = self._await_deadline(device, fut, cmd)
         self._raise_async(device)
         self.cost.record_compute(device, seconds, tag=tag or kernel_name,
                                  kernel=kernel_name)

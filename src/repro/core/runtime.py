@@ -60,6 +60,17 @@ class RuntimeConfig:
     # fall back to the host funnel — values are identical either way.  The
     # default keeps the fire-and-forget peer fabric (no per-message wait).
     transport_retries: int = 0
+    # straggler protection (None = off, the zero-overhead default):
+    # command_deadline_s bounds every value-producing device command (EXEC,
+    # XFER_FROM) end to end — a blown deadline raises StragglerTimeout, a
+    # recoverable DeviceFailure; transport_op_timeout_s bounds each peer
+    # sendrecv the same way.  Retried sends pace themselves by exponential
+    # backoff with deterministic, seeded jitter (base·2^(attempt-1), capped,
+    # scaled by a draw in [0.5, 1) from transport_backoff_seed).
+    command_deadline_s: Optional[float] = None
+    transport_op_timeout_s: Optional[float] = None
+    transport_backoff_base_s: float = 1e-3
+    transport_backoff_seed: int = 0
 
 
 class ClusterRuntime:
@@ -70,17 +81,22 @@ class ClusterRuntime:
         if cfg.n_virtual is not None:
             self.pool = DevicePool.virtual(
                 cfg.n_virtual, table=table, link=cfg.link,
-                capacity_bytes=cfg.device_capacity_bytes)
+                capacity_bytes=cfg.device_capacity_bytes,
+                deadline_s=cfg.command_deadline_s)
         else:
             self.pool = DevicePool.from_config(
                 cfg.nodes, table=table, link=cfg.link,
-                capacity_bytes=cfg.device_capacity_bytes)
+                capacity_bytes=cfg.device_capacity_bytes,
+                deadline_s=cfg.command_deadline_s)
         self.ex = TargetExecutor(self.pool, max_host_threads=cfg.max_host_threads)
         # the transport is what "direct" now *means*: a real peer fabric of
         # SEND/RECV stream commands, not a byte-accounting credit
         self.pool.cost.peer_link = cfg.peer_link
         self.transport: Transport = (
-            PeerTransport(cfg.peer_link, retries=cfg.transport_retries)
+            PeerTransport(cfg.peer_link, retries=cfg.transport_retries,
+                          op_timeout_s=cfg.transport_op_timeout_s,
+                          backoff_base_s=cfg.transport_backoff_base_s,
+                          seed=cfg.transport_backoff_seed)
             if cfg.comm_mode == "direct" else HostFunnelTransport())
         self._ef_residual: Optional[Any] = None
         self._dps: Optional[Dict[str, Any]] = None   # data_parallel_step state

@@ -290,7 +290,7 @@ def wavefront_offload(ex: TargetExecutor, tasks: Sequence[DagTask], *,
                       resident: bool = False, peer: bool = False,
                       transport: Optional[Any] = None,
                       policy: Any = None,
-                      tag: str = "dag") -> Dict[str, Any]:
+                      tag: str = "dag", **graph_kw) -> Dict[str, Any]:
     """Run a dependency DAG where every edge crosses the host (OpenMP rule).
 
     Thin builder: lowers the :class:`DagTask` list into a
@@ -311,8 +311,12 @@ def wavefront_offload(ex: TargetExecutor, tasks: Sequence[DagTask], *,
     locality- or cost-driven choices (``"locality"``, ``"heft"``, or any
     :class:`~repro.core.taskgraph.PlacementPolicy`) — results are
     bit-identical under every policy, only the traffic changes.
+
+    Extra keyword arguments (``stragglers``, ``checkpoint``,
+    ``resume_from``, ``max_retries``) pass through to
+    :func:`~repro.core.taskgraph.run_graph` unchanged.
     """
     graph = TaskGraph.from_tasks(tasks)
     return run_graph(ex, graph, policy=policy, out_name=out_name,
                      nowait=nowait, resident=resident, peer=peer,
-                     transport=transport, tag=tag)
+                     transport=transport, tag=tag, **graph_kw)

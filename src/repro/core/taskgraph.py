@@ -37,6 +37,10 @@ same operands, so results are bit-identical across policies (property-tested)
 from __future__ import annotations
 
 import concurrent.futures as _cf
+import json
+import os
+import shutil
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -394,13 +398,100 @@ def _value_nbytes(val: Any) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Resumable runs: the frontier checkpoint
+# ---------------------------------------------------------------------------
+@dataclass
+class GraphCheckpoint:
+    """Periodic frontier checkpoint making a :func:`run_graph` resumable.
+
+    Every ``every_waves`` wave boundaries (and at the final wave) the
+    completed-node frontier — each finished task's *host-reconciled* output
+    value (peer-resident outputs are fetched once and cached) plus the
+    completion order — is persisted atomically via
+    :func:`repro.checkpoint.manager.save_pytree` under ``directory`` as
+    ``step_<wave+1>``.  ``keep`` bounds retention (older steps are GC'd;
+    None keeps all).  A killed coordinator then restarts with
+    ``run_graph(resume_from=directory)``: completed nodes are skipped, their
+    values seeded from the snapshot, and in peer mode their residency is
+    rehydrated onto policy-placed devices so the remaining waves run
+    exactly as they would have.
+
+    ``halt_after=k`` raises :class:`GraphInterrupted` after the ``k``-th
+    save — the deterministic "kill the coordinator at wave k" used by the
+    resume tests and the CI smoke (pinned peer entries are released first,
+    exactly as a real abort would).
+
+    Task output values must be arrays or dict-pytrees of arrays (the
+    manifest round trip rebuilds nested dicts; other container types would
+    restore as dicts) and task names must not contain ``/``.
+    """
+
+    directory: str
+    every_waves: int = 1
+    keep: Optional[int] = 2
+    halt_after: Optional[int] = None
+
+
+class GraphInterrupted(RuntimeError):
+    """A :class:`GraphCheckpoint` ``halt_after`` fired: the run stopped on
+    purpose after saving; resume with ``run_graph(resume_from=...)``."""
+
+
+def _checkpoint_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    out: List[int] = []
+    for n in os.listdir(directory):
+        if n.startswith("step_") and not n.endswith(".tmp"):
+            try:
+                out.append(int(n[5:]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def load_graph_checkpoint(directory: str, *, step: Optional[int] = None
+                          ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Load a :class:`GraphCheckpoint` snapshot: ``(values, extra)``.
+
+    ``values`` maps each completed task to its host output value; ``extra``
+    carries the completion order (``"completed"``), the wave index and the
+    graph tag.  The restore template is rebuilt from the manifest's leaf
+    shapes/dtypes, so no live pytree is needed — exactly the fresh-process
+    resume situation.
+    """
+    from ..checkpoint.manager import _np_dtype, latest_step, restore_pytree
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(
+                f"no graph checkpoint steps under {directory!r}")
+    with open(os.path.join(directory, f"step_{step:08d}",
+                           "manifest.json")) as f:
+        manifest = json.load(f)
+    template: Dict[str, Any] = {}
+    for key, meta in manifest["leaves"].items():
+        parts = key.split("/")
+        node = template
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jax.ShapeDtypeStruct(tuple(meta["shape"]),
+                                               _np_dtype(meta["dtype"]))
+    tree, _, extra = restore_pytree(directory, step=step, template=template)
+    return tree, dict(extra or {})
+
+
+# ---------------------------------------------------------------------------
 # The executor every pattern lowers into
 # ---------------------------------------------------------------------------
 def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
               policy: Any = None, out_name: str = "out",
               nowait: bool = True, resident: bool = False,
               peer: bool = False, transport: Optional[Any] = None,
-              tag: str = "graph", max_retries: int = 8) -> Dict[str, Any]:
+              tag: str = "graph", max_retries: int = 8,
+              stragglers: Optional[Any] = None,
+              checkpoint: Optional[GraphCheckpoint] = None,
+              resume_from: Optional[str] = None) -> Dict[str, Any]:
     """Run a :class:`TaskGraph`: waves of ready nodes, policy-placed.
 
     The semantics previously private to ``wavefront_offload`` — and now
@@ -451,6 +542,23 @@ def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
     ``policy`` (default :class:`RoundRobin`) decides device placement per
     ready node; placement affects traffic, never values.  Returns
     ``{task: host value}`` for every node.
+
+    **Straggler hedging** (``stragglers=``): pass a detector (duck-typed on
+    :class:`repro.ft.stragglers.StragglerDetector`) and the join loop polls
+    in-flight regions every ``poll_s``; a region exceeding the detector's
+    per-kernel threshold gets ONE hedged duplicate launched on another
+    healthy candidate device (least-loaded, lowest index).  First result
+    wins; the loser's cost records are struck through the speculation
+    ``discard_tag`` machinery (and the winner's renamed onto the canonical
+    tag), so results stay bit-identical and each task is modeled exactly
+    once.  A failed primary with a hedge in flight simply waits for the
+    hedge; only if both fail does normal recovery re-dispatch.  With
+    ``stragglers=None`` (default) the join blocks exactly as before — zero
+    overhead when the feature is off.
+
+    **Resumable runs** (``checkpoint=`` / ``resume_from=``): see
+    :class:`GraphCheckpoint`.  A resumed run must pass the same graph,
+    ``tag`` and ``out_name`` as the checkpointed one.
     """
     policy = resolve_policy(policy)
     if peer and transport is None:
@@ -694,44 +802,192 @@ def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
                         _absorb()
                         err = err2
 
+    def _launch_hedge(rec: Dict[str, Any]) -> None:
+        """Race a duplicate of a straggling region on another device.
+
+        The hedge's tag uses a ``~`` separator (``<tag>~hedge<n>``):
+        :func:`~repro.core.costmodel._tag_matches` treats only ``:`` and
+        ``[`` as child separators, so ``discard_tag(rec['tag'])`` strikes
+        the primary WITHOUT touching the hedge's records and vice versa —
+        the race's loser can always be struck cleanly.
+        """
+        t = rec["t"]
+        cands = [d for d in ctx.candidates() if d != rec["dev"]]
+        if not cands:
+            return
+        hdev = min(cands, key=lambda d: (ctx.load.get(d, 0), d))
+        rec["hedge_count"] = rec.get("hedge_count", 0) + 1
+        htag = f"{rec['tag']}~hedge{rec['hedge_count']}"
+        prev = producer.get(t.name) if peer else None
+        elapsed = time.monotonic() - rec["start"]
+        entry = f"{tag}:{t.name}"
+        try:
+            hmaps = (_peer_rewrite(t, hdev, rec["orig_maps"], htag)
+                     if peer else rec["orig_maps"])
+            hfut = ex.target(t.kernel, hdev, hmaps, nowait=True, tag=htag)
+        except (DeviceFailure, KeyError):
+            # the hedge could not even launch: undo its peer bookkeeping
+            # and keep racing the primary alone
+            _absorb()
+            if peer:
+                if prev is not None:
+                    producer[t.name] = prev
+                if ((prev is None or prev[0] != hdev)
+                        and (hdev, entry) in peer_entries):
+                    ex.exit_data(hdev, entry)
+                    peer_entries.pop((hdev, entry), None)
+            return
+        ctx.load[hdev] = ctx.load.get(hdev, 0) + 1
+        hrec = stragglers.note_launch(
+            task=t.name, kernel=t.kernel, primary_device=rec["dev"],
+            hedge_device=hdev, elapsed_s=elapsed,
+            threshold_s=stragglers.threshold(t.kernel) or 0.0)
+        rec["hedge"] = {"fut": hfut, "tag": htag, "dev": hdev,
+                        "prev_producer": prev, "record": hrec}
+
+    def _drop_hedge(rec: Dict[str, Any], outcome: str) -> None:
+        """Strike a settled, losing hedge; restore the primary's state."""
+        h = rec["hedge"]
+        t = rec["t"]
+        entry = f"{tag}:{t.name}"
+        _absorb()
+        pool.cost.discard_tag(h["tag"])
+        if peer:
+            if h["prev_producer"] is not None:
+                producer[t.name] = h["prev_producer"]
+            keep_dev = producer.get(t.name, (None,))[0]
+            if h["dev"] != keep_dev and (h["dev"], entry) in peer_entries:
+                ex.exit_data(h["dev"], entry)
+                peer_entries.pop((h["dev"], entry), None)
+                ctx.replicas.setdefault(t.name, set()).discard(h["dev"])
+        stragglers.note_winner(h["record"], outcome)
+        rec["hedge"] = None
+
+    def _promote_hedge(rec: Dict[str, Any]) -> None:
+        """The hedge won the race: canonicalize it, strike the primary."""
+        h = rec["hedge"]
+        t = rec["t"]
+        entry = f"{tag}:{t.name}"
+        _absorb()
+        # order matters: strike the loser FIRST, then rename the winner's
+        # records onto the canonical tag (renaming first would hand the
+        # winner's records to the discard)
+        pool.cost.discard_tag(rec["tag"])
+        pool.cost.rename_tag(h["tag"], rec["tag"])
+        if peer:
+            producer[t.name] = (h["dev"], entry)
+            pdev = rec["dev"]
+            if pdev != h["dev"] and (pdev, entry) in peer_entries:
+                ex.exit_data(pdev, entry)
+                peer_entries.pop((pdev, entry), None)
+                ctx.replicas.setdefault(t.name, set()).discard(pdev)
+            ctx.replicas.setdefault(t.name, set()).add(h["dev"])
+            ctx.home[t.name] = h["dev"]
+        stragglers.note_winner(h["record"], "hedge")
+        rec["hedge"] = None
+
+    def _settle_hedges(records: List[Dict[str, Any]]) -> None:
+        """Decide every still-open race once both copies have settled.
+
+        A winner is *taken* the moment it lands, but the loser's records can
+        only be struck after the loser settles (its cost records land at
+        completion) — so resolution is deferred to here, after the join.
+        """
+        for rec in records:
+            h = rec.get("hedge")
+            if h is None:
+                continue
+            _cf.wait([rec["fut"]._fut, h["fut"]._fut])
+            if rec.get("winner") == "hedge":
+                _promote_hedge(rec)
+            else:
+                _drop_hedge(rec, "primary")
+
     def _join_recovering(records: List[Dict[str, Any]]) -> None:
         """Join a wave's ``nowait`` regions, recovering failed ones.
 
         Like :meth:`TargetExecutor.drain` this returns only once EVERY
-        region (including re-dispatched ones) has settled, so pin releases
-        after it can never pull a buffer from under a running region.
-        Outcomes land in each record's ``out``.
+        region (including re-dispatched ones and hedges) has settled, so
+        pin releases after it can never pull a buffer from under a running
+        region.  Outcomes land in each record's ``out``.
+
+        With a straggler detector the wait becomes a poll: each pass checks
+        in-flight primaries against the detector's threshold and races a
+        hedged duplicate when one trips.  The primary is preferred on ties
+        (deterministic); a failed primary with a live hedge waits for the
+        hedge instead of burning a recovery attempt.
         """
         all_futs: List[TargetFuture] = [r["fut"] for r in records]
         pending = list(records)
         try:
             while pending:
-                _cf.wait([r["fut"]._fut for r in pending])
+                waitset = [r["fut"]._fut for r in pending]
+                waitset += [r["hedge"]["fut"]._fut for r in pending
+                            if r.get("hedge")]
+                if stragglers is None:
+                    _cf.wait(waitset)
+                else:
+                    _cf.wait(waitset, timeout=stragglers.poll_s,
+                             return_when=_cf.FIRST_COMPLETED)
                 nxt: List[Dict[str, Any]] = []
                 for rec in pending:
-                    err = rec["fut"]._fut.exception()
-                    if err is None:
-                        rec["out"] = rec["fut"]._fut.result()
+                    pf = rec["fut"]._fut
+                    h = rec.get("hedge")
+                    if pf.done() and pf.exception() is None:
+                        rec["out"] = pf.result()
+                        if h is not None:
+                            rec["winner"] = "primary"
                         continue
-                    if not isinstance(err, (DeviceFailure, KeyError)):
-                        raise err
-                    _absorb()
-                    while True:
-                        rec["attempts"] += 1
-                        if rec["attempts"] > max_retries:
+                    if h is not None and h["fut"]._fut.done():
+                        herr = h["fut"]._fut.exception()
+                        if herr is None:
+                            rec["out"] = h["fut"]._fut.result()
+                            rec["winner"] = "hedge"
+                            continue
+                        if not isinstance(herr, (DeviceFailure, KeyError)):
+                            raise herr
+                        _drop_hedge(rec, "failed")
+                        h = None
+                    if pf.done():
+                        err = pf.exception()
+                        if not isinstance(err, (DeviceFailure, KeyError)):
                             raise err
-                        try:
-                            _recover(rec, err)
-                            break
-                        except (DeviceFailure, KeyError) as err2:
-                            _absorb()
-                            err = err2
-                    rec["fut"] = ex.target(rec["t"].kernel, rec["dev"],
-                                           rec["maps"], nowait=True,
-                                           tag=rec["tag"])
-                    all_futs.append(rec["fut"])
+                        if h is not None:
+                            # the hedge is still racing: let it decide the
+                            # node before spending a recovery attempt
+                            nxt.append(rec)
+                            continue
+                        _absorb()
+                        while True:
+                            rec["attempts"] += 1
+                            if rec["attempts"] > max_retries:
+                                raise err
+                            try:
+                                _recover(rec, err)
+                                break
+                            except (DeviceFailure, KeyError) as err2:
+                                _absorb()
+                                err = err2
+                        rec["start"] = time.monotonic()
+                        rec["fut"] = ex.target(rec["t"].kernel, rec["dev"],
+                                               rec["maps"], nowait=True,
+                                               tag=rec["tag"])
+                        all_futs.append(rec["fut"])
+                        nxt.append(rec)
+                        continue
+                    # primary still in flight: maybe race a duplicate
+                    if (stragglers is not None and h is None
+                            and rec.get("hedge_count", 0) < 1
+                            and stragglers.should_hedge(
+                                rec["t"].kernel,
+                                time.monotonic() - rec["start"])):
+                        _launch_hedge(rec)
+                        if rec.get("hedge") is not None:
+                            all_futs.append(rec["hedge"]["fut"])
                     nxt.append(rec)
                 pending = nxt
+            if stragglers is not None:
+                _settle_hedges(records)
         finally:
             # error path: settle everything still in flight before the
             # caller's teardown releases pins
@@ -740,15 +996,86 @@ def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
                 _cf.wait(live)
             ex.retire(all_futs)
 
+    # -- resumable runs: frontier snapshot + rehydration ----------------------
+    completed: set = set()
+    host_snap: Dict[str, Any] = {}     # task -> host value (checkpoint cache)
+    ckpt_saves = [0]
+
+    def _save_checkpoint(wave_idx: int) -> None:
+        """Persist the completed-node frontier after ``wave_idx``.
+
+        Peer-resident outputs are host-reconciled (fetched once, cached
+        incrementally across saves), so the snapshot is self-contained: a
+        fresh process restores values without any live device state.
+        """
+        from ..checkpoint.manager import save_pytree
+        for name in results:
+            if name not in host_snap:
+                host_snap[name] = _fetch_task(name) if peer else results[name]
+        snap = {n: host_snap[n] for n in results}
+        save_pytree(checkpoint.directory, wave_idx + 1, snap,
+                    extra={"completed": list(results), "wave": wave_idx,
+                           "graph_tag": tag, "out_name": out_name})
+        ckpt_saves[0] += 1
+        if checkpoint.keep is not None:
+            for s in _checkpoint_steps(checkpoint.directory)[:-checkpoint.keep]:
+                shutil.rmtree(os.path.join(checkpoint.directory,
+                                           f"step_{s:08d}"),
+                              ignore_errors=True)
+        if (checkpoint.halt_after is not None
+                and ckpt_saves[0] >= checkpoint.halt_after):
+            raise GraphInterrupted(
+                f"run_graph halted on purpose after save {ckpt_saves[0]} "
+                f"(wave {wave_idx}); resume from {checkpoint.directory!r}")
+
+    if resume_from is not None:
+        snap, ck_extra = load_graph_checkpoint(resume_from)
+        order = [n for n in ck_extra.get("completed", sorted(snap))
+                 if n in snap]
+        for idx, name in enumerate(order):
+            if name not in graph.nodes:
+                raise ValueError(
+                    f"checkpointed task {name!r} is not in this graph — "
+                    f"resume requires the DAG that was checkpointed")
+            value = snap[name]
+            completed.add(name)
+            host_snap[name] = value
+            ctx.out_bytes[name] = _value_nbytes(value)
+            if peer:
+                # rehydrate residency: the restored value re-enters a
+                # device data environment on a policy-placed device, so the
+                # remaining waves bind it exactly like a live producer's
+                # output (``**{entry: ...}`` — entry names contain ':')
+                t = graph.node(name)
+                rtag = t.tag or f"{tag}:resume:{name}"
+                dev = policy.place(ctx, t, idx, rtag)
+                if not (0 <= dev < ctx.D):
+                    raise ValueError(
+                        f"policy {policy.name!r} re-placed restored "
+                        f"{name!r} on device {dev} of {ctx.D}")
+                entry = f"{tag}:{name}"
+                ex.enter_data(dev, f"{tag}:resume", **{entry: value})
+                peer_entries[(dev, entry)] = True
+                producer[name] = (dev, entry)
+                entry_owner[entry] = name
+                ctx.home[name] = dev
+                ctx.replicas.setdefault(name, set()).add(dev)
+                results[name] = PeerRef(name, entry, dev)
+            else:
+                results[name] = value
+
     # the topological decomposition is the graph's own (one wave drains
     # fully before the next is planned, so ready == waves()); cycles and
     # missing deps surface here, before anything is dispatched
-    for wave_idx, wave in enumerate(graph.waves()):
-        ready = [graph.node(n) for n in wave]
+    waves = graph.waves()
+    for wave_idx, wave in enumerate(waves):
+        ready = [graph.node(n) for n in wave if n not in completed]
         ctx.wave = wave_idx
-        # wave boundary: re-read pool membership and device health, so a
+        # wave boundary: advance blacklist probation (a clean wave accrues
+        # rejoin credit) and re-read pool membership and device health, so a
         # device joined mid-graph is placeable from the next wave on and a
         # removed/blacklisted one leaves the candidate set
+        pool.health.tick_wave()
         _refresh_membership()
         D = ctx.D
         ctx.load = {d: 0 for d in range(D)}
@@ -804,6 +1131,7 @@ def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
             for p in plans:
                 t = p["t"]
                 if nowait:
+                    p["start"] = time.monotonic()
                     p["fut"] = ex.target(t.kernel, p["dev"], p["maps"],
                                          nowait=True, tag=p["tag"])
                     futs.append(p["fut"])
@@ -829,6 +1157,14 @@ def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
                                        if peer else p["out"][out_name])
                     if not peer:
                         ctx.out_bytes[t.name] = _value_nbytes(results[t.name])
+            if checkpoint is not None and ready:
+                waves_done = wave_idx + 1
+                if (waves_done % max(1, checkpoint.every_waves) == 0
+                        or wave_idx == len(waves) - 1):
+                    # inside the try on purpose: a halt_after raise takes
+                    # the teardown path below, releasing pinned peer
+                    # entries exactly as a real coordinator death would
+                    _save_checkpoint(wave_idx)
         except BaseException:
             if peer:
                 # failed run: nothing will fetch the resident outputs, so

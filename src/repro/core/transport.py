@@ -39,9 +39,13 @@ buffers.
 """
 from __future__ import annotations
 
+import concurrent.futures as _cf
+import threading as _threading
+import time as _time
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
+import numpy as _np
 
 from .costmodel import LinkModel
 
@@ -295,31 +299,78 @@ class PeerTransport(Transport):
     waits for its RECV, and an injected :class:`~repro.core.device.
     DeviceFailure` re-sends the message, falling back to the host funnel
     (fetch + re-send — always available) once the peer wire has failed
-    ``retries`` times.  The delivered value is identical regardless of the
-    wire, so collectives stay bit-identical under injection.  The default
-    (``retries=0``) keeps the zero-overhead fire-and-forget behavior.
+    ``retries`` times.  Re-sends are paced by exponential backoff with
+    deterministic, seeded jitter (``backoff_base_s``·2^(attempt-1), capped
+    at ``backoff_cap_s``, scaled by a seeded draw in [0.5, 1)) — the same
+    (seed, failure schedule) replays the same delays bit-for-bit.
+
+    ``op_timeout_s`` bounds how long a ``sendrecv`` waits for its RECV to
+    settle: a blown timeout is classified as a straggler fault
+    (:class:`~repro.core.device.StragglerTimeout`) and takes the same
+    retry → backoff → funnel-fallback path as a loud failure, so a hung
+    wire costs one timeout instead of the whole job.  The abandoned
+    SEND/RECV pair settles whenever the worker unwedges; whatever it
+    stashes is absorbed then.  The delivered value is identical regardless
+    of the wire, so collectives stay bit-identical under injection.  The
+    default (``retries=0``, no timeout) keeps the zero-overhead
+    fire-and-forget behavior.
     """
 
     kind = "peer"
 
     def __init__(self, link: Optional[LinkModel] = None,
-                 retries: int = 0) -> None:
+                 retries: int = 0, *, op_timeout_s: Optional[float] = None,
+                 backoff_base_s: float = 1e-3, backoff_cap_s: float = 0.1,
+                 seed: int = 0) -> None:
         self.link = link
         self.retries = retries
+        self.op_timeout_s = op_timeout_s
+        self.backoff_base_s = backoff_base_s
+        self.backoff_cap_s = backoff_cap_s
+        self._rng = _np.random.default_rng((seed, 0xB0FF))
+        self._rng_lock = _threading.Lock()
         self.fallbacks = 0      # observability: edges rerouted to the funnel
+        self.timeouts = 0       # ops that blew op_timeout_s (stragglers)
+        self.backoffs = 0       # backoff sleeps taken
+        self.backoff_s = 0.0    # total seconds spent backing off
+
+    def _backoff(self, attempt: int) -> None:
+        """Sleep the attempt's backoff: exponential, capped, seeded jitter."""
+        with self._rng_lock:
+            u = float(self._rng.random())
+        delay = min(self.backoff_cap_s,
+                    self.backoff_base_s * (2.0 ** (attempt - 1)))
+        delay *= 0.5 + 0.5 * u
+        self.backoffs += 1
+        self.backoff_s += delay
+        _time.sleep(delay)
 
     def sendrecv(self, pool, src: int, src_handle: int,
                  dst: int, dst_handle: int, *,
                  nbytes: Optional[int] = None, tag: str = ""):
-        if self.retries <= 0:
+        if self.retries <= 0 and self.op_timeout_s is None:
             return pool.peer_copy(src, src_handle, dst, dst_handle,
                                   nbytes=nbytes, tag=tag)
-        from .device import DeviceFailure
+        from .device import DeviceFailure, StragglerTimeout
         attempt = 0
         while True:
             fut = pool.peer_copy(src, src_handle, dst, dst_handle,
                                  nbytes=nbytes, tag=tag)
-            err = fut.exception()          # blocks until the RECV settles
+            try:
+                err = fut.exception(timeout=self.op_timeout_s)
+            except _cf.TimeoutError:
+                # straggler: the RECV has not settled within the op budget.
+                # The pair keeps running on its workers; when it finally
+                # settles, absorb whatever it stashed so no innocent sync op
+                # inherits the abandoned copy's failure.
+                self.timeouts += 1
+                fut.add_done_callback(
+                    lambda f: pool.absorb_failures()
+                    if isinstance(f.exception(), DeviceFailure) else None)
+                err = StragglerTimeout(
+                    f"SEND/RECV {src}->{dst} exceeded the "
+                    f"{self.op_timeout_s}s transport op timeout",
+                    op="RECV", device=dst)
             if err is None:
                 return fut
             if not isinstance(err, DeviceFailure):
@@ -336,6 +387,7 @@ class PeerTransport(Transport):
                 value = pool.transfer_from(src, src_handle, tag=f"{tag}:fallback")
                 return pool.transfer_to(dst, dst_handle, value,
                                         tag=f"{tag}:fallback")
+            self._backoff(attempt)
 
     def edge_time(self, cost, src: int, dst: int, nbytes: int) -> float:
         """One message on the directed (src, dst) peer link — no funnel hop."""

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from dataclasses import dataclass
 from typing import Any, Dict, Iterator, Optional
 
@@ -119,17 +120,26 @@ class Prefetcher:
                 if k in self.shardings else jnp.asarray(v)
                 for k, v in batch.items()}
 
+    def _put(self, item: Any) -> bool:
+        """Bounded put that yields to a concurrent ``close()``: re-checks the
+        stop flag on every queue-full timeout instead of blocking forever on
+        a consumer that has already walked away."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
     def _worker(self, start_step: int, max_steps: Optional[int]) -> None:
         step = start_step
         while not self._stop.is_set():
             if max_steps is not None and step >= start_step + max_steps:
-                self._q.put(self._DONE)
+                self._put(self._DONE)
                 return
-            try:
-                self._q.put(self._place(self.source.batch(step)), timeout=0.5)
-            except queue.Full:
-                continue
-            step += 1
+            if self._put(self._place(self.source.batch(step))):
+                step += 1
 
     def __iter__(self):
         return self
@@ -140,14 +150,30 @@ class Prefetcher:
             raise StopIteration
         return item
 
-    def close(self) -> None:
+    def close(self, timeout: float = 2.0) -> None:
+        """Stop the producer and join it within ``timeout`` seconds.
+
+        The producer may be blocked on a full queue, so close interleaves
+        draining with short joins until the deadline.  A producer still
+        alive past the deadline is a leak (it would pin its step's batch
+        and the generator state for the process lifetime), so that raises
+        instead of returning silently.
+        """
         self._stop.set()
-        try:
-            while True:
-                self._q.get_nowait()
-        except queue.Empty:
-            pass
-        self._thread.join(timeout=2)
+        deadline = time.monotonic() + timeout
+        while True:
+            try:
+                while True:
+                    self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=0.1)
+            if not self._thread.is_alive():
+                return
+            if time.monotonic() >= deadline:
+                raise RuntimeError(
+                    f"Prefetcher producer thread failed to stop within "
+                    f"{timeout}s of close(); it is leaked")
 
 
 def make_pipeline(cfg: DataConfig, *, start_step: int = 0,

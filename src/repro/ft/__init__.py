@@ -1,7 +1,10 @@
-from ..core.device import DeviceFailure, HealthRegistry
-from .failures import FAULT_OPS, FlakyDevice, inject_flaky, with_retry
+from ..core.device import DeviceFailure, HealthRegistry, StragglerTimeout
+from .failures import (FAULT_MODES, FAULT_OPS, FlakyDevice, inject_flaky,
+                       with_retry)
 from .elastic import elastic_shardings, rescale_pool
+from .stragglers import HedgeRecord, StragglerDetector
 
 __all__ = ["FlakyDevice", "inject_flaky", "with_retry", "FAULT_OPS",
-           "DeviceFailure", "HealthRegistry",
+           "FAULT_MODES", "DeviceFailure", "HealthRegistry",
+           "StragglerTimeout", "StragglerDetector", "HedgeRecord",
            "elastic_shardings", "rescale_pool"]

@@ -28,6 +28,7 @@ injection side plus the single-region retry primitive.
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Dict, Optional, Sequence
 
 import numpy as np
@@ -36,7 +37,7 @@ from ..core.device import Command, DeviceFailure, NodeDevice
 from ..core.target import MapSpec, TargetExecutor
 
 __all__ = ["DeviceFailure", "FlakyDevice", "inject_flaky", "with_retry",
-           "FAULT_OPS"]
+           "FAULT_OPS", "FAULT_MODES"]
 
 #: Ops eligible for injection.  STOP/ALLOC/FREE are deliberately excluded:
 #: faulting them would desynchronize the host mirror's first-fit prediction
@@ -45,34 +46,62 @@ __all__ = ["DeviceFailure", "FlakyDevice", "inject_flaky", "with_retry",
 FAULT_OPS = ("EXEC", "SEND", "RECV", "XFER_TO", "XFER_FROM")
 
 
+#: Gray-failure modes: how an injected fault manifests.
+#: - ``fail``: immediate DeviceFailure (PR-6 fail-stop behavior).
+#: - ``hang``: the worker wedges for ``hang_s`` *then* dies without side
+#:   effects — host-side deadlines fire long before; the sleep is finite so
+#:   workers always recover and stream dependents eventually settle.
+#: - ``slow``: the op sleeps ``slow_s`` then SUCCEEDS — a straggler, not a
+#:   fault; counted in ``stalls``, invisible to the failure counters.
+FAULT_MODES = ("fail", "hang", "slow")
+
+
 class FlakyDevice:
     """Proxy over NodeDevice failing selected ops with probability ``p``.
 
     Deterministic and seeded: the RNG is keyed on ``(seed, device index)``,
-    so a given (seed, p, ops) chaos schedule replays exactly for a fixed
-    per-device command sequence.  ``failures`` counts every injected fault;
-    ``failures_by_op`` breaks them down per command type.
+    so a given (seed, p, ops, mode) chaos schedule replays exactly for a
+    fixed per-device command sequence.  ``failures`` counts every injected
+    fault (``fail`` and ``hang`` modes); ``stalls`` counts ``slow``-mode
+    delays, which complete successfully.  Each counter has a per-op
+    breakdown (``failures_by_op`` / ``stalls_by_op``).
     """
 
     def __init__(self, inner: NodeDevice, p: float, seed: int = 0,
-                 ops: Sequence[str] = ("EXEC",)) -> None:
+                 ops: Sequence[str] = ("EXEC",), mode: str = "fail",
+                 hang_s: float = 0.25, slow_s: float = 0.05) -> None:
         bad = set(ops) - set(FAULT_OPS)
         if bad:
             raise ValueError(f"cannot inject faults on ops {sorted(bad)}; "
                              f"eligible: {FAULT_OPS}")
+        if mode not in FAULT_MODES:
+            raise ValueError(f"unknown fault mode {mode!r}; "
+                             f"eligible: {FAULT_MODES}")
         self._inner = inner
         self._p = p
         self._ops = frozenset(ops)
+        self._mode = mode
+        self._hang_s = hang_s
+        self._slow_s = slow_s
         self._rng = np.random.default_rng((seed, inner.index))
         self.failures = 0
         self.failures_by_op: Dict[str, int] = {}
+        self.stalls = 0
+        self.stalls_by_op: Dict[str, int] = {}
 
     def execute(self, cmd: Command, table, payload=None):
         if cmd.op in self._ops and self._rng.random() < self._p:
+            if self._mode == "slow":
+                self.stalls += 1
+                self.stalls_by_op[cmd.op] = self.stalls_by_op.get(cmd.op, 0) + 1
+                time.sleep(self._slow_s)
+                return self._inner.execute(cmd, table, payload)
             self.failures += 1
             self.failures_by_op[cmd.op] = self.failures_by_op.get(cmd.op, 0) + 1
+            if self._mode == "hang":
+                time.sleep(self._hang_s)
             raise DeviceFailure(
-                f"injected {cmd.op} failure on device {self._inner.index}"
+                f"injected {cmd.op} {self._mode} on device {self._inner.index}"
                 + (f" (kernel index {cmd.kernel_index})"
                    if cmd.op == "EXEC" else ""),
                 op=cmd.op, device=self._inner.index,
@@ -85,11 +114,13 @@ class FlakyDevice:
 
 def inject_flaky(pool, p: float, seed: int = 0,
                  devices: Optional[Sequence[int]] = None,
-                 ops: Sequence[str] = ("EXEC",)) -> None:
+                 ops: Sequence[str] = ("EXEC",), mode: str = "fail",
+                 hang_s: float = 0.25, slow_s: float = 0.05) -> None:
     """Wrap (some of) a pool's devices with failure injection, in place."""
     for i, d in enumerate(pool.devices):
         if devices is None or i in devices:
-            pool.devices[i] = FlakyDevice(d, p, seed, ops=ops)
+            pool.devices[i] = FlakyDevice(d, p, seed, ops=ops, mode=mode,
+                                          hang_s=hang_s, slow_s=slow_s)
 
 
 def with_retry(ex: TargetExecutor, kernel: str, device: int, maps: MapSpec, *,

@@ -1,0 +1,139 @@
+"""Straggler detection + hedged re-execution for the TaskGraph executor.
+
+"Detrimental task execution patterns in mainstream OpenMP runtimes"
+(PAPERS.md) shows that *stalled* tasks — not crashed ones — are the dominant
+way task-based runtimes lose their speedup: a single slow node serializes a
+whole wave.  The classic distributed-systems answer (MapReduce's backup
+tasks, Dean & Barroso's tail-at-scale hedging) is to launch a duplicate of a
+suspiciously-slow task on another machine and take whichever copy finishes
+first.
+
+:class:`StragglerDetector` is the policy half of that answer.  It watches
+each in-flight task's elapsed wall time against the
+:meth:`~repro.core.costmodel.CostModel.kernel_time` estimate the cost model
+has already accumulated for that kernel, and flags a task once it exceeds
+``k×`` the observed mean (never below ``grace_s`` — tiny kernels have noisy
+means).  :func:`~repro.core.taskgraph.run_graph` does the mechanism half:
+it launches the hedge on another healthy device, races the two copies, and
+strikes the loser's cost records through the speculation
+``discard_tag``/``rename_tag`` machinery — so results stay bit-identical
+(both copies compute the same pure function of the same inputs) and the
+modeled makespan counts each task exactly once no matter which copy won.
+
+Determinism: detection is time-based (a slow *wall clock* is the thing being
+detected), but every hedge is value-equivalent to its primary, so injected
+SLOW chaos perturbs traffic and hedge counts — never results.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+__all__ = ["StragglerDetector", "HedgeRecord"]
+
+
+@dataclass
+class HedgeRecord:
+    """One hedge launch, for the straggler/hedge report."""
+
+    task: str
+    kernel: str
+    primary_device: int
+    hedge_device: int
+    elapsed_s: float            # primary elapsed when the hedge launched
+    threshold_s: float
+    winner: Optional[str] = None  # "primary" | "hedge" | "failed"
+
+
+class StragglerDetector:
+    """Flags tasks exceeding ``k×`` their observed kernel duration.
+
+    ``cost`` is the pool's :class:`~repro.core.costmodel.CostModel`; the
+    threshold for a kernel is ``max(grace_s, k * kernel_time(kernel))`` and
+    only exists once ``min_observations`` regions of that kernel have
+    retired (a one-sample mean is usually a JIT-compile spike).  ``baseline``
+    optionally seeds per-kernel estimates (e.g. from a prior calibration or
+    reference run) used until the live cost model has enough observations.
+
+    ``max_hedges`` caps duplicated work per detector; ``poll_s`` is how
+    often the executor's join loop re-checks in-flight tasks (the detection
+    granularity).  All counters are thread-safe; a detector may be shared
+    across concurrent ``run_graph`` calls and its totals stay coherent.
+    """
+
+    def __init__(self, cost, *, k: float = 3.0, min_observations: int = 2,
+                 grace_s: float = 0.05, max_hedges: int = 8,
+                 poll_s: float = 0.01,
+                 baseline: Optional[Dict[str, float]] = None) -> None:
+        self.cost = cost
+        self.k = k
+        self.min_observations = min_observations
+        self.grace_s = grace_s
+        self.max_hedges = max_hedges
+        self.poll_s = poll_s
+        self.baseline = dict(baseline or {})
+        self._lock = threading.Lock()
+        self.records: List[HedgeRecord] = []
+        self.hedges_launched = 0
+        self.primary_wins = 0
+        self.hedge_wins = 0
+        self.hedge_failures = 0
+
+    # -- policy ---------------------------------------------------------------
+    def threshold(self, kernel: str) -> Optional[float]:
+        """Seconds after which a task of ``kernel`` counts as a straggler
+        (None = no usable estimate yet, never hedge)."""
+        est = self.cost.kernel_time(kernel)
+        if est is None or self.cost.kernel_observations(kernel) < self.min_observations:
+            est = self.baseline.get(kernel)
+        if est is None:
+            return None
+        return max(self.grace_s, self.k * est)
+
+    def should_hedge(self, kernel: str, elapsed_s: float) -> bool:
+        with self._lock:
+            if self.hedges_launched >= self.max_hedges:
+                return False
+        th = self.threshold(kernel)
+        return th is not None and elapsed_s > th
+
+    # -- bookkeeping (called by the executor) ---------------------------------
+    def note_launch(self, **kw) -> HedgeRecord:
+        """Record a hedge launch; returns the record to pass to
+        :meth:`note_winner` once the race resolves."""
+        record = HedgeRecord(**kw)
+        with self._lock:
+            self.hedges_launched += 1
+            self.records.append(record)
+        return record
+
+    def note_winner(self, record: HedgeRecord, winner: str) -> None:
+        record.winner = winner
+        with self._lock:
+            if winner == "primary":
+                self.primary_wins += 1
+            elif winner == "hedge":
+                self.hedge_wins += 1
+            else:
+                self.hedge_failures += 1
+
+    def report(self) -> Dict[str, object]:
+        """JSON-ready summary (the CI straggler/hedge report artifact)."""
+        with self._lock:
+            return {
+                "hedges_launched": self.hedges_launched,
+                "primary_wins": self.primary_wins,
+                "hedge_wins": self.hedge_wins,
+                "hedge_failures": self.hedge_failures,
+                "max_hedges": self.max_hedges,
+                "k": self.k,
+                "records": [
+                    {"task": r.task, "kernel": r.kernel,
+                     "primary_device": r.primary_device,
+                     "hedge_device": r.hedge_device,
+                     "elapsed_s": r.elapsed_s,
+                     "threshold_s": r.threshold_s,
+                     "winner": r.winner}
+                    for r in self.records],
+            }

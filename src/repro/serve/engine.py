@@ -37,6 +37,11 @@ class Request:
     rid: int
     prompt: Sequence[int]
     max_new_tokens: int = 32
+    # per-request deadline, measured from serve() entry; a request whose
+    # deadline has already passed when its wave would form is shed (its
+    # Result comes back timed_out with no tokens) instead of occupying a
+    # batch slot computing an answer nobody is waiting for.
+    deadline_ms: Optional[float] = None
 
 
 @dataclass
@@ -45,6 +50,7 @@ class Result:
     tokens: List[int] = field(default_factory=list)
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    timed_out: bool = False
 
 
 @dataclass(frozen=True)
@@ -135,19 +141,42 @@ class ServeEngine:
 
     # -- request loop -----------------------------------------------------------
     def serve(self, requests: Sequence[Request]) -> Dict[int, Result]:
-        """Wave-batch a request list; returns {rid: Result} + prints stats."""
+        """Wave-batch a request list; returns {rid: Result} + prints stats.
+
+        Requests carrying ``deadline_ms`` are load-shed: if a request's
+        deadline (measured from this call's start — queueing time counts)
+        has expired by the time its wave forms, it is dropped from the wave
+        and answered with a ``timed_out`` :class:`Result` instead of
+        stretching the wave's padded length and token budget for an answer
+        the caller has stopped waiting for.
+        """
         out: Dict[int, Result] = {}
         B = self.cfg.batch
-        waves = [requests[i:i + B] for i in range(0, len(requests), B)]
         new_tokens = 0
+        shed = 0
         t0 = time.perf_counter()
-        for wave in waves:
-            for res in self.run_wave(wave):
+        pending = list(requests)
+        waves = 0
+        while pending:
+            elapsed_ms = (time.perf_counter() - t0) * 1e3
+            live: List[Request] = []
+            while pending and len(live) < B:
+                r = pending.pop(0)
+                if r.deadline_ms is not None and elapsed_ms >= r.deadline_ms:
+                    out[r.rid] = Result(r.rid, timed_out=True)
+                    shed += 1
+                    continue
+                live.append(r)
+            if not live:
+                continue
+            waves += 1
+            for res in self.run_wave(live):
                 out[res.rid] = res
                 new_tokens += len(res.tokens)
         wall = time.perf_counter() - t0
         if wall > 0:
-            print(f"[serve] {len(requests)} requests, {len(waves)} waves, "
+            extra = f", {shed} shed" if shed else ""
+            print(f"[serve] {len(requests)} requests, {waves} waves{extra}, "
                   f"{new_tokens} new tokens, {new_tokens / wall:.1f} tok/s",
                   flush=True)
         return out

@@ -115,3 +115,181 @@ def test_prefetcher_orders_and_closes():
     np.testing.assert_array_equal(np.asarray(got[0]), src.batch(2)["tokens"])
     np.testing.assert_array_equal(np.asarray(got[2]), src.batch(4)["tokens"])
     pf.close()
+
+
+# ---------------------------------------------------------------------------
+# prefetcher shutdown: no leaked producer threads
+# ---------------------------------------------------------------------------
+def test_prefetcher_close_stops_blocked_producer():
+    """close() must stop a producer blocked on a full queue — including one
+    blocked trying to put the DONE sentinel — within its deadline."""
+    from repro.data import Prefetcher
+    cfg = DataConfig(vocab=11, seq=4, global_batch=2)
+    for max_steps in (None, 1):          # blocked on a batch / on _DONE
+        pf = Prefetcher(SyntheticLM(cfg, 0, 1), depth=1, max_steps=max_steps)
+        while pf._q.qsize() < 1:         # let the producer fill the queue
+            pass
+        pf.close(timeout=2.0)
+        assert not pf._thread.is_alive()
+
+
+def test_prefetcher_close_raises_on_wedged_producer():
+    """A producer that cannot be joined by the deadline raises instead of
+    silently leaking the thread."""
+    import time as _time
+    from repro.data import Prefetcher
+
+    class WedgedLM(SyntheticLM):
+        def batch(self, step):
+            _time.sleep(1.0)             # uninterruptible mid-batch stall
+            return super().batch(step)
+
+    cfg = DataConfig(vocab=11, seq=4, global_batch=2)
+    pf = Prefetcher(WedgedLM(cfg, 0, 1), depth=1)
+    with pytest.raises(RuntimeError, match="failed to stop"):
+        pf.close(timeout=0.2)
+    pf._thread.join(timeout=3.0)         # it does exit once the stall ends
+    assert not pf._thread.is_alive()
+
+
+# ---------------------------------------------------------------------------
+# resumable TaskGraph runs (straggler-proofing tentpole)
+# ---------------------------------------------------------------------------
+from repro.core import (ClusterRuntime, DagTask, GraphCheckpoint,
+                        GraphInterrupted, KernelTable, MapSpec, RuntimeConfig,
+                        load_graph_checkpoint)
+
+
+def _graph_table():
+    t = KernelTable()
+    t.register("ck_combine", lambda x: {"out": x @ x * 1e-2 + 1.0})
+    return t
+
+
+def _graph_tasks(length=5, B=8):
+    init = jnp.arange(B * B, dtype=jnp.float32).reshape(B, B) * 1e-2
+    sds = jax.ShapeDtypeStruct((B, B), jnp.float32)
+    tasks = [DagTask("p0", "ck_combine", (),
+                     lambda dv: MapSpec(to={"x": init}, from_={"out": sds}))]
+    for w in range(1, length):
+        tasks.append(DagTask(
+            f"p{w}", "ck_combine", (f"p{w-1}",),
+            (lambda w=w: lambda dv: MapSpec(to={"x": dv[f"p{w-1}"]},
+                                            from_={"out": sds}))()))
+    return tasks
+
+
+@pytest.mark.parametrize("peer", [False, True])
+def test_graph_checkpoint_halt_resume_bit_identical(tmp_path, peer):
+    """Kill at wave k (halt_after), resume on a FRESH pool: the final
+    results are bit-identical and the completed prefix is NOT re-executed."""
+    ckdir = str(tmp_path / "ck")
+    rt = ClusterRuntime(RuntimeConfig(n_virtual=2), table=_graph_table())
+    with pytest.raises(GraphInterrupted):
+        rt.wavefront_offload(_graph_tasks(), nowait=True, peer=peer,
+                             tag="ckg", checkpoint=GraphCheckpoint(
+                                 ckdir, every_waves=1, halt_after=2))
+    rt.shutdown()
+
+    vals, extra = load_graph_checkpoint(ckdir)
+    assert extra["completed"] == ["p0", "p1"] and extra["wave"] == 1
+    assert sorted(vals) == ["p0", "p1"]
+
+    rt2 = ClusterRuntime(RuntimeConfig(n_virtual=2), table=_graph_table())
+    res = rt2.wavefront_offload(_graph_tasks(), nowait=True, peer=peer,
+                                tag="ckg", resume_from=ckdir)
+    execs = sum(1 for tr in rt2.pool.stream_traces
+                for c in tr if c.op == "EXEC")
+    assert execs == 3                    # p2..p4 only; the prefix is skipped
+    rt2.shutdown()
+
+    rt3 = ClusterRuntime(RuntimeConfig(n_virtual=2), table=_graph_table())
+    ref = rt3.wavefront_offload(_graph_tasks(), nowait=True, peer=peer,
+                                tag="ckg")
+    for k in ref:
+        assert np.array_equal(np.asarray(res[k]), np.asarray(ref[k])), k
+    rt3.shutdown()
+
+
+def test_graph_checkpoint_retention_and_extra(tmp_path):
+    """keep=N prunes old steps; the manifest carries the resume metadata."""
+    ckdir = str(tmp_path / "ck")
+    rt = ClusterRuntime(RuntimeConfig(n_virtual=2), table=_graph_table())
+    rt.wavefront_offload(_graph_tasks(), nowait=True, tag="ckg",
+                         checkpoint=GraphCheckpoint(ckdir, every_waves=1,
+                                                    keep=2))
+    rt.shutdown()
+    steps = sorted(d for d in os.listdir(ckdir) if d.startswith("step_"))
+    assert len(steps) == 2               # 5 waves saved, 2 kept
+    vals, extra = load_graph_checkpoint(ckdir)
+    assert extra["graph_tag"] == "ckg" and extra["out_name"] == "out"
+    assert sorted(vals) == sorted(extra["completed"]) == [f"p{i}"
+                                                          for i in range(5)]
+
+
+def test_graph_checkpoint_resume_rejects_unknown_task(tmp_path):
+    """A checkpoint naming a task the graph does not contain is a different
+    graph — resuming from it must fail loudly, not silently mis-skip."""
+    ckdir = str(tmp_path / "ck")
+    rt = ClusterRuntime(RuntimeConfig(n_virtual=2), table=_graph_table())
+    with pytest.raises(GraphInterrupted):
+        rt.wavefront_offload(_graph_tasks(length=3), nowait=True, tag="other",
+                             checkpoint=GraphCheckpoint(ckdir, halt_after=1))
+    rt.shutdown()
+    t = _graph_table()
+    t.register("src2", lambda s: {"out": s * jnp.ones((4, 4), jnp.float32)})
+    rt2 = ClusterRuntime(RuntimeConfig(n_virtual=2), table=t)
+    sds = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    other = [DagTask("q0", "src2", (),
+                     lambda dv: MapSpec(to={"s": jnp.float32(1)},
+                                        from_={"out": sds}))]
+    try:
+        with pytest.raises(ValueError, match="not in this graph"):
+            rt2.wavefront_offload(other, nowait=True, resume_from=ckdir)
+    finally:
+        rt2.shutdown()
+
+
+def test_graph_checkpoint_fresh_process_resume(tmp_path):
+    """The round trip the feature exists for: checkpoint in THIS process,
+    resume in a brand-new interpreter, bitwise-equal final output."""
+    import subprocess
+    import sys
+    ckdir = str(tmp_path / "ck")
+    rt = ClusterRuntime(RuntimeConfig(n_virtual=2), table=_graph_table())
+    with pytest.raises(GraphInterrupted):
+        rt.wavefront_offload(_graph_tasks(), nowait=True, tag="ckg",
+                             checkpoint=GraphCheckpoint(ckdir, every_waves=1,
+                                                        halt_after=2))
+    rt.shutdown()
+    rt2 = ClusterRuntime(RuntimeConfig(n_virtual=2), table=_graph_table())
+    ref = rt2.wavefront_offload(_graph_tasks(), nowait=True, tag="ckg")
+    rt2.shutdown()
+
+    child = f"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import (ClusterRuntime, DagTask, KernelTable, MapSpec,
+                        RuntimeConfig)
+t = KernelTable(); t.register("ck_combine", lambda x: {{"out": x @ x * 1e-2 + 1.0}})
+init = jnp.arange(64, dtype=jnp.float32).reshape(8, 8) * 1e-2
+sds = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+tasks = [DagTask("p0", "ck_combine", (),
+                 lambda dv: MapSpec(to={{"x": init}}, from_={{"out": sds}}))]
+for w in range(1, 5):
+    tasks.append(DagTask(f"p{{w}}", "ck_combine", (f"p{{w-1}}",),
+        (lambda w=w: lambda dv: MapSpec(to={{"x": dv[f"p{{w-1}}"]}},
+                                        from_={{"out": sds}}))()))
+rt = ClusterRuntime(RuntimeConfig(n_virtual=2), table=t)
+res = rt.wavefront_offload(tasks, nowait=True, tag="ckg",
+                           resume_from={ckdir!r})
+print(np.asarray(res["p4"], np.float32).tobytes().hex())
+rt.shutdown()
+"""
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src)
+    out = subprocess.run([sys.executable, "-c", child], env=env,
+                         capture_output=True, text=True, timeout=240)
+    assert out.returncode == 0, out.stderr
+    got_hex = out.stdout.strip().splitlines()[-1]
+    assert got_hex == np.asarray(ref["p4"], np.float32).tobytes().hex()

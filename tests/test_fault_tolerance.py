@@ -453,3 +453,285 @@ def test_health_registry_threshold_and_fallback():
     # a rejoined (or replaced) device gets a clean slate
     reg.mark_healthy(1)
     assert reg.failures(1) == 0 and 1 not in reg.blacklist
+
+
+# ---------------------------------------------------------------------------
+# gray failures: HANG and SLOW under deadlines + hedging (straggler tentpole)
+# ---------------------------------------------------------------------------
+from repro.core import StragglerTimeout
+from repro.ft import FAULT_MODES, StragglerDetector
+
+
+def _run_gray_chaos(graph, table, *, policy, peer, p, seed, mode,
+                    ops=("EXEC",), n_dev=3, deadline_s=None, stragglers=None,
+                    max_retries=60, hang_s=0.4, slow_s=0.3):
+    """One gray-failure chaos run: fresh pool with a command deadline,
+    seeded HANG/SLOW injection, optional hedging."""
+    pool = DevicePool.virtual(n_dev, table=table, deadline_s=deadline_s)
+    ex = TargetExecutor(pool)
+    if p > 0:
+        inject_flaky(pool, p=p, seed=seed, ops=ops, mode=mode,
+                     hang_s=hang_s, slow_s=slow_s)
+    res = run_graph(ex, graph, policy=policy, peer=peer,
+                    max_retries=max_retries, stragglers=stragglers)
+    return {k: np.asarray(v) for k, v in res.items()}, pool
+
+
+def test_chaos_hang_bit_identical():
+    """Seeded HANG injection with a command deadline: every policy, both
+    edge routings, p ∈ {0.05, 0.2} — the hung commands blow the deadline,
+    are classified as straggler faults, recovered through the same
+    re-place/reroute/heal machinery, and the answer stays bitwise equal."""
+    table = _table()
+    graph = _diamond()
+    ref, _, _, _ = _run_chaos(graph, table, policy="round-robin", peer=False,
+                              p=0.0, seed=0, ops=())
+    for peer in (False, True):
+        for policy in POLICIES:
+            for p in (0.05, 0.2):
+                vals, pool = _run_gray_chaos(
+                    graph, table, policy=policy, peer=peer, p=p,
+                    seed=101, mode="hang", deadline_s=0.15, hang_s=0.4)
+                for k in ref:
+                    assert np.array_equal(ref[k], vals[k]), (policy, peer, p, k)
+
+
+def test_hang_deadline_classified_as_straggler():
+    """A hung EXEC surfaces as StragglerTimeout — a DeviceFailure subclass
+    counted per-op in pool.straggler_timeouts — not as a stuck run."""
+    table = _table()
+    graph = _diamond()
+    vals, pool = _run_gray_chaos(graph, table, policy="round-robin",
+                                 peer=False, p=0.6, seed=3, mode="hang",
+                                 deadline_s=0.1, hang_s=0.5)
+    assert pool.straggler_timeouts.get("EXEC", 0) >= 1
+    assert issubclass(StragglerTimeout, DeviceFailure)
+    ref, _, _, _ = _run_chaos(graph, table, policy="round-robin", peer=False,
+                              p=0.0, seed=0, ops=())
+    for k in ref:
+        assert np.array_equal(ref[k], vals[k]), k
+
+
+def test_slow_mode_counts_stalls_not_failures():
+    """SLOW is a straggler, not a fault: the command completes correctly,
+    so it must not mark the device or enter the blacklist."""
+    table = _table()
+    graph = _diamond()
+    vals, pool = _run_gray_chaos(graph, table, policy="locality", peer=False,
+                                 p=1.0, seed=3, mode="slow", slow_s=0.05)
+    assert sum(getattr(d, "stalls", 0) for d in pool.devices) > 0
+    assert sum(getattr(d, "failures", 0) for d in pool.devices) == 0
+    assert not pool.health.blacklist
+    ref, _, _, _ = _run_chaos(graph, table, policy="round-robin", peer=False,
+                              p=0.0, seed=0, ops=())
+    for k in ref:
+        assert np.array_equal(ref[k], vals[k]), k
+
+
+def test_slow_device_hedged_duplicate_wins_bit_identical():
+    """A persistently slow device's tasks are hedged onto a healthy peer;
+    the duplicate wins, the loser's records are struck, and the answer is
+    bitwise equal — in both edge routings."""
+    table = _table()
+    graph = _diamond()
+    ref, _, _, _ = _run_chaos(graph, table, policy="round-robin", peer=False,
+                              p=0.0, seed=0, ops=())
+    for peer in (False, True):
+        pool = DevicePool.virtual(3, table=table)
+        ex = TargetExecutor(pool)
+        pool.devices[0] = FlakyDevice(pool.devices[0], p=1.0, seed=11,
+                                      ops=("EXEC",), mode="slow", slow_s=0.5)
+        det = StragglerDetector(pool.cost, k=3.0, grace_s=0.05, poll_s=0.01,
+                                baseline={k: 0.01 for k in
+                                          ("src", "combine", "combine2")})
+        res = run_graph(ex, graph, policy="round-robin", peer=peer,
+                        stragglers=det)
+        rep = det.report()
+        assert rep["hedge_wins"] >= 1, rep
+        assert rep["hedges_launched"] <= det.max_hedges
+        for k in ref:
+            assert np.array_equal(ref[k], np.asarray(res[k])), (peer, k)
+        # loser accounting: each task's compute counted exactly once
+        assert len(pool.cost.compute) == len(ref)
+
+
+def test_no_hedges_and_no_overhead_at_p0():
+    """With a detector attached but nothing slow, no hedges launch and the
+    traffic is byte-identical to a detector-free run."""
+    table = _table()
+    graph = _diamond()
+
+    def run(det):
+        pool = DevicePool.virtual(3, table=table)
+        ex = TargetExecutor(pool)
+        res = run_graph(ex, graph, policy="heft", peer=True, stragglers=det)
+        return ({k: np.asarray(v) for k, v in res.items()},
+                pool.cost.summary())
+
+    ref, ref_stats = run(None)
+    det = StragglerDetector(DevicePool.virtual(1, table=table).cost,
+                            k=3.0, grace_s=10.0)   # huge grace: never fires
+    det.cost = None                                # must not even be read
+    pool = DevicePool.virtual(3, table=table)
+    det.cost = pool.cost
+    ex = TargetExecutor(pool)
+    res = run_graph(ex, graph, policy="heft", peer=True, stragglers=det)
+    assert det.report()["hedges_launched"] == 0
+    stats = pool.cost.summary()
+    for k in ref:
+        assert np.array_equal(ref[k], np.asarray(res[k])), k
+    for key in ("bytes_to", "bytes_from", "bytes_peer"):
+        assert stats[key] == ref_stats[key], key
+
+
+def test_chaos_sparselu_slow_hedging_bounds_makespan(sparselu):
+    """Acceptance: sparselu at D=4 with a persistently slow device — the
+    hedged run's modeled makespan stays within 2× the fault-free run
+    (the loser's stalled records are struck, so the model counts each
+    task once, at its fast copy's cost)."""
+    table, graph = sparselu
+    pool0 = DevicePool.virtual(4, table=table)
+    ref = run_graph(TargetExecutor(pool0), graph, policy="locality",
+                    peer=True)
+    ref_vals = {k: np.asarray(v) for k, v in ref.items()}
+    ref_makespan = pool0.cost.makespan()
+    baseline = {k: pool0.cost.kernel_time(k)
+                for k in ("lu0", "fwd", "bdiv", "bmod")
+                if pool0.cost.kernel_time(k)}
+
+    pool = DevicePool.virtual(4, table=table)
+    ex = TargetExecutor(pool)
+    pool.devices[0] = FlakyDevice(pool.devices[0], p=1.0, seed=5,
+                                  ops=("EXEC",), mode="slow", slow_s=0.3)
+    det = StragglerDetector(pool.cost, k=4.0, grace_s=0.05, poll_s=0.01,
+                            max_hedges=64, baseline=baseline)
+    vals = run_graph(ex, graph, policy="locality", peer=True, stragglers=det)
+    for k in ref_vals:
+        assert np.array_equal(ref_vals[k], np.asarray(vals[k])), k
+    rep = det.report()
+    assert rep["hedge_wins"] >= 1, rep
+    assert pool.cost.makespan() <= 2.0 * ref_makespan, \
+        (pool.cost.makespan(), ref_makespan, rep)
+
+
+# ---------------------------------------------------------------------------
+# blacklist probation: rejoin after clean waves, capped (satellite)
+# ---------------------------------------------------------------------------
+def test_probation_rejoins_after_clean_waves_then_caps():
+    reg = HealthRegistry(max_failures=2, probation_waves=2, max_rejoins=1)
+    reg.mark_failed(0), reg.mark_failed(0)
+    assert 0 in reg.blacklist
+    assert reg.tick_wave() == []         # the faulting wave itself is dirty
+    assert reg.tick_wave() == []         # 1 clean wave: still out
+    assert reg.tick_wave() == [0]        # 2 clean waves: probationary rejoin
+    assert 0 not in reg.blacklist
+    reg.mark_failed(0)                   # one more strike re-blacklists:
+    assert 0 in reg.blacklist            # rejoined at max_failures - 1
+    for _ in range(10):                  # rejoin budget spent: stays out
+        assert reg.tick_wave() == []
+    assert 0 in reg.blacklist
+
+
+def test_probation_dirty_wave_resets_the_clock():
+    reg = HealthRegistry(max_failures=1, probation_waves=2)
+    reg.mark_failed(0)
+    assert reg.tick_wave() == []
+    reg.mark_failed(0)                   # fault during probation wave 2
+    assert reg.tick_wave() == []         # clock reset, not rejoined
+    assert reg.tick_wave() == []
+    assert reg.tick_wave() == [0]
+
+
+def test_probation_default_off():
+    reg = HealthRegistry(max_failures=1)
+    reg.mark_failed(0)
+    for _ in range(50):
+        assert reg.tick_wave() == []
+    assert 0 in reg.blacklist
+
+
+def test_probation_rejoined_device_receives_work():
+    """Integration: a blacklisted device rejoins at a wave boundary of a
+    live run and the policy actually places tasks on it again."""
+    table = _table()
+    graph = TaskGraph.from_tasks(_random_tasks(17, 9))
+    ref = run_graph(TargetExecutor(DevicePool.virtual(2, table=table)),
+                    graph, policy="round-robin")
+    pool = DevicePool.virtual(2, table=table)
+    pool.health = HealthRegistry(max_failures=2, probation_waves=1)
+    pool.health.mark_failed(0), pool.health.mark_failed(0)
+    assert 0 in pool.health.blacklist
+    ex = TargetExecutor(pool)
+    vals = run_graph(ex, graph, policy="round-robin")
+    assert 0 not in pool.health.blacklist          # rejoined mid-run
+    assert sum(1 for c in pool.stream_traces[0] if c.op == "EXEC") > 0
+    for k in ref:
+        assert np.array_equal(np.asarray(ref[k]), np.asarray(vals[k])), k
+
+
+# ---------------------------------------------------------------------------
+# transport: deadlines + seeded exponential backoff (satellite)
+# ---------------------------------------------------------------------------
+def test_transport_op_timeout_falls_back_to_funnel():
+    """retries=0 + op_timeout_s: a hung SEND times out, is counted, and the
+    edge reroutes through the funnel; the orphaned command settles later
+    without poisoning an innocent sync."""
+    import time as _time
+    table = _table()
+    pool = DevicePool.virtual(2, table=table)
+    pool.devices[0] = FlakyDevice(pool.devices[0], p=1.0, seed=5,
+                                  ops=("SEND",), mode="hang", hang_s=0.5)
+    tr = PeerTransport(retries=0, op_timeout_s=0.1)
+    h0 = pool.alloc(0, (8,), jnp.float32, tag="src")
+    pool.transfer_to(0, h0, jnp.arange(8, dtype=jnp.float32))
+    h1 = pool.alloc(1, (8,), jnp.float32, tag="dst")
+    pool.transfer_to(1, h1, jnp.zeros((8,), jnp.float32))
+    fut = tr.sendrecv(pool, 0, h0, 1, h1, tag="edge")
+    if fut is not None and hasattr(fut, "result"):
+        fut.result()
+    got = pool.transfer_from(1, h1, tag="chk")
+    assert tr.timeouts >= 1 and tr.fallbacks == 1
+    assert np.array_equal(np.asarray(got), np.arange(8, dtype=np.float32))
+    _time.sleep(0.7)                     # orphan settles; callback absorbs
+    pool.sync()                          # raises nothing
+
+
+def test_transport_backoff_is_seeded_and_deterministic():
+    """Retries back off exponentially with seeded jitter: two transports
+    with the same seed accrue identical backoff, a different seed differs."""
+    table = _table()
+
+    def run(seed):
+        pool = DevicePool.virtual(2, table=table)
+        inject_flaky(pool, p=1.0, seed=1, ops=("SEND",))
+        tr = PeerTransport(retries=3, backoff_base_s=1e-4, seed=seed)
+        h0 = pool.alloc(0, (8,), jnp.float32, tag="src")
+        pool.transfer_to(0, h0, jnp.arange(8, dtype=jnp.float32))
+        h1 = pool.alloc(1, (8,), jnp.float32, tag="dst")
+        pool.transfer_to(1, h1, jnp.zeros((8,), jnp.float32))
+        fut = tr.sendrecv(pool, 0, h0, 1, h1, tag="edge")
+        if fut is not None and hasattr(fut, "result"):
+            fut.result()
+        got = pool.transfer_from(1, h1, tag="chk")
+        assert np.array_equal(np.asarray(got), np.arange(8, dtype=np.float32))
+        return tr
+    a, b, c = run(42), run(42), run(7)
+    assert a.backoffs == b.backoffs == 3         # one per retry
+    assert a.backoff_s > 0 and a.backoff_s == b.backoff_s
+    assert c.backoff_s != a.backoff_s
+    assert a.fallbacks == 1                      # still reroutes in the end
+
+
+def test_runtime_config_wires_deadlines_and_backoff():
+    cfg = RuntimeConfig(n_virtual=2, comm_mode="direct",
+                        command_deadline_s=5.0, transport_retries=1,
+                        transport_op_timeout_s=2.0,
+                        transport_backoff_seed=9)
+    rt = ClusterRuntime(cfg, table=_table())
+    try:
+        assert rt.pool.deadline_s == 5.0
+        assert isinstance(rt.transport, PeerTransport)
+        assert rt.transport.op_timeout_s == 2.0
+        assert rt.transport.retries == 1
+    finally:
+        rt.shutdown()

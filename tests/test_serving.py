@@ -88,3 +88,37 @@ def test_ssm_cache_is_constant_size():
     long_ = model.make_cache(None, batch_size=2, max_len=1 << 19)
     sizes = lambda c: [x.shape for x in jax.tree.leaves(c)]
     assert sizes(short) == sizes(long_)
+
+
+def test_deadline_expired_request_is_shed():
+    """A request whose deadline_ms has already passed when its wave forms
+    is answered with a timed-out Result (no tokens) and never occupies a
+    batch slot; undeadlined requests in the same submission are unaffected."""
+    cfg = get_smoke_config("gemma-7b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, ServeConfig(batch=2, max_len=64))
+    reqs = [Request(0, [1, 2, 3, 4], 6),
+            Request(1, [1, 2, 3, 4], 6, deadline_ms=0.0),   # expired on entry
+            Request(2, [1, 2, 3, 4], 6, deadline_ms=60_000.0)]
+    out = eng.serve(reqs)
+    assert sorted(out) == [0, 1, 2]
+    assert out[1].timed_out and out[1].tokens == []
+    assert not out[0].timed_out and len(out[0].tokens) == 6
+    assert not out[2].timed_out and len(out[2].tokens) == 6
+    # shedding preserves the answer: same prompt without a deadline
+    assert out[2].tokens == out[0].tokens
+
+
+def test_deadline_mid_batch_shed_later_wave():
+    """Deadlines are re-checked at every wave boundary: a tight-deadline
+    request queued behind a full first wave is shed when its turn comes."""
+    cfg = get_smoke_config("gemma-7b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, ServeConfig(batch=2, max_len=64))
+    reqs = [Request(0, [1, 2, 3], 6), Request(1, [1, 2, 3], 6),
+            Request(2, [1, 2, 3], 6, deadline_ms=1e-3)]   # behind wave 1
+    out = eng.serve(reqs)
+    assert out[2].timed_out and out[2].tokens == []
+    assert len(out[0].tokens) == 6 and len(out[1].tokens) == 6
