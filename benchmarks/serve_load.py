@@ -1,0 +1,292 @@
+"""Serving under open-loop Poisson load: continuous batching vs fixed waves,
+and tail-aware placement vs round-robin.
+
+Two sections, each driven by the same seeded open-loop generator (arrivals
+are Poisson — a request arrives whether or not the engine is ready, so
+queueing delay counts against latency, unlike closed-loop drivers that
+politely wait):
+
+* **continuous_vs_wave** (local engine): the same request trace served by
+  the seed's fixed-wave loop and by the continuous batcher.  The arrival
+  rate is calibrated ~1.5x above the wave engine's measured service rate,
+  so the wave queue grows while continuous slot-reuse keeps up.  Asserted:
+  continuous sustains MORE tokens/sec AND a LOWER p99 latency, with
+  bit-identical greedy tokens per request.
+
+* **slo_vs_roundrobin** (pool mode, capacity-capped caches): the trace has
+  bimodal token budgets; round-robin places by admission parity and drifts
+  into unbalanced per-device queues once the short sequences retire (every
+  sequence homed on the deep device then pays its queue depth every step —
+  the deep queue IS the p99), while :class:`SloPlacement` admits onto the
+  shallowest backlog and migrates a hot cache off the tail
+  (``migrate_every``).  Device capacity is capped so a balanced split of
+  the batch fits but the pile-up does not — round-robin's deep device also
+  pays LRU spill/refetch round-trips.  Asserted: slo's p99 is lower than
+  round-robin's, with bit-identical tokens and the cap binding (live
+  spill/refetch traffic somewhere in the run).
+
+``--json PATH`` writes the sections to ``artifacts/bench/BENCH_serve.json``
+(the serving-perf artifact CI tracks commit over commit).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from repro.configs.registry import get_smoke_config
+from repro.core import ClusterRuntime, RuntimeConfig
+from repro.models.model import Model
+from repro.serve import Request, ServeConfig, ServeEngine
+
+ARCH = "gemma-7b"
+MAX_LEN = 64
+
+
+def _model(seed: int = 0):
+    cfg = get_smoke_config(ARCH).replace(remat="none")
+    model = Model(cfg)
+    return model, model.init(jax.random.PRNGKey(seed))
+
+
+def _trace(model, n: int, seed: int, prompt_len: int = 8,
+           long_every: int = 3, long_budget: int = 24) -> List[Request]:
+    """Bimodal budgets (short interactive + long generations) — the mix
+    that punishes head-of-line blocking and unbalanced queues."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        budget = long_budget if i % long_every == 0 \
+            else int(rng.integers(3, 6))
+        prompt = [int(t) for t in rng.integers(1, model.cfg.vocab, prompt_len)]
+        reqs.append(Request(i, prompt, max_new_tokens=budget))
+    return reqs
+
+
+def _arrivals(n: int, rate_per_s: float, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_per_s, n))
+
+
+def _metrics(lat_s: Dict[int, float], results, wall_s: float) -> Dict:
+    lats = np.asarray(sorted(lat_s.values()))
+    toks = sum(len(r.tokens) for r in results.values())
+    return {"requests": len(results), "tokens": toks, "wall_s": wall_s,
+            "tokens_per_s": toks / wall_s,
+            "p50_ms": float(np.percentile(lats, 50) * 1e3),
+            "p99_ms": float(np.percentile(lats, 99) * 1e3)}
+
+
+def open_loop_continuous(engine: ServeEngine, reqs, arrivals):
+    """Drive the streaming API: submit at each arrival, step the engine."""
+    n = len(reqs)
+    done: Dict[int, object] = {}
+    lat: Dict[int, float] = {}
+    t0 = time.perf_counter()
+    engine._t0 = t0
+    i = 0
+    while len(done) < n:
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            engine.submit(reqs[i])
+            i += 1
+        if not engine.has_work:
+            time.sleep(max(0.0, arrivals[i] - (time.perf_counter() - t0)))
+            continue
+        for res in engine.step():
+            done[res.rid] = res
+            lat[res.rid] = (time.perf_counter() - t0) - arrivals[res.rid]
+    wall = time.perf_counter() - t0
+    engine._t0 = None
+    return done, _metrics(lat, done, wall)
+
+
+def open_loop_wave(engine: ServeEngine, reqs, arrivals):
+    """The baseline under the same arrivals: form a wave from whatever has
+    arrived (≤B), run it to completion, repeat.  Late arrivals wait out the
+    whole in-flight wave — the head-of-line cost the continuous batcher
+    removes."""
+    n = len(reqs)
+    B = engine.cfg.batch
+    done: Dict[int, object] = {}
+    lat: Dict[int, float] = {}
+    queue: List[Request] = []
+    t0 = time.perf_counter()
+    i = 0
+    while len(done) < n:
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            queue.append(reqs[i])
+            i += 1
+        if not queue:
+            time.sleep(max(0.0, arrivals[i] - (time.perf_counter() - t0)))
+            continue
+        live, queue = queue[:B], queue[B:]
+        for res in engine.run_wave(live):
+            done[res.rid] = res
+            lat[res.rid] = (time.perf_counter() - t0) - arrivals[res.rid]
+    wall = time.perf_counter() - t0
+    return done, _metrics(lat, done, wall)
+
+
+def _warm_and_rate(engine: ServeEngine, model, n_warm: int = 4) -> float:
+    """Compile the step shapes, then measure the engine's warm service
+    rate (requests/sec) on a second closed-loop burst — the first pass is
+    compile-dominated and would wildly under-estimate capacity."""
+    warm = _trace(model, n_warm, seed=99)
+    rate = 0.0
+    for rep in range(2):
+        t0 = time.perf_counter()
+        engine.serve([Request(1000 + 100 * rep + r.rid, r.prompt,
+                              r.max_new_tokens) for r in warm])
+        rate = n_warm / (time.perf_counter() - t0)
+    return rate
+
+
+def run_continuous_vs_wave(n: int = 24, batch: int = 4, seed: int = 0) -> Dict:
+    model, params = _model()
+    reqs = _trace(model, n, seed=seed)
+
+    wave = ServeEngine(model, params,
+                       ServeConfig(batch=batch, max_len=MAX_LEN, mode="wave"))
+    cont = ServeEngine(model, params,
+                       ServeConfig(batch=batch, max_len=MAX_LEN))
+    wave_rate = _warm_and_rate(wave, model)
+    _warm_and_rate(cont, model)
+    # ~1.5x above the wave engine's capacity: its queue must grow
+    arrivals = _arrivals(n, 1.5 * wave_rate, seed=seed + 1)
+
+    done_w, m_w = open_loop_wave(wave, reqs, arrivals)
+    done_c, m_c = open_loop_continuous(cont, reqs, arrivals)
+
+    identical = all(done_c[r.rid].tokens == done_w[r.rid].tokens
+                    for r in reqs)
+    assert identical, "continuous tokens diverge from the wave baseline"
+    assert m_c["tokens_per_s"] > m_w["tokens_per_s"], \
+        (f"continuous must sustain more tokens/sec than waves "
+         f"({m_c['tokens_per_s']:.1f} vs {m_w['tokens_per_s']:.1f})")
+    assert m_c["p99_ms"] < m_w["p99_ms"], \
+        (f"continuous must cut p99 latency vs waves "
+         f"({m_c['p99_ms']:.0f}ms vs {m_w['p99_ms']:.0f}ms)")
+    return {"wave": m_w, "continuous": m_c,
+            "arrival_rate_per_s": 1.5 * wave_rate,
+            "speedup_tps": m_c["tokens_per_s"] / m_w["tokens_per_s"],
+            "p99_ratio": m_c["p99_ms"] / m_w["p99_ms"],
+            "tokens_identical": identical}
+
+
+def _capacity_bytes(model, params, caches: float = 3.5) -> int:
+    """Device capacity: weights + ~`caches` sequence caches — a balanced
+    split of the batch fits, an unbalanced pile-up spills."""
+    import jax.numpy as jnp
+    eng = ServeEngine(model, params, ServeConfig(batch=1, max_len=MAX_LEN))
+    tpl = eng._cache_struct(1)
+    cache_b = sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+                  for s in jax.tree.leaves(tpl))
+    param_b = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(params))
+    return param_b + int(caches * cache_b)
+
+
+def run_slo_vs_roundrobin(n: int = 30, batch: int = 10, n_dev: int = 2,
+                          seed: int = 3, reps: int = 2) -> Dict:
+    model, params = _model()
+    # every long lands on an even rid: round-robin's parity placement homes
+    # ALL of them on device 0 once the shorts flush through
+    reqs = _trace(model, n, seed=seed, long_every=2, long_budget=40)
+    cap = _capacity_bytes(model, params, caches=batch / n_dev + 0.5)
+    out: Dict[str, Dict] = {}
+    tokens: Dict[str, Dict] = {}
+    rate = None
+    for policy, migrate in (("round-robin", 0), ("slo", 2)):
+        rt = ClusterRuntime(RuntimeConfig(n_virtual=n_dev,
+                                          device_capacity_bytes=cap))
+        try:
+            eng = ServeEngine(
+                model, params,
+                ServeConfig(batch=batch, max_len=MAX_LEN,
+                            migrate_every=migrate),
+                runtime=rt, policy=policy)
+            svc = _warm_and_rate(eng, model)
+            if rate is None:
+                rate = 1.3 * svc
+            arrivals = _arrivals(n, rate, seed=seed + 1)
+            # best-of-reps: scheduler jitter on a sub-second run can hide
+            # the structural gap; the minimum p99 is the stable signal
+            best = None
+            for _ in range(reps):
+                done, m = open_loop_continuous(eng, reqs, arrivals)
+                if best is None or m["p99_ms"] < best[1]["p99_ms"]:
+                    best = (done, m)
+            done, m = best
+            stats = [rt.pool.present[d].stats() for d in range(n_dev)]
+            m["migrations"] = eng.migrations
+            m["evictions"] = sum(s["evictions"] for s in stats)
+            m["refetches"] = sum(s["refetches"] for s in stats)
+            out[policy] = m
+            tokens[policy] = {r.rid: done[r.rid].tokens for r in reqs}
+        finally:
+            rt.shutdown()
+    identical = tokens["slo"] == tokens["round-robin"]
+    assert identical, "placement policy changed the decoded tokens"
+    spills = sum(out[p]["evictions"] + out[p]["refetches"] for p in out)
+    assert spills > 0, "capacity cap did not exercise the spill/refetch path"
+    assert out["slo"]["p99_ms"] < out["round-robin"]["p99_ms"], \
+        (f"SloPlacement must beat round-robin on p99 "
+         f"({out['slo']['p99_ms']:.0f}ms vs "
+         f"{out['round-robin']['p99_ms']:.0f}ms)")
+    return {"round-robin": out["round-robin"], "slo": out["slo"],
+            "arrival_rate_per_s": rate,
+            "p99_ratio": out["slo"]["p99_ms"] / out["round-robin"]["p99_ms"],
+            "tokens_identical": identical}
+
+
+def _render(title: str, rows: Dict[str, Dict]) -> str:
+    out = [f"## {title}",
+           f"{'engine':>14} {'tok/s':>8} {'p50_ms':>8} {'p99_ms':>9} "
+           f"{'migr':>5} {'spill':>6}"]
+    for name, m in rows.items():
+        if not isinstance(m, dict) or "tokens_per_s" not in m:
+            continue
+        out.append(f"{name:>14} {m['tokens_per_s']:>8.1f} "
+                   f"{m['p50_ms']:>8.0f} {m['p99_ms']:>9.0f} "
+                   f"{m.get('migrations', 0):>5} {m.get('evictions', 0):>6}")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizing (shorter trace)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="dump sections to PATH (the CI writes "
+                         "artifacts/bench/BENCH_serve.json)")
+    args = ap.parse_args()
+    n1, n2 = (16, 30) if args.smoke else (24, 30)
+    sections = {
+        "continuous_vs_wave": run_continuous_vs_wave(n=n1),
+        "slo_vs_roundrobin": run_slo_vs_roundrobin(n=n2),
+    }
+    print(_render("continuous vs fixed waves (local, open-loop Poisson)",
+                  sections["continuous_vs_wave"]))
+    print(_render("slo vs round-robin (pool, capacity-capped)",
+                  sections["slo_vs_roundrobin"]))
+    cw, sr = sections["continuous_vs_wave"], sections["slo_vs_roundrobin"]
+    print(f"continuous: {cw['speedup_tps']:.2f}x tok/s, "
+          f"p99 at {100 * cw['p99_ratio']:.0f}% of waves; "
+          f"slo p99 at {100 * sr['p99_ratio']:.0f}% of round-robin "
+          f"({sr['slo']['migrations']} migrations, "
+          f"{sr['slo']['evictions']} spills)")
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "serve_load", "sections": sections},
+                      f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")

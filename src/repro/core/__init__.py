@@ -7,7 +7,7 @@ Public API:
   MapSpec / sec / TargetExecutor   target regions with map(to/from/tofrom/alloc)
   strip_partition / offload_strips / recursive_offload / wavefront_offload
   TaskGraph / TaskNode / run_graph    unified task-graph IR the patterns lower into
-  RoundRobin / LocalityAffinity / HeftPlacement    pluggable placement policies
+  RoundRobin / LocalityAffinity / HeftPlacement / SloPlacement   placement policies
   Transport / HostFunnelTransport / PeerTransport   device↔device fabric + collectives
   ClusterRuntime / RuntimeConfig   deployable runtime, comm modes, cost model
 """
@@ -26,8 +26,8 @@ from .scheduler import (DagTask, PeerRef, offload_strips, recursive_offload,
 from .target import MapSpec, Section, TargetExecutor, TargetFuture, sec
 from .taskgraph import (GraphCheckpoint, GraphInterrupted, HeftPlacement,
                         LocalityAffinity, PlacementContext, PlacementPolicy,
-                        RoundRobin, TaskGraph, TaskNode, load_graph_checkpoint,
-                        resolve_policy, run_graph)
+                        RoundRobin, SloPlacement, TaskGraph, TaskNode,
+                        load_graph_checkpoint, resolve_policy, run_graph)
 from .transport import HostFunnelTransport, PeerTransport, Transport
 
 __all__ = [
@@ -42,7 +42,7 @@ __all__ = [
     "TaskGraph", "TaskNode", "run_graph", "resolve_policy",
     "GraphCheckpoint", "GraphInterrupted", "load_graph_checkpoint",
     "PlacementPolicy", "PlacementContext", "RoundRobin", "LocalityAffinity",
-    "HeftPlacement",
+    "HeftPlacement", "SloPlacement",
     "ClusterRuntime", "RuntimeConfig",
     "Transport", "HostFunnelTransport", "PeerTransport",
     "CostModel", "LinkModel", "Event", "PeerRecord", "TimelineSpan",

@@ -365,8 +365,126 @@ class HeftPlacement(PlacementPolicy):
         return best
 
 
+class SloPlacement(HeftPlacement):
+    """Tail-latency-aware EFT placement for serving (p99, not makespan).
+
+    HEFT minimizes *makespan*: it resets its device clocks per graph and
+    greedily takes the earliest finish, which happily stacks work onto an
+    already-deep queue as long as the graph's critical path doesn't grow.
+    A serving fleet cares about the *tail*: one device with a standing
+    backlog is exactly the p99, even when every other device is idle.
+
+    Differences from :class:`HeftPlacement`:
+
+    * **Backlogs persist across graphs and drain in real time.** A serving
+      engine runs one small graph per decode step; per-graph clock resets
+      would erase the queue state that IS the signal.  The backlog is
+      *estimated seconds of queued work*, so :meth:`begin` subtracts the
+      wall-clock time elapsed since the previous graph (floored at zero) —
+      work placed earlier has since been executing.  Without the drain the
+      backlog is cumulative-work-ever-placed, whose per-device differences
+      never decay: one busy warmup would bias every later admission.
+    * **Tail-first scoring.** A candidate's cost is the fleet tail that
+      placement would produce — ``max(tail, finish_d)`` — so a device whose
+      finish stays under the current tail is preferred over one that would
+      become the new tail, even if the latter finishes this node earlier.
+      Ties break by earliest finish (load balance), then capacity pressure
+      (fullest present table last — a full table means the next admission
+      spills a resident cache and pays refetch on every later step), then
+      index (determinism).
+    * **An external driver may charge/release work.** A driver with
+      knowledge the placement stream lacks (a known token budget, an
+      out-of-band cancellation) can adjust the backlog between ``place``
+      calls via :meth:`charge` / :meth:`release`.  The serving engine
+      deliberately does not: per-node charges already follow every decode
+      step to its (possibly migrated) device, so lump adjustments would
+      double-count.
+
+    Edge pricing and funnel/peer routing are inherited from HEFT — the same
+    :meth:`CostModel.kernel_time` / :meth:`Transport.edge_time`
+    observations, so the two policies disagree only on *where*, never on
+    what a wire costs.
+    """
+
+    name = "slo"
+
+    def __init__(self, default_task_s: float = 1e-3,
+                 use_observed: bool = True) -> None:
+        super().__init__(default_task_s, use_observed)
+        self._backlog: Dict[int, float] = {}
+        self._drained_at: Optional[float] = None
+
+    def begin(self, ctx: PlacementContext) -> None:
+        # persist queue depth across graphs, draining it by the wall-clock
+        # time the devices have had to work it off
+        for d in range(ctx.D):
+            self._backlog.setdefault(d, 0.0)
+        now = time.monotonic()
+        if self._drained_at is not None:
+            dt = now - self._drained_at
+            for d in self._backlog:
+                self._backlog[d] = max(0.0, self._backlog[d] - dt)
+        self._drained_at = now
+
+    def charge(self, device: int, seconds: float) -> None:
+        """Pre-charge known future work (e.g. a sequence's token budget)."""
+        self._backlog[device] = self._backlog.get(device, 0.0) + seconds
+
+    def release(self, device: int, seconds: float) -> None:
+        """Return charged-but-unspent work (retirement, shed, migration)."""
+        self._backlog[device] = max(0.0,
+                                    self._backlog.get(device, 0.0) - seconds)
+
+    def backlog(self, device: int) -> float:
+        return self._backlog.get(device, 0.0)
+
+    def _pressure(self, ctx: PlacementContext, d: int) -> float:
+        """Resident-bytes / capacity of device ``d``'s present table
+        (0 when uncapped): fuller tables spill sooner, and a spilled cache
+        pays a refetch on every subsequent decode step."""
+        try:
+            table = ctx.pool.present[d]
+        except (AttributeError, IndexError):
+            return 0.0
+        cap = getattr(table, "capacity_bytes", None)
+        if not cap:
+            return 0.0
+        return table.used_bytes() / cap
+
+    def place(self, ctx: PlacementContext, node: TaskNode,
+              ready_index: int, region_tag: str) -> int:
+        est = ctx.cost.kernel_time(node.kernel) if self.use_observed else None
+        if est is None:
+            est = self.default_task_s
+        cands = ctx.candidates()
+        if node.device is not None and (ctx.healthy is None
+                                        or node.device in cands):
+            cands = [node.device]
+        for d in cands:
+            self._backlog.setdefault(d, 0.0)
+        tail = max((self._backlog[d] for d in cands), default=0.0)
+        best, best_key, best_finish = None, None, None
+        for d in cands:
+            arrive = 0.0
+            for dep in node.deps:
+                src = ctx.home.get(dep)
+                if (src is None or src == d
+                        or d in ctx.replicas.get(dep, ())):
+                    continue   # already local: free edge
+                s, _ = self._edge(ctx, src, d, ctx.out_bytes.get(dep, 0))
+                arrive = max(arrive, s)
+            finish = max(self._backlog[d], arrive) + est
+            key = (max(tail, finish), finish, self._pressure(ctx, d), d)
+            if best_key is None or key < best_key:
+                best, best_key, best_finish = d, key, finish
+        self._backlog[best] = best_finish
+        ctx.cost.record_placement(region_tag, best, best_finish,
+                                  policy=self.name)
+        return best
+
+
 _POLICIES = {"round-robin": RoundRobin, "locality": LocalityAffinity,
-             "heft": HeftPlacement}
+             "heft": HeftPlacement, "slo": SloPlacement}
 
 
 def resolve_policy(policy: Any) -> PlacementPolicy:

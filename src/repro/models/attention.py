@@ -38,23 +38,41 @@ def _pick_block(seq: int, block: int) -> int:
 
 
 def _mask(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
-          window: jax.Array, kv_len: Optional[jax.Array]) -> jax.Array:
-    """[*,Sq,Sk] boolean validity mask from position vectors."""
-    m = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+          window: jax.Array, kv_len: Optional[jax.Array],
+          k_valid: Optional[jax.Array] = None) -> jax.Array:
+    """[*,Sq,Sk] boolean validity mask from position vectors.
+
+    ``q_pos`` may be [Sq] (shared positions) or [B,Sq] (per-sequence
+    positions, e.g. left-padded prompts whose real tokens start at different
+    offsets).  ``k_valid`` is an optional per-sequence key mask [B,Sk]:
+    False marks pad slots that must never be attended regardless of
+    causality (the start-index mask from the serving engine).  The result
+    broadcasts to [Sq,Sk] or [B,Sq,Sk] accordingly.
+    """
+    q = q_pos[..., :, None]                       # [*,Sq,1]
+    k = k_pos[None, :]                            # [1,Sk]
+    m = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
     if causal:
-        m &= q_pos[:, None] >= k_pos[None, :]
+        m &= q >= k
     # window: valid iff q - k < window (window<=0 disables; traced-friendly)
     w = jnp.asarray(window, jnp.int32)
-    m &= (w <= 0) | (q_pos[:, None] - k_pos[None, :] < w)
+    m &= (w <= 0) | (q - k < w)
     if kv_len is not None:
-        m &= k_pos[None, :] < kv_len
+        m &= k < kv_len
+    if k_valid is not None:
+        m = m & k_valid[..., None, :]             # [B,1,Sk] against [*,Sq,Sk]
     return m
 
 
 def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Any = 0, q_offset: Any = 0,
-                    kv_len: Optional[jax.Array] = None) -> jax.Array:
-    """Materialized-score reference path. q:[B,Sq,H,Dh] k,v:[B,Sk,K,Dh]."""
+                    kv_len: Optional[jax.Array] = None,
+                    k_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Materialized-score reference path. q:[B,Sq,H,Dh] k,v:[B,Sk,K,Dh].
+
+    ``q_offset`` may be a scalar or [B,1] (per-sequence position offsets);
+    ``k_valid`` is an optional [B,Sk] key mask (False = never attend).
+    """
     B, Sq, H, Dh = q.shape
     K = k.shape[2]
     r = H // K
@@ -64,8 +82,11 @@ def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                    preferred_element_type=jnp.float32) * scale
     q_pos = jnp.asarray(q_offset, jnp.int32) + jnp.arange(Sq, dtype=jnp.int32)
     k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
-    m = _mask(q_pos, k_pos, causal=causal, window=window, kv_len=kv_len)
-    s = jnp.where(m[None, None, None], s, NEG_INF)
+    m = _mask(q_pos, k_pos, causal=causal, window=window, kv_len=kv_len,
+              k_valid=k_valid)
+    # m is [Sq,Sk] (shared) or [B,Sq,Sk] (per-sequence); s is [B,K,r,Sq,Sk]
+    m = m[None, None, None] if m.ndim == 2 else m[:, None, None]
+    s = jnp.where(m, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkrqs,bskd->bqkrd", p.astype(v.dtype), v)
     return o.reshape(B, Sq, H, Dh)
@@ -74,6 +95,7 @@ def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True, window: Any = 0, q_offset: Any = 0,
                         kv_len: Optional[jax.Array] = None,
+                        k_valid: Optional[jax.Array] = None,
                         block_q: int = 512, block_kv: int = 1024,
                         skip_blocks: bool = False) -> jax.Array:
     """Flash-style attention via nested lax.scan; O(block_q·block_kv) memory.
@@ -92,7 +114,9 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     qg = q.reshape(B, nq, bq, K, r, Dh)
     kb = k.reshape(B, nk, bk, K, Dh)
     vb = v.reshape(B, nk, bk, K, Dh)
+    kvalb = None if k_valid is None else k_valid.reshape(B, nk, bk)
     q_off = jnp.asarray(q_offset, jnp.int32)
+    q_off_hi = q_off if q_off.ndim == 0 else q_off.max()
 
     def q_block(_, iq):
         qi = qg[:, iq] * scale                       # [B,bq,K,r,Dh]
@@ -107,8 +131,12 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                 s = jnp.einsum("bqkrd,bskd->bkrqs", qi, kj,
                                preferred_element_type=jnp.float32)
                 valid = _mask(q_pos, k_pos, causal=causal, window=window,
-                              kv_len=kv_len)
-                s = jnp.where(valid[None, None, None], s, NEG_INF)
+                              kv_len=kv_len,
+                              k_valid=None if kvalb is None else kvalb[:, jk])
+                # valid is [bq,bk] (shared) or [B,bq,bk] (per-sequence)
+                valid = (valid[None, None, None] if valid.ndim == 2
+                         else valid[:, None, None])
+                s = jnp.where(valid, s, NEG_INF)
                 m_new = jnp.maximum(m, s.max(axis=-1))
                 p = jnp.exp(s - m_new[..., None])
                 alpha = jnp.exp(m - m_new)
@@ -120,7 +148,7 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
             if skip_blocks and causal:
                 # whole block in the future for every query row -> skip
-                needed = (jk * bk) <= (q_off + iq * bq + bq - 1)
+                needed = (jk * bk) <= (q_off_hi + iq * bq + bq - 1)
                 o, m, l = jax.lax.cond(needed, update, lambda o, m, l: (o, m, l),
                                        o, m, l)
             else:
@@ -143,8 +171,13 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
-                     kv_len: jax.Array, window: Any = 0) -> jax.Array:
+                     kv_len: jax.Array, window: Any = 0,
+                     k_valid: Optional[jax.Array] = None) -> jax.Array:
     """Single-token attention against a cache. q:[B,1,H,Dh] cache:[B,S,K,Dh].
+
+    ``kv_len`` is scalar/[1,1] (shared cache fill) or [B,1] (per-sequence
+    fill, continuous batching); ``k_valid`` is an optional [B,S] key mask
+    whose False entries (left-pad slots) are never attended.
 
     Softmax statistics are computed over the full logical KV axis; under a
     sequence-sharded cache the SPMD partitioner lowers the max/sum/contract
@@ -161,6 +194,8 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
     valid = k_pos[None, :] < kv_len                      # [1,S] or [B,S]
     w = jnp.asarray(window, jnp.int32)
     valid = valid & ((w <= 0) | (k_pos[None, :] >= kv_len - w))
+    if k_valid is not None:
+        valid = valid & k_valid
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkrs,bskd->bkrd", p.astype(v_cache.dtype), v_cache)
@@ -194,16 +229,21 @@ def attn_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
                memory: Optional[jax.Array] = None,
                cache: Optional[Tuple[jax.Array, jax.Array]] = None,
                cache_pos: Optional[jax.Array] = None,
-               causal: bool = True, is_cross: bool = False
+               causal: bool = True, is_cross: bool = False,
+               k_valid: Optional[jax.Array] = None
                ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
     """One attention sublayer.
 
     * training/prefill self-attn: ``cache=None`` — blockwise/dense over x.
     * decode self-attn: ``cache=(k,v)`` [B,S,K,Dh] + ``cache_pos`` — insert
       the token's K/V at ``cache_pos``, attend over the cache.
+      ``cache_pos`` may be a scalar (wave batching: all sequences at the
+      same fill) or [B] (continuous batching: per-slot fill levels).
     * cross-attn (``is_cross``): keys/values come from ``memory`` (encoder
       output) when given, else from a cache of the *projected* memory
       (computed once at prefill via :func:`project_memory`).
+    * ``k_valid`` [B,Sk]: per-sequence key mask — False marks left-pad
+      slots that must never be attended (start-index mask).
     """
     B, S, _ = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
@@ -231,17 +271,22 @@ def attn_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
             new_cache = (ck, cv)
             use_kernel = (cfg.use_pallas and not is_cross
                           and not isinstance(window, jax.core.Tracer)
-                          and int(window) <= 0)
+                          and int(window) <= 0
+                          and jnp.ndim(cache_pos) == 0 and k_valid is None)
             if use_kernel:
                 from ..kernels.flash_decode.ops import gqa_flash_decode
                 o = gqa_flash_decode(q, ck, cv, cache_pos + 1,
                                      interpret=_pallas_interpret())
             else:
-                o = decode_attention(q, ck, cv, kv_len=cache_pos + 1,
-                                     window=window)
+                kvl = cache_pos + 1
+                if jnp.ndim(kvl) == 1:            # per-slot fill -> [B,1]
+                    kvl = kvl[:, None]
+                o = decode_attention(q, ck, cv, kv_len=kvl,
+                                     window=window, k_valid=k_valid)
         else:
             use_kernel = (cfg.use_pallas and not is_cross and causal
-                          and not isinstance(window, jax.core.Tracer))
+                          and not isinstance(window, jax.core.Tracer)
+                          and k_valid is None)
             if use_kernel:
                 from ..kernels.flash_attention.ops import gqa_flash_attention
                 o = gqa_flash_attention(
@@ -255,7 +300,7 @@ def attn_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
                 kw = (dict(block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv)
                       if cfg.attn_impl == "blockwise" else {})
                 o = fn(q, k, v, causal=causal and not is_cross, window=window,
-                       **kw)
+                       k_valid=k_valid, **kw)
 
     out = o.reshape(B, S, h * dh) @ p["wo"]
     return out, new_cache
@@ -272,10 +317,19 @@ def project_memory(p: Params, memory: jax.Array, cfg: ModelConfig
 
 
 def _cache_insert(cache: jax.Array, kv_new: jax.Array, pos: jax.Array) -> jax.Array:
-    """Insert kv_new [B,1,K,Dh] into cache [B,S,K,Dh] at position ``pos``."""
-    return jax.lax.dynamic_update_slice(
-        cache, kv_new.astype(cache.dtype),
-        (0, pos.astype(jnp.int32), 0, 0))
+    """Insert kv_new [B,1,K,Dh] into cache [B,S,K,Dh] at position ``pos``.
+
+    ``pos`` scalar: every row writes at the same slot (wave batching).
+    ``pos`` [B]: each row writes at its own fill level (continuous batching)
+    via a vmapped per-row dynamic_update_slice.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    kv_new = kv_new.astype(cache.dtype)
+    if pos.ndim == 0:
+        return jax.lax.dynamic_update_slice(cache, kv_new, (0, pos, 0, 0))
+    return jax.vmap(
+        lambda c, t, p: jax.lax.dynamic_update_slice(c, t, (p, 0, 0))
+    )(cache, kv_new, pos)
 
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,

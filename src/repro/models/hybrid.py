@@ -154,8 +154,11 @@ def hybrid_prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
 
 def hybrid_decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
                        cache, pos: jax.Array):
+    """``pos`` is scalar (wave batching) or [B] (continuous batching — each
+    slot's shared-attention KV cache is filled to its own level)."""
     x = embed_apply(params["embed"], token).astype(jnp.dtype(cfg.compute_dtype))
-    positions = pos[None]
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[None] if pos.ndim == 0 else pos[:, None]
     shared = params["shared"]
 
     def group(x, xs):

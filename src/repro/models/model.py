@@ -63,24 +63,42 @@ class Model:
 
     # -- serving ------------------------------------------------------------
     def prefill(self, params: Any, batch: Dict[str, jax.Array],
-                cache_len: Optional[int] = None):
+                cache_len: Optional[int] = None, *,
+                pad_width: Optional[jax.Array] = None):
+        """``pad_width`` [B] int32: per-sequence left-pad widths.  Attention
+        families mask the pad slots out of every attention and shift rope
+        positions, making a left-padded prompt bit-exact with its unpadded
+        reference.  SSM/hybrid state scans cannot skip pad steps, so those
+        families reject ``pad_width`` — serve them unpadded (exact-length
+        prefill, as the continuous batcher does)."""
         cfg = self.cfg
-        if cfg.family == "hybrid":
-            return hybrid.hybrid_prefill(params, cfg, batch["tokens"], cache_len)
-        if cfg.family == "ssm":
-            return mamba_lm.mamba_lm_prefill(params, cfg, batch["tokens"], cache_len)
+        if cfg.family in ("hybrid", "ssm"):
+            if pad_width is not None:
+                raise ValueError(
+                    f"{cfg.family} prefill cannot mask left-pads (state scans "
+                    "consume every step); prefill unpadded instead")
+            fn = (hybrid.hybrid_prefill if cfg.family == "hybrid"
+                  else mamba_lm.mamba_lm_prefill)
+            return fn(params, cfg, batch["tokens"], cache_len)
         return transformer.prefill(params, cfg, tokens=batch.get("tokens"),
                                    embeds=batch.get("embeds"),
                                    enc_embeds=batch.get("enc_embeds"),
-                                   cache_len=cache_len)
+                                   cache_len=cache_len, pad_width=pad_width)
 
-    def decode_step(self, params: Any, token: jax.Array, cache, pos: jax.Array):
+    def decode_step(self, params: Any, token: jax.Array, cache, pos: jax.Array,
+                    *, pad_width: Optional[jax.Array] = None,
+                    pad_offset: int = 0):
+        """``pos`` may be scalar (wave batching) or [B] (continuous batching,
+        per-slot cache fills); ``pad_width``/``pad_offset`` continue a
+        pad-masked prefill (transformer family only)."""
         cfg = self.cfg
         if cfg.family == "hybrid":
             return hybrid.hybrid_decode_step(params, cfg, token, cache, pos)
         if cfg.family == "ssm":
             return mamba_lm.mamba_lm_decode_step(params, cfg, token, cache, pos)
-        return transformer.decode_step(params, cfg, token, cache, pos)
+        return transformer.decode_step(params, cfg, token, cache, pos,
+                                       pad_width=pad_width,
+                                       pad_offset=pad_offset)
 
     def make_cache(self, params: Any, batch_size: int, max_len: int,
                    memory: Optional[jax.Array] = None):

@@ -83,12 +83,17 @@ def _ffn(p: Params, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Arra
 
 
 def _block(p: Params, x: jax.Array, cfg: ModelConfig, *, positions, window,
-           memory=None, cache=None, cache_pos=None, causal=True):
-    """Pre-norm transformer block; returns (x, aux, new_cache)."""
+           memory=None, cache=None, cache_pos=None, causal=True,
+           k_valid=None):
+    """Pre-norm transformer block; returns (x, aux, new_cache).
+
+    ``k_valid`` [B,Sk] masks left-pad key slots out of *self*-attention
+    (cross-attention memory carries no pads)."""
     h, new_self = attn_apply(p["attn"], rms_norm(x, p["norm1"], cfg.rms_eps),
                              cfg, positions=positions, window=window,
                              cache=None if cache is None else cache[0],
-                             cache_pos=cache_pos, causal=causal)
+                             cache_pos=cache_pos, causal=causal,
+                             k_valid=k_valid)
     x = x + h
     new_cross = None
     if "cross" in p:
@@ -230,18 +235,37 @@ def make_cache(params: Params, cfg: ModelConfig, batch: int, max_len: int,
 
 
 def prefill(params: Params, cfg: ModelConfig, *, tokens=None, embeds=None,
-            enc_embeds=None, cache_len: Optional[int] = None):
+            enc_embeds=None, cache_len: Optional[int] = None,
+            pad_width: Optional[jax.Array] = None):
     """Run the full prompt, build the KV cache, return (last_logits, cache, pos).
 
     The prompt K/V are produced by re-running projections into the cache via a
     scan pass; for simplicity and HLO economy we compute the forward once and
     fill the cache with a vmapped projection pass (cheap relative to attention).
+
+    ``pad_width`` [B] int32 marks per-sequence left-pad runs: pads occupy the
+    slots immediately after any frontend prefix (``embeds``), i.e. physical
+    indices [prefix, prefix + pad_width[b]).  They are excluded from every
+    attention (start-index key mask) and rope positions of the real tokens
+    are shifted down by the pad width, so a left-padded prompt is bit-exact
+    with its unpadded reference — masked scores contribute exact zeros.
     """
     memory = encode(params, cfg, enc_embeds) if cfg.is_encdec else None
     x = _input_embeds(params, cfg, tokens, embeds)
     B, S, _ = x.shape
     max_len = cache_len or S
-    positions = jnp.arange(S, dtype=jnp.int32)
+    base = jnp.arange(S, dtype=jnp.int32)
+    k_valid = None
+    if pad_width is None:
+        positions = base
+    else:
+        pw = jnp.asarray(pad_width, jnp.int32)          # [B]
+        prefix = 0 if embeds is None else embeds.shape[1]
+        in_pad = (base[None, :] >= prefix) & (base[None, :] < prefix + pw[:, None])
+        k_valid = ~in_pad                               # [B,S] key mask
+        # real tokens take their unpadded rope position; pad rows are masked
+        positions = jnp.where(base[None, :] >= prefix,
+                              base[None, :] - pw[:, None], base[None, :])
     windows = window_schedule(cfg)
 
     # forward pass capturing per-layer K/V into the cache
@@ -261,7 +285,7 @@ def prefill(params: Params, cfg: ModelConfig, *, tokens=None, embeds=None,
         ck = jax.lax.dynamic_update_slice(k0, kproj.astype(k0.dtype), (0, 0, 0, 0))
         cv = jax.lax.dynamic_update_slice(v0, vproj.astype(v0.dtype), (0, 0, 0, 0))
         x, _, _ = _block(layer_p, x, cfg, positions=positions, window=window,
-                         memory=memory)
+                         memory=memory, k_valid=k_valid)
         return (x,), (ck, cv)
 
     body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
@@ -280,17 +304,36 @@ def prefill(params: Params, cfg: ModelConfig, *, tokens=None, embeds=None,
 
 
 def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
-                cache, pos: jax.Array):
-    """One token step. token [B,1] int32; pos scalar int32 (cache fill count)."""
+                cache, pos: jax.Array, *,
+                pad_width: Optional[jax.Array] = None, pad_offset: int = 0):
+    """One token step. token [B,1] int32; pos is the cache fill count —
+    scalar (wave batching) or [B] (continuous batching, per-slot fills).
+
+    ``pad_width`` [B] + ``pad_offset`` describe left-pad runs written into
+    the cache at prefill ([pad_offset, pad_offset + pad_width[b])): those
+    key slots are masked out and rope positions are shifted down by the pad
+    width so decode continues the unpadded position stream.
+    """
     x = embed_apply(params["embed"], token).astype(jnp.dtype(cfg.compute_dtype))
     self_kv, cross = cache
-    positions = pos[None] if pos.ndim == 0 else pos
+    pos = jnp.asarray(pos, jnp.int32)
+    k_valid = None
+    if pad_width is None:
+        logical = pos
+    else:
+        pw = jnp.asarray(pad_width, jnp.int32)          # [B]
+        logical = pos - pw                              # [B]
+        S_cache = self_kv[0].shape[2]                   # [L,B,S,K,Dh]
+        base = jnp.arange(S_cache, dtype=jnp.int32)
+        k_valid = ~((base[None, :] >= pad_offset)
+                    & (base[None, :] < pad_offset + pw[:, None]))
+    positions = logical[None] if logical.ndim == 0 else logical[:, None]
 
     def body(x, xs):
         layer_p, window, self_c, cross_c = xs
         x, _, new_cache = _block(layer_p, x, cfg, positions=positions,
                                  window=window, cache=(self_c, cross_c),
-                                 cache_pos=pos)
+                                 cache_pos=pos, k_valid=k_valid)
         return x, new_cache
 
     windows = jnp.asarray(window_schedule(cfg))
@@ -302,7 +345,7 @@ def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
             layer_p, window, self_c = xs
             x, _, new_cache = _block(layer_p, x, cfg, positions=positions,
                                      window=window, cache=(self_c, None),
-                                     cache_pos=pos)
+                                     cache_pos=pos, k_valid=k_valid)
             return x, new_cache[0]
         x, new_self = jax.lax.scan(body2, x, (params["layers"], windows, self_kv))
         new_cross = None

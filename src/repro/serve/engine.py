@@ -1,26 +1,48 @@
-"""Batched serving engine: prefill + decode over the unified Model facade.
+"""Serving on the TaskGraph IR: continuous batching over device-resident caches.
 
-Wave-batched execution: requests are grouped into fixed-size waves; each wave
-left-pads prompts to a common length, prefills once (building the KV/SSM
-cache), then decodes greedily/with temperature until every sequence hits EOS
-or its token budget.  The decode step is a single compiled program per
-(batch, cache_len) bucket — at pod scale this is the program the
-``decode_*`` dry-run cells lower, so the roofline table speaks for this
-engine directly.
+Three execution modes, one token stream (greedy decodes are bit-identical
+across all of them — the regression tests assert it):
 
-Paper tie-in: with ``pool`` given, each wave is dispatched to an offload
-device as a *target region* whose kernel is the registered ``serve_wave``
-entry — cluster-as-devices serving, with the same MapSpec accounting as the
-BOTS workloads (examples/offload_serve.py).
+* **Continuous (default, local).**  Requests stream through an admission
+  queue into a fixed pool of *slots*; each slot owns one row of a stacked
+  KV/SSM cache.  Each step's admissions prefill together in constant-``B``
+  batches (exact length — or bucketed to a power of two with a per-sequence
+  pad mask on attention families, which is bit-exact per
+  ``Model.prefill(pad_width=...)``; unused rows are dummies, so one
+  executable compiles per bucket length, never per admission count), each
+  row is inserted into its free slot, and from then on every engine step
+  runs ONE batched decode over all occupied slots with a per-slot position
+  vector.  Sequences join and leave
+  at step boundaries: no wave barrier, a finished sequence's slot is re-used
+  by the next queued request while its former batchmates keep decoding.
 
-Left-padding note: pad tokens sit at positions < prompt_start and are
-attended (masked only by causality).  For the quality-neutral synthetic
-demo this is acceptable; a deployment would add a start-index mask — noted
-as a limitation, not silently ignored.
+* **Wave (baseline).**  The seed fixed-wave loop, kept as the measured
+  baseline: form a wave of ≤B requests, left-pad to a common length,
+  prefill once, decode until every member finishes.  Ragged waves on
+  attention families now carry a per-sequence start-index mask
+  (``pad_width``) so pad slots are invisible — a left-padded prompt decodes
+  bit-identically to its unpadded reference (the seed attended pads and
+  noted it as a limitation).  SSM/hybrid state scans cannot mask history,
+  so those families keep the seed behavior on ragged waves.
+
+* **Pool (cluster).**  With a :class:`~repro.core.runtime.ClusterRuntime`,
+  the continuous loop lowers onto the TaskGraph IR: each admission and each
+  per-sequence decode step is a :class:`TaskNode` whose cache lives in a
+  device data environment — ``device_out`` writes keep it device-resident,
+  ``present`` bindings reuse it without host traffic, and the capacity-LRU
+  :class:`~repro.core.mediary.PresentTable` transparently spills cold
+  sequences to the host and refetches them on their next step.  Admission
+  placement goes through a :class:`PlacementPolicy` (default
+  :class:`SloPlacement`, the tail-latency-aware EFT derivative); when one
+  device's queue depth becomes the fleet tail, a hot sequence's cache
+  migrates via ``propagate_resident`` over the runtime's transport.
+  ``deadline_ms`` shedding and straggler hedging (``stragglers=``) ride
+  through unchanged.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -37,10 +59,11 @@ class Request:
     rid: int
     prompt: Sequence[int]
     max_new_tokens: int = 32
-    # per-request deadline, measured from serve() entry; a request whose
-    # deadline has already passed when its wave would form is shed (its
-    # Result comes back timed_out with no tokens) instead of occupying a
-    # batch slot computing an answer nobody is waiting for.
+    # per-request deadline, measured from serve() entry (or first submit);
+    # a request whose deadline has already passed when a slot frees for it
+    # is shed from the admission queue (its Result comes back timed_out
+    # with no tokens) instead of occupying a slot computing an answer
+    # nobody is waiting for.
     deadline_ms: Optional[float] = None
 
 
@@ -55,37 +78,73 @@ class Result:
 
 @dataclass(frozen=True)
 class ServeConfig:
-    batch: int = 4                 # wave size
+    batch: int = 4                 # slot count (continuous) / wave size
     max_len: int = 256             # cache capacity
     eos: int = -1                  # -1: run to the token budget
     temperature: float = 0.0       # 0 = greedy
     seed: int = 0
+    mode: str = "continuous"       # "continuous" | "wave" (baseline)
+    # continuous mode, attention families: bucket prefill lengths to the
+    # next power of two with a pad mask (bit-exact) so compile count stays
+    # O(log max_len) instead of one executable per distinct prompt length
+    bucket_prefill: bool = True
+    # pool mode: every N steps, if the deepest device queue exceeds the
+    # shallowest by >= 2 sequences, migrate the hottest sequence's cache
+    # off the tail device (0 = never migrate)
+    migrate_every: int = 0
 
 
 class ServeEngine:
     def __init__(self, model: Model, params: Any, cfg: ServeConfig, *,
-                 frontend_seq: int = 0) -> None:
-        """``frontend_seq`` > 0 supplies zero-stub frontend embeddings per
-        wave (vlm patch embeds / enc-dec encoder frames) — the modality
-        frontends are stubs per the assignment."""
+                 frontend_seq: int = 0, runtime: Any = None,
+                 policy: Any = None, stragglers: Any = None) -> None:
+        """``frontend_seq`` > 0 supplies zero-stub frontend embeddings
+        (vlm patch embeds / enc-dec encoder frames — the modality frontends
+        are stubs per the assignment).  ``runtime`` switches on pool mode;
+        ``policy`` picks its admission placement (name or instance, default
+        ``"slo"``); ``stragglers`` is forwarded to every ``run_graph`` so
+        hedged re-execution keeps working under the serving loop."""
+        if cfg.mode not in ("continuous", "wave"):
+            raise ValueError(f"unknown serve mode {cfg.mode!r}")
         self.model = model
         self.params = params
         self.cfg = cfg
         self.frontend_seq = frontend_seq
+        self.runtime = runtime
+        self.stragglers = stragglers
+        self.migrations = 0
+        mcfg = model.cfg
+        self._front_key = "enc_embeds" if mcfg.is_encdec else "embeds"
+        self._prefix = frontend_seq if not mcfg.is_encdec else 0
+        self._can_mask = mcfg.family not in ("ssm", "hybrid")
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cache_len=cfg.max_len))
         self._decode = jax.jit(model.decode_step)
+        if self._can_mask:
+            self._prefill_masked = jax.jit(
+                lambda p, b, pw: model.prefill(p, b, cache_len=cfg.max_len,
+                                               pad_width=pw))
+            self._decode_masked = jax.jit(
+                lambda p, t, c, pos, pw: model.decode_step(
+                    p, t, c, pos, pad_width=pw, pad_offset=self._prefix))
         self._rng = jax.random.PRNGKey(cfg.seed)
+        # admission queue + counters (shared by continuous and pool modes)
+        self._pending: deque = deque()
+        self._t0: Optional[float] = None
+        self._steps = 0
+        self._shed = 0
+        # continuous-mode slot state, built lazily at first admission
+        self._slots_ready = False
+        if runtime is not None:
+            if cfg.mode == "wave":
+                raise ValueError("pool mode serves continuously; "
+                                 "use mode='wave' without a runtime")
+            self._pool_setup(policy)
 
-    # -- batching ------------------------------------------------------------
-    def _pad_wave(self, reqs: Sequence[Request]) -> Tuple[jax.Array, int]:
-        """Left-pad prompts to a common length; returns (tokens [B,S], S)."""
-        S = max(len(r.prompt) for r in reqs)
-        B = len(reqs)
-        toks = np.zeros((B, S), np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, S - len(r.prompt):] = np.asarray(r.prompt, np.int32)
-        return jnp.asarray(toks), S
+    # -- shared helpers -------------------------------------------------------
+    def _stub(self, B: int) -> jax.Array:
+        return jnp.zeros((B, self.frontend_seq, self.model.cfg.d_model),
+                         jnp.dtype(self.model.cfg.compute_dtype))
 
     def _sample(self, logits: jax.Array) -> jax.Array:
         """logits [B, 1, V] → token [B, 1]."""
@@ -96,25 +155,484 @@ class ServeEngine:
             sub, logits[:, -1] / self.cfg.temperature, axis=-1
         ).astype(jnp.int32)[:, None]
 
-    # -- one wave -------------------------------------------------------------
+    def _cache_struct(self, B: int):
+        """Abstract cache pytree for batch size B (shapes are prompt-length
+        independent, so a short dummy prompt stands in for every prompt)."""
+        batch: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((B, 4), jnp.int32)}
+        if self.frontend_seq:
+            batch[self._front_key] = jax.ShapeDtypeStruct(
+                (B, self.frontend_seq, self.model.cfg.d_model),
+                jnp.dtype(self.model.cfg.compute_dtype))
+        _, cache, _ = jax.eval_shape(
+            lambda p, b: self.model.prefill(p, b, cache_len=self.cfg.max_len),
+            self.params, batch)
+        return cache
+
+    def _check_fits(self, r: Request) -> None:
+        need = self._prefix + len(r.prompt) + r.max_new_tokens
+        assert need <= self.cfg.max_len, \
+            f"request {r.rid} exceeds cache capacity ({need} > {self.cfg.max_len})"
+
+    # -- streaming API --------------------------------------------------------
+    def submit(self, *requests: Request) -> None:
+        """Enqueue requests; they are admitted as slots free up."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        for r in requests:
+            self._check_fits(r)
+            self._pending.append(r)
+
+    @property
+    def has_work(self) -> bool:
+        if self._pending:
+            return True
+        if self.runtime is not None:
+            return bool(self._p_active)
+        return self._slots_ready and bool(self._c_active.any())
+
+    def step(self) -> List[Result]:
+        """One engine step: admit into free slots (shedding expired
+        deadlines), append each live sequence's pending token (retiring
+        finished ones), then run one batched decode / one decode TaskGraph.
+        Returns the Results completed this step."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        if self.runtime is not None:
+            return self._step_pool()
+        return self._step_local()
+
+    def drain(self) -> Dict[int, Result]:
+        out: Dict[int, Result] = {}
+        while self.has_work:
+            for res in self.step():
+                out[res.rid] = res
+        return out
+
+    # -- request loop ---------------------------------------------------------
+    def serve(self, requests: Sequence[Request]) -> Dict[int, Result]:
+        """Serve a request list; returns {rid: Result} + prints stats.
+
+        Requests carrying ``deadline_ms`` are load-shed: if a request's
+        deadline (measured from this call's start — queueing time counts)
+        has expired by the time a slot frees for it, it is dropped and
+        answered with a ``timed_out`` :class:`Result`.
+        """
+        if self.cfg.mode == "wave":
+            return self._serve_waves(requests)
+        self._t0 = time.perf_counter()
+        self._steps = 0
+        self._shed = 0
+        out: Dict[int, Result] = {}
+        self.submit(*requests)
+        while self.has_work:
+            for res in self.step():
+                out[res.rid] = res
+        wall = time.perf_counter() - self._t0
+        new_tokens = sum(len(r.tokens) for r in out.values())
+        if wall > 0:
+            extra = f", {self._shed} shed" if self._shed else ""
+            if self.migrations:
+                extra += f", {self.migrations} migrations"
+            print(f"[serve] {len(requests)} requests, {self._steps} steps"
+                  f"{extra}, {new_tokens} new tokens, "
+                  f"{new_tokens / wall:.1f} tok/s", flush=True)
+        self._t0 = None
+        return out
+
+    # ========================================================================
+    # continuous mode (local): slot-batched decode
+    # ========================================================================
+    def _ensure_slots(self) -> None:
+        if self._slots_ready:
+            return
+        B = self.cfg.batch
+        s1, s2 = self._cache_struct(1), self._cache_struct(2)
+
+        def batch_axis(a, b):
+            diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                     if x != y]
+            assert len(diffs) == 1, (a.shape, b.shape)
+            return diffs[0]
+
+        # per-leaf batch axis: cache families stack batch at different
+        # depths (hybrid conv state is [G, k, B, ...]), so discover it by
+        # diffing abstract shapes at B=1 vs B=2
+        self._c_axes = jax.tree.map(batch_axis, s1, s2)
+        sB = self._cache_struct(B)
+        self._c_cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sB)
+        self._c_pos = np.zeros(B, np.int32)
+        self._c_pw = np.zeros(B, np.int32)
+        self._c_tok = jnp.zeros((B, 1), jnp.int32)
+        self._c_active = np.zeros(B, bool)
+        self._c_req: List[Optional[Request]] = [None] * B
+        self._c_res: List[Optional[Result]] = [None] * B
+        self._slots_ready = True
+
+    def _prefill_groups(self, admits: List[Tuple[Request, int]]
+                        ) -> List[Tuple[List[Tuple[Request, int]], int]]:
+        """Partition this step's admissions into batchable prefill groups.
+
+        Attention families pad-mask, so any mix of lengths shares one
+        prefill at the group's (bucketed) max length — except members whose
+        token budget can't afford the padding, which start their own group.
+        SSM/hybrid families can't mask, so only equal-length prompts batch.
+        Returns [(members, padded_len)] with members sorted longest-first.
+        """
+        groups: List[Tuple[List[Tuple[Request, int]], int]] = []
+        if self._can_mask:
+            for r, b in sorted(admits, key=lambda rb: -len(rb[0].prompt)):
+                L = len(r.prompt)
+                placed = False
+                for g in groups:
+                    if self._prefix + g[1] + r.max_new_tokens <= self.cfg.max_len:
+                        g[0].append((r, b))
+                        placed = True
+                        break
+                if not placed:
+                    Lb = L
+                    if self.cfg.bucket_prefill:
+                        Lb = max(4, 1 << (L - 1).bit_length())
+                        if self._prefix + Lb + r.max_new_tokens > self.cfg.max_len:
+                            Lb = L
+                    groups.append(([(r, b)], Lb))
+        else:
+            by_len: Dict[int, List[Tuple[Request, int]]] = {}
+            for r, b in admits:
+                by_len.setdefault(len(r.prompt), []).append((r, b))
+            groups = [(members, L) for L, members in sorted(by_len.items())]
+        return groups
+
+    def _admit_local(self, admits: List[Tuple[Request, int]]) -> None:
+        t0 = time.perf_counter()
+        B = self.cfg.batch
+        for members, S in self._prefill_groups(admits):
+            # pad the group to a constant B rows so prefill compiles once
+            # per bucket length, never per admission count; dummy rows keep
+            # one valid token (rows are independent and never inserted)
+            toks = np.zeros((B, S), np.int32)
+            pw = np.full(B, S - 1, np.int32)
+            for i, (r, _) in enumerate(members):
+                L = len(r.prompt)
+                toks[i, S - L:] = np.asarray(r.prompt, np.int32)
+                pw[i] = S - L
+            batch: Dict[str, jax.Array] = {"tokens": jnp.asarray(toks)}
+            if self.frontend_seq:
+                batch[self._front_key] = self._stub(B)
+            if self._can_mask:
+                logits, cache_k, pos1 = self._prefill_masked(
+                    self.params, batch, jnp.asarray(pw))
+            else:
+                logits, cache_k, pos1 = self._prefill(self.params, batch)
+            tok_k = jax.block_until_ready(self._sample(logits))
+            for i, (r, b) in enumerate(members):
+                self._c_cache = jax.tree.map(
+                    lambda sl, ax, new, i=i, b=b:
+                        jax.lax.dynamic_update_slice_in_dim(
+                            sl, jax.lax.dynamic_slice_in_dim(new, i, 1, axis=ax),
+                            b, axis=ax),
+                    self._c_cache, self._c_axes, cache_k)
+                self._c_pos[b] = int(pos1)
+                self._c_pw[b] = pw[i]
+                self._c_tok = self._c_tok.at[b].set(tok_k[i])
+                self._c_req[b] = r
+                self._c_res[b] = Result(r.rid)
+                self._c_active[b] = True
+        dt = (time.perf_counter() - t0) / len(admits)
+        for r, b in admits:
+            self._c_res[b].prefill_s = dt
+
+    def _shed_or_none(self, elapsed_ms: float) -> Optional[Request]:
+        """Pop the next admissible request, shedding expired deadlines."""
+        while self._pending:
+            r = self._pending.popleft()
+            if r.deadline_ms is not None and elapsed_ms >= r.deadline_ms:
+                self._shed_out.append(Result(r.rid, timed_out=True))
+                self._shed += 1
+                continue
+            return r
+        return None
+
+    def _step_local(self) -> List[Result]:
+        self._ensure_slots()
+        completed: List[Result] = []
+        self._shed_out = completed
+        elapsed_ms = (time.perf_counter() - self._t0) * 1e3
+        # 1. admission into free slots (batched prefill per step)
+        free = [b for b in range(self.cfg.batch) if not self._c_active[b]]
+        admits: List[Tuple[Request, int]] = []
+        while free and self._pending:
+            r = self._shed_or_none(elapsed_ms)
+            if r is None:
+                break
+            admits.append((r, free.pop(0)))
+        if admits:
+            self._admit_local(admits)
+        # 2. consume pending tokens; retire finished sequences
+        if self._c_active.any():
+            tok_host = np.asarray(self._c_tok)
+            for b in range(self.cfg.batch):
+                if not self._c_active[b]:
+                    continue
+                t = int(tok_host[b, 0])
+                r, res = self._c_req[b], self._c_res[b]
+                res.tokens.append(t)
+                if t == self.cfg.eos or len(res.tokens) >= r.max_new_tokens:
+                    completed.append(res)
+                    self._c_active[b] = False
+                    self._c_pw[b] = 0
+                    self._c_req[b] = self._c_res[b] = None
+        # 3. one batched decode over the remaining live slots
+        act = self._c_active
+        if act.any():
+            t0 = time.perf_counter()
+            posv = jnp.asarray(self._c_pos)
+            if self._can_mask and self._c_pw.any():
+                logits, self._c_cache = self._decode_masked(
+                    self.params, self._c_tok, self._c_cache, posv,
+                    jnp.asarray(self._c_pw))
+            else:
+                # no live slot carries pads: the mask is the identity, so
+                # take the cheaper unmasked decode (bit-identical)
+                logits, self._c_cache = self._decode(
+                    self.params, self._c_tok, self._c_cache, posv)
+            nxt = self._sample(logits)
+            self._c_tok = jax.block_until_ready(
+                jnp.where(jnp.asarray(act)[:, None], nxt, self._c_tok))
+            self._c_pos[act] += 1
+            dt = (time.perf_counter() - t0) / int(act.sum())
+            for b in np.flatnonzero(act):
+                self._c_res[b].decode_s += dt
+        if act.any() or completed:
+            self._steps += 1
+        return completed
+
+    # ========================================================================
+    # pool mode: the continuous loop lowered onto the TaskGraph IR
+    # ========================================================================
+    def _pool_setup(self, policy: Any) -> None:
+        from ..core.taskgraph import PlacementContext, resolve_policy
+        if self.cfg.temperature > 0:
+            raise ValueError("pool-mode serving is greedy-only")
+        rt = self.runtime
+        self.ex, self.pool = rt.ex, rt.pool
+        self._policy = resolve_policy("slo" if policy is None else policy)
+        self._D = len(rt.pool)
+        from ..core.transport import PeerTransport
+        self._ctx = PlacementContext(
+            pool=rt.pool, cost=rt.pool.cost, D=self._D,
+            peer=isinstance(rt.transport, PeerTransport),
+            transport=rt.transport)
+        self._policy.begin(self._ctx)
+        self._adm_idx = 0
+        self._params_on: set = set()
+        # rid -> {req, res, device, entry, pos, tok}
+        self._p_active: Dict[int, Dict[str, Any]] = {}
+        self._ctpl = self._cache_struct(1)
+        self._register_kernels()
+
+    def _register_kernels(self) -> None:
+        mcfg = self.model.cfg
+        key = (f"{getattr(mcfg, 'name', mcfg.family)}"
+               f":{self.cfg.max_len}:{self.frontend_seq}")
+        self._kp, self._kd = f"serve_prefill:{key}", f"serve_decode:{key}"
+        model, max_len = self.model, self.cfg.max_len
+        front_key = self._front_key
+        table = self.pool.table
+        if self._kp not in table:
+            def serve_prefill(params, toks, embeds=None):
+                batch = {"tokens": toks}
+                if embeds is not None:
+                    batch[front_key] = embeds
+                logits, cache, _ = model.prefill(params, batch,
+                                                 cache_len=max_len)
+                tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+                return {"out": tok, "cache": cache}
+            table.register(self._kp, serve_prefill)
+        if self._kd not in table:
+            def serve_decode(params, cache, tok, pos):
+                logits, new_cache = model.decode_step(params, tok, cache, pos)
+                nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+                return {"out": nxt, "cache": new_cache}
+            table.register(self._kd, serve_decode)
+
+    def _ensure_params(self, d: int) -> None:
+        if d in self._params_on:
+            return
+        self.ex.ensure_resident(d, "serve:params", _serve_params=self.params)
+        # the weights are every step's hot set: exempt them from capacity
+        # eviction so pressure lands on cold sequence caches instead
+        self.ex.pin_resident(d, "_serve_params")
+        self._params_on.add(d)
+
+    def _place_admission(self, r: Request) -> int:
+        from ..core.taskgraph import TaskNode
+        self._ctx.healthy = self.pool.health.healthy(self._D)
+        node = TaskNode(name=f"adm{r.rid}", kernel=self._kd)
+        d = self._policy.place(self._ctx, node, self._adm_idx,
+                               f"serve:adm{r.rid}")
+        self._adm_idx += 1
+        return d
+
+    def _pool_admit(self, reqs: List[Request]) -> None:
+        from ..core.target import MapSpec
+        from ..core.taskgraph import TaskGraph, TaskNode, run_graph
+        t0 = time.perf_counter()
+        g = TaskGraph()
+        metas = []
+        for r in reqs:
+            d = self._place_admission(r)
+            self._ensure_params(d)
+            entry = f"_serve_c{r.rid}"
+            self.ex.alloc_resident(d, entry, self._ctpl, tag=f"serve:c{r.rid}")
+            to: Dict[str, Any] = {"toks": jnp.asarray([r.prompt], jnp.int32)}
+            if self.frontend_seq:
+                to["embeds"] = self._stub(1)
+
+            def mm(deps, to=to, entry=entry):
+                return MapSpec(
+                    to=to, present={"params": "_serve_params"},
+                    device_out={"cache": entry},
+                    from_={"out": jax.ShapeDtypeStruct((1, 1), jnp.int32)})
+
+            g.add(TaskNode(name=f"p{r.rid}", kernel=self._kp, make_maps=mm,
+                           device=d, tag=f"serve:p{r.rid}"))
+            metas.append((r, d, entry))
+        res = run_graph(self.ex, g, policy=self._policy, tag="serve",
+                        stragglers=self.stragglers)
+        dt = (time.perf_counter() - t0) / len(reqs)
+        for r, d, entry in metas:
+            self._p_active[r.rid] = {
+                "req": r, "res": Result(r.rid, prefill_s=dt), "device": d,
+                "entry": entry, "pos": self._prefix + len(r.prompt),
+                "tok": int(np.asarray(res[f"p{r.rid}"])[0, 0])}
+
+    def _pool_decode(self) -> None:
+        from ..core.target import MapSpec
+        from ..core.taskgraph import TaskGraph, TaskNode, run_graph
+        t0 = time.perf_counter()
+        g = TaskGraph()
+        for rid, st in self._p_active.items():
+            tok = jnp.full((1, 1), st["tok"], jnp.int32)
+            pos = jnp.asarray(st["pos"], jnp.int32)
+
+            def mm(deps, tok=tok, pos=pos, entry=st["entry"]):
+                return MapSpec(
+                    firstprivate={"tok": tok, "pos": pos},
+                    present={"params": "_serve_params", "cache": entry},
+                    device_out={"cache": entry},
+                    from_={"out": jax.ShapeDtypeStruct((1, 1), jnp.int32)})
+
+            g.add(TaskNode(name=f"d{rid}", kernel=self._kd, make_maps=mm,
+                           device=st["device"], tag=f"serve:d{rid}"))
+        res = run_graph(self.ex, g, policy=self._policy, tag="serve",
+                        stragglers=self.stragglers)
+        dt = (time.perf_counter() - t0) / len(self._p_active)
+        for rid, st in self._p_active.items():
+            st["tok"] = int(np.asarray(res[f"d{rid}"])[0, 0])
+            st["pos"] += 1
+            st["res"].decode_s += dt
+
+    def _maybe_migrate(self) -> None:
+        """Move the hottest sequence off the deepest device queue: the
+        queue depth IS the per-step latency of every sequence homed there,
+        so the deepest queue is the fleet's p99.  No backlog bookkeeping
+        here — the policy's per-node charges follow the sequence to its new
+        device on the very next decode graph, and a lump transfer would
+        double-count that work."""
+        self._ctx.healthy = self.pool.health.healthy(self._D)
+        cands = self._ctx.candidates()
+        counts = {d: 0 for d in cands}
+        for st in self._p_active.values():
+            counts[st["device"]] = counts.get(st["device"], 0) + 1
+        src = max(counts, key=lambda d: (counts[d], -d))
+        dst = min(counts, key=lambda d: (counts[d], d))
+        if src == dst or counts[src] - counts[dst] < 2:
+            return
+        on_src = [(rid, st) for rid, st in self._p_active.items()
+                  if st["device"] == src]
+        # hottest = longest expected remaining stay
+        rid, st = max(on_src, key=lambda kv: (
+            kv[1]["req"].max_new_tokens - len(kv[1]["res"].tokens), -kv[0]))
+        self._ensure_params(dst)
+        self.ex.propagate_resident(src, dst, st["entry"],
+                                   transport=self.runtime.transport,
+                                   tag=f"serve:mig{rid}")
+        self.ex.exit_data(src, st["entry"])
+        st["device"] = dst
+        self.migrations += 1
+
+    def _step_pool(self) -> List[Result]:
+        completed: List[Result] = []
+        self._shed_out = completed
+        elapsed_ms = (time.perf_counter() - self._t0) * 1e3
+        # 1. admission (placement + prefill graph)
+        admits: List[Request] = []
+        while len(self._p_active) + len(admits) < self.cfg.batch \
+                and self._pending:
+            r = self._shed_or_none(elapsed_ms)
+            if r is None:
+                break
+            admits.append(r)
+        if admits:
+            self._pool_admit(admits)
+        # 2. consume pending tokens; retire finished sequences
+        for rid in list(self._p_active):
+            st = self._p_active[rid]
+            res, r = st["res"], st["req"]
+            res.tokens.append(st["tok"])
+            if st["tok"] == self.cfg.eos \
+                    or len(res.tokens) >= r.max_new_tokens:
+                self.ex.exit_data(st["device"], st["entry"])
+                completed.append(res)
+                del self._p_active[rid]
+        # 3. tail relief: migrate a hot cache off the deepest queue
+        if self.cfg.migrate_every and len(self._p_active) > 1 \
+                and self._steps % self.cfg.migrate_every == 0:
+            self._maybe_migrate()
+        # 4. one decode TaskGraph over every live sequence
+        if self._p_active:
+            self._pool_decode()
+        if self._p_active or completed or admits:
+            self._steps += 1
+        return completed
+
+    # ========================================================================
+    # wave mode (baseline): the seed fixed-wave loop
+    # ========================================================================
+    def _pad_wave(self, reqs: Sequence[Request]) -> Tuple[jax.Array, int]:
+        """Left-pad prompts to a common length; returns (tokens [B,S], S)."""
+        S = max(len(r.prompt) for r in reqs)
+        B = len(reqs)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, S - len(r.prompt):] = np.asarray(r.prompt, np.int32)
+        return jnp.asarray(toks), S
+
     def run_wave(self, reqs: Sequence[Request]) -> List[Result]:
         assert len(reqs) <= self.cfg.batch
         results = [Result(r.rid) for r in reqs]
         tokens, S = self._pad_wave(reqs)
+        pw = np.asarray([S - len(r.prompt) for r in reqs], np.int32)
         budget = max(r.max_new_tokens for r in reqs)
-        prefix = self.frontend_seq if not self.model.cfg.is_encdec else 0
+        prefix = self._prefix
         assert S + prefix + budget <= self.cfg.max_len, \
             "wave exceeds cache capacity"
+        # ragged waves on attention families carry a per-sequence pad mask:
+        # pad slots drop out of every attention and rope positions shift,
+        # so a padded row decodes bit-identically to its unpadded reference
+        masked = self._can_mask and bool(pw.any())
 
         batch: Dict[str, jax.Array] = {"tokens": tokens}
         if self.frontend_seq:
-            stub = jnp.zeros((len(reqs), self.frontend_seq,
-                              self.model.cfg.d_model),
-                             jnp.dtype(self.model.cfg.compute_dtype))
-            batch["enc_embeds" if self.model.cfg.is_encdec else "embeds"] = stub
+            batch[self._front_key] = self._stub(len(reqs))
 
         t0 = time.perf_counter()
-        logits, cache, pos = self._prefill(self.params, batch)
+        if masked:
+            logits, cache, pos = self._prefill_masked(
+                self.params, batch, jnp.asarray(pw))
+        else:
+            logits, cache, pos = self._prefill(self.params, batch)
         logits = jax.block_until_ready(logits)
         t_prefill = time.perf_counter() - t0
 
@@ -130,7 +648,11 @@ class ServeEngine:
                         done[i] = True
             if done.all():
                 break
-            logits, cache = self._decode(self.params, tok, cache, pos)
+            if masked:
+                logits, cache = self._decode_masked(
+                    self.params, tok, cache, pos, jnp.asarray(pw))
+            else:
+                logits, cache = self._decode(self.params, tok, cache, pos)
             pos = pos + 1
             tok = self._sample(logits)
         t_decode = time.perf_counter() - t0
@@ -139,17 +661,7 @@ class ServeEngine:
             r.decode_s = t_decode / len(reqs)
         return results
 
-    # -- request loop -----------------------------------------------------------
-    def serve(self, requests: Sequence[Request]) -> Dict[int, Result]:
-        """Wave-batch a request list; returns {rid: Result} + prints stats.
-
-        Requests carrying ``deadline_ms`` are load-shed: if a request's
-        deadline (measured from this call's start — queueing time counts)
-        has expired by the time its wave forms, it is dropped from the wave
-        and answered with a ``timed_out`` :class:`Result` instead of
-        stretching the wave's padded length and token budget for an answer
-        the caller has stopped waiting for.
-        """
+    def _serve_waves(self, requests: Sequence[Request]) -> Dict[int, Result]:
         out: Dict[int, Result] = {}
         B = self.cfg.batch
         new_tokens = 0

@@ -122,3 +122,222 @@ def test_deadline_mid_batch_shed_later_wave():
     out = eng.serve(reqs)
     assert out[2].timed_out and out[2].tokens == []
     assert len(out[0].tokens) == 6 and len(out[1].tokens) == 6
+
+
+# ---------------------------------------------------------------------------
+# continuous batching on the TaskGraph IR (PR 8)
+# ---------------------------------------------------------------------------
+def _mk(arch, seed=0, remat="none"):
+    cfg = get_smoke_config(arch).replace(remat=remat)
+    model = Model(cfg)
+    return model, model.init(jax.random.PRNGKey(seed))
+
+
+def _ragged(model, n, seed=7, lo=3, hi=12, budget=None):
+    rng = np.random.default_rng(seed)
+    V = model.cfg.vocab
+    return [Request(i, [int(t) for t in rng.integers(1, V, rng.integers(lo, hi))],
+                    max_new_tokens=budget or int(rng.integers(3, 9)))
+            for i in range(n)]
+
+
+def _reference(model, params, reqs, frontend_seq=0, eos=-1):
+    """Per-request unpadded B=1 waves: the exact greedy answer."""
+    eng = ServeEngine(model, params,
+                      ServeConfig(batch=1, max_len=64, eos=eos, mode="wave"),
+                      frontend_seq=frontend_seq)
+    return eng.serve(reqs)
+
+
+@pytest.mark.parametrize("arch,fs", [("gemma-7b", 0), ("internvl2-2b", 4)])
+def test_padded_wave_matches_unpadded_reference(arch, fs):
+    """Satellite fix for the seed's left-padding limitation: ragged waves on
+    attention families carry a per-sequence start-index mask, so a padded
+    row's greedy tokens are bit-identical to its unpadded reference."""
+    model, params = _mk(arch)
+    reqs = _ragged(model, 3, budget=5)
+    eng = ServeEngine(model, params,
+                      ServeConfig(batch=3, max_len=64, mode="wave"),
+                      frontend_seq=fs)
+    out = eng.serve(reqs)
+    ref = _reference(model, params, reqs, frontend_seq=fs)
+    for r in reqs:
+        assert out[r.rid].tokens == ref[r.rid].tokens
+
+
+def test_continuous_bit_identical_to_wave():
+    """Tentpole acceptance: the continuous batcher's greedy tokens are
+    bit-identical to the fixed-wave engine's on fixed seeds."""
+    model, params = _mk("gemma-7b")
+    reqs = _ragged(model, 7)
+    wave = ServeEngine(model, params,
+                       ServeConfig(batch=3, max_len=64, mode="wave"))
+    cont = ServeEngine(model, params, ServeConfig(batch=3, max_len=64))
+    out_w, out_c = wave.serve(reqs), cont.serve(reqs)
+    for r in reqs:
+        assert out_c[r.rid].tokens == out_w[r.rid].tokens
+
+
+@pytest.mark.parametrize("arch", ["mamba2-130m", "zamba2-2.7b"])
+def test_continuous_exact_prefill_state_families(arch):
+    """SSM/hybrid families cannot mask pads; the continuous batcher prefills
+    them unpadded (exact length), matching per-request references."""
+    model, params = _mk(arch)
+    reqs = _ragged(model, 4, budget=4)
+    cont = ServeEngine(model, params, ServeConfig(batch=2, max_len=64))
+    out = cont.serve(reqs)
+    ref = _reference(model, params, reqs)
+    for r in reqs:
+        assert out[r.rid].tokens == ref[r.rid].tokens
+
+
+def test_continuous_admission_under_full_batch():
+    """More requests than slots: arrivals queue and are admitted as slots
+    free, each still decoding its exact greedy continuation."""
+    model, params = _mk("gemma-7b")
+    reqs = _ragged(model, 6, budget=None)
+    eng = ServeEngine(model, params, ServeConfig(batch=2, max_len=64))
+    out = eng.serve(reqs)
+    assert sorted(out) == [r.rid for r in reqs]
+    ref = _reference(model, params, reqs)
+    for r in reqs:
+        assert not out[r.rid].timed_out
+        assert out[r.rid].tokens == ref[r.rid].tokens
+
+
+def test_midstream_eos_frees_slot():
+    """A sequence hitting EOS mid-stream retires at the step boundary and
+    its slot is re-used by the next queued request, while the surviving
+    batchmate keeps decoding bit-exactly."""
+    model, params = _mk("gemma-7b")
+    probe = [Request(0, [3, 1, 4, 1, 5], 6)]
+    first = _reference(model, params, probe)[0].tokens
+    eos = first[1]                        # r0 will stop after two tokens
+    reqs = [Request(0, [3, 1, 4, 1, 5], 6),
+            Request(1, [2, 7, 1, 8], 6),
+            Request(2, [9, 2, 6], 6)]     # queued behind a full batch
+    eng = ServeEngine(model, params,
+                      ServeConfig(batch=2, max_len=64, eos=eos))
+    out = eng.serve(reqs)
+    assert out[0].tokens[-1] == eos and len(out[0].tokens) < 6
+    ref = _reference(model, params, reqs, eos=eos)
+    for r in reqs:
+        assert out[r.rid].tokens == ref[r.rid].tokens
+
+
+def test_deadline_shed_from_admission_queue():
+    """Continuous admission re-checks deadlines whenever a slot frees: a
+    tight-deadline request queued behind a busy slot is shed, never
+    admitted, and the slot-holder is unaffected."""
+    model, params = _mk("gemma-7b")
+    eng = ServeEngine(model, params, ServeConfig(batch=1, max_len=64))
+    reqs = [Request(0, [1, 2, 3], 8),
+            Request(1, [4, 5, 6], 8, deadline_ms=1e-3)]
+    out = eng.serve(reqs)
+    assert out[1].timed_out and out[1].tokens == []
+    assert not out[0].timed_out and len(out[0].tokens) == 8
+
+
+# ---------------------------------------------------------------------------
+# pool mode: device-resident caches, placement, migration, spilling
+# ---------------------------------------------------------------------------
+def _cluster(n, capacity=None):
+    from repro.core import ClusterRuntime, RuntimeConfig
+    return ClusterRuntime(RuntimeConfig(
+        n_virtual=n, device_capacity_bytes=capacity))
+
+
+def test_pool_serving_matches_local():
+    """Pool mode lowers the same loop onto per-sequence TaskNodes with
+    device-resident caches; greedy tokens stay bit-identical, under both
+    placement policies."""
+    model, params = _mk("gemma-7b")
+    reqs = _ragged(model, 5)
+    local = ServeEngine(model, params, ServeConfig(batch=3, max_len=64))
+    out_l = local.serve(reqs)
+    rt = _cluster(2)
+    try:
+        for policy in ("slo", "round-robin"):
+            eng = ServeEngine(model, params,
+                              ServeConfig(batch=3, max_len=64),
+                              runtime=rt, policy=policy)
+            out_p = eng.serve(reqs)
+            for r in reqs:
+                assert out_p[r.rid].tokens == out_l[r.rid].tokens
+    finally:
+        rt.shutdown()
+
+
+def test_pool_migration_rebalances_tail():
+    """Round-robin parks two long sequences on device 0; once the short
+    ones retire, the queue-depth gap triggers a cache migration (via
+    propagate_resident) and tokens stay bit-identical."""
+    model, params = _mk("gemma-7b")
+    reqs = [Request(0, [1, 2, 3], 12), Request(1, [4, 5], 2),
+            Request(2, [6, 7, 8], 12), Request(3, [9, 1], 2)]
+    local = ServeEngine(model, params, ServeConfig(batch=4, max_len=64))
+    out_l = local.serve(reqs)
+    rt = _cluster(2)
+    try:
+        eng = ServeEngine(model, params,
+                          ServeConfig(batch=4, max_len=64, migrate_every=1),
+                          runtime=rt, policy="round-robin")
+        out_p = eng.serve(reqs)
+        assert eng.migrations >= 1
+        for r in reqs:
+            assert out_p[r.rid].tokens == out_l[r.rid].tokens
+    finally:
+        rt.shutdown()
+
+
+def test_capacity_lru_spill_refetch_bit_identical():
+    """With device capacity below the working set, cold sequence caches
+    spill to the host and transparently refetch on their next decode step;
+    tokens are bit-identical to the uncapped run."""
+    import jax.numpy as jnp
+    model, params = _mk("gemma-7b")
+    reqs = _ragged(model, 6, budget=6)
+    rt = _cluster(2)
+    try:
+        ref_eng = ServeEngine(model, params,
+                              ServeConfig(batch=4, max_len=64), runtime=rt)
+        out_u = ref_eng.serve(reqs)
+        tpl = ref_eng._ctpl
+    finally:
+        rt.shutdown()
+    cache_b = sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+                  for s in jax.tree.leaves(tpl))
+    param_b = sum(l.size * l.dtype.itemsize
+                  for l in jax.tree.leaves(params))
+    rt2 = _cluster(2, capacity=param_b + int(1.5 * cache_b))
+    try:
+        eng = ServeEngine(model, params,
+                          ServeConfig(batch=4, max_len=64), runtime=rt2)
+        out_c = eng.serve(reqs)
+        stats = [rt2.pool.present[d].stats() for d in range(2)]
+        assert sum(s["evictions"] for s in stats) > 0
+        assert sum(s["refetches"] for s in stats) > 0
+        for r in reqs:
+            assert out_c[r.rid].tokens == out_u[r.rid].tokens
+    finally:
+        rt2.shutdown()
+
+
+def test_pool_deadline_shed_from_queue():
+    """deadline_ms keeps working under the TaskGraph executor: an expired
+    queued request is shed before placement ever allocates it a cache."""
+    model, params = _mk("gemma-7b")
+    rt = _cluster(2)
+    try:
+        eng = ServeEngine(model, params, ServeConfig(batch=1, max_len=64),
+                          runtime=rt)
+        reqs = [Request(0, [1, 2, 3], 6),
+                Request(1, [4, 5, 6], 6, deadline_ms=1e-3)]
+        out = eng.serve(reqs)
+        assert out[1].timed_out and out[1].tokens == []
+        assert len(out[0].tokens) == 6
+        # the shed request never became resident anywhere
+        for d in range(2):
+            assert rt.pool.present[d].get("_serve_c1") is None
+    finally:
+        rt.shutdown()
