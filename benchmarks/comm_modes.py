@@ -39,6 +39,16 @@ moves ≥2× fewer host-funnel bytes than host-mediated syncs at equal
 ``artifacts/bench/BENCH_comm.json`` from it, so the perf trajectory is
 tracked commit over commit).
 
+``--topology RACKSxPER`` (e.g. ``2x4``) runs every section under a
+hierarchical :class:`~repro.core.topology.Topology`: each pool's devices
+are partitioned into racks of ``PER`` (``RACKS`` documents the intended
+shape; pools of other sizes grow/shrink the rack count), the spine gets
+``--inter-bw-ratio`` of the intra-rack bandwidth, direct-mode collectives
+dispatch the rack-aware hierarchical path, and peer DAG edges are priced
+per pair with block-int8 compression where the link favors it.  Every
+bit-identity assertion must STILL hold — the hierarchical reduction
+carries the same serial association as the flat and host-mediated paths.
+
 ``--inject-p P`` runs every section under seeded peer-fabric chaos:
 ``FlakyDevice`` faults SEND/RECV at probability ``P`` on every device
 (``--inject-seed`` keys the schedule), direct-mode runtimes get transport
@@ -68,6 +78,8 @@ from repro.optim import AdamW, AdamWConfig
 #: p — SEND/RECV crash-fault probability; hang_p — SEND/RECV gray-failure
 #: (hang) probability; slow_ms — EXEC stall injected at _SLOW_P probability.
 _INJECT = {"p": 0.0, "seed": 0, "hang_p": 0.0, "slow_ms": 0.0}
+#: hierarchical-topology flag state; _runtime() builds a per-pool Topology.
+_TOPO = {"per_rack": 0, "ratio": 0.1}
 _SLOW_P = 0.3
 _CHAOS_RUNS: List[Dict] = []
 _DETECTORS: List = []
@@ -102,6 +114,10 @@ def _runtime(cfg: RuntimeConfig, table: KernelTable) -> ClusterRuntime:
             cfg.command_deadline_s = 10.0
         if cfg.transport_op_timeout_s is None:
             cfg.transport_op_timeout_s = 0.1
+    if _TOPO["per_rack"] > 0 and cfg.topology is None:
+        from repro.core import Topology
+        cfg.topology = Topology.partition(cfg.n_virtual, _TOPO["per_rack"],
+                                          inter_bw_ratio=_TOPO["ratio"])
     rt = ClusterRuntime(cfg, table=table)
     if not _chaos_active():
         return rt
@@ -461,6 +477,14 @@ if __name__ == "__main__":
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also dump every section's rows to PATH (the CI "
                          "writes artifacts/bench/BENCH_comm.json)")
+    ap.add_argument("--topology", metavar="RACKSxPER", default=None,
+                    help="run every section under a hierarchical topology: "
+                         "racks of PER devices (e.g. 2x4), collectives "
+                         "dispatch the rack-aware path")
+    ap.add_argument("--inter-bw-ratio", type=float, default=0.1,
+                    metavar="R", help="spine bandwidth as a fraction of the "
+                         "intra-rack link (default 0.1 — the paper's Gbit "
+                         "Ethernet under a 10GbE leaf)")
     ap.add_argument("--inject-p", type=float, default=0.0, metavar="P",
                     help="seeded SEND/RECV fault probability per device "
                          "command (0 disables chaos)")
@@ -479,6 +503,14 @@ if __name__ == "__main__":
                     help="dump straggler-timeout/hedge/backoff counts to "
                          "PATH (the CI straggler-chaos job uploads it)")
     args = ap.parse_args()
+    if args.topology:
+        try:
+            racks, per = (int(t) for t in args.topology.lower().split("x"))
+        except ValueError:
+            ap.error(f"--topology wants RACKSxPER (e.g. 2x4), "
+                     f"got {args.topology!r}")
+        _TOPO["per_rack"] = per
+        _TOPO["ratio"] = args.inter_bw_ratio
     _INJECT["p"] = args.inject_p
     _INJECT["seed"] = args.inject_seed
     _INJECT["hang_p"] = args.hang_p
@@ -501,7 +533,10 @@ if __name__ == "__main__":
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         with open(args.json, "w") as f:
             json.dump({"benchmark": "comm_modes",
-                       "smoke": bool(args.smoke), "sections": sections},
+                       "smoke": bool(args.smoke),
+                       "topology": args.topology,
+                       "inter_bw_ratio": args.inter_bw_ratio,
+                       "sections": sections},
                       f, indent=2, sort_keys=True)
         print(f"wrote {args.json}")
     if _INJECT["p"] > 0:

@@ -9,6 +9,8 @@ Public API:
   TaskGraph / TaskNode / run_graph    unified task-graph IR the patterns lower into
   RoundRobin / LocalityAffinity / HeftPlacement / SloPlacement   placement policies
   Transport / HostFunnelTransport / PeerTransport   device↔device fabric + collectives
+  Topology                     racks + per-pair link costs (hierarchical collectives,
+                               compression-aware edge routing)
   ClusterRuntime / RuntimeConfig   deployable runtime, comm modes, cost model
 """
 from .costmodel import (CostModel, Event, LinkModel, PAPER_ETHERNET,
@@ -24,6 +26,7 @@ from .runtime import ClusterRuntime, RuntimeConfig
 from .scheduler import (DagTask, PeerRef, offload_strips, recursive_offload,
                         strip_partition, wavefront_offload)
 from .target import MapSpec, Section, TargetExecutor, TargetFuture, sec
+from .topology import INTRA_RACK, Topology
 from .taskgraph import (GraphCheckpoint, GraphInterrupted, HeftPlacement,
                         LocalityAffinity, PlacementContext, PlacementPolicy,
                         RoundRobin, SloPlacement, TaskGraph, TaskNode,
@@ -45,6 +48,7 @@ __all__ = [
     "HeftPlacement", "SloPlacement",
     "ClusterRuntime", "RuntimeConfig",
     "Transport", "HostFunnelTransport", "PeerTransport",
+    "Topology", "INTRA_RACK",
     "CostModel", "LinkModel", "Event", "PeerRecord", "TimelineSpan",
     "PAPER_ETHERNET", "TPU_ICI", "TPU_DCN",
     "PEAK_FLOPS_BF16", "HBM_BW_Bps", "ICI_BW_Bps",

@@ -51,6 +51,16 @@ def compressed_nbytes(c: Compressed) -> int:
     return c.q.size * 1 + c.scale.size * 4
 
 
+def int8_wire_nbytes(n_elements: int, block: int = 256) -> int:
+    """Wire size of an ``n_elements`` message under :func:`compress`,
+    without materializing it: the padded int8 payload plus one f32 scale
+    per block — exactly ``compressed_nbytes(compress(x, block))``.  Pure
+    layout arithmetic, so cost models can price the compressed wire for
+    messages that exist only as byte counts."""
+    blocks = -(-max(int(n_elements), 1) // block)
+    return blocks * block * 1 + blocks * 4
+
+
 def ef_compress(x: jax.Array, residual: jax.Array, block: int = 256
                 ) -> Tuple[Compressed, jax.Array]:
     """Error-feedback step: compress (x + residual), return new residual."""

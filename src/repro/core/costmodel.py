@@ -131,13 +131,19 @@ class CostModel:
     """
 
     def __init__(self, link: LinkModel = PAPER_ETHERNET,
-                 peer_link: Optional[LinkModel] = None) -> None:
+                 peer_link: Optional[LinkModel] = None,
+                 topology=None) -> None:
         self.link = link
         # the device↔device link (None = same fabric as the host link); the
         # transport layer records SEND/RECV traffic against this model so
         # peer collectives are *timed* on their own lanes, never credited
         # against the host NIC
         self.peer_link = peer_link
+        # optional repro.core.topology.Topology: when set, each directed
+        # peer pair is timed on ITS link (intra-rack vs spine, per-pair
+        # overrides) instead of the one uniform peer_link, and cross-rack
+        # traffic is accounted separately (bytes_peer_cross_rack)
+        self.topology = topology
         self.transfers: List[TransferRecord] = []
         self.compute: List[ComputeRecord] = []
         self.adjustments: List[TransferRecord] = []
@@ -310,6 +316,25 @@ class CostModel:
         """Bytes moved device→device — real messages, zero host-NIC load."""
         return sum(p.nbytes for p in self.peers)
 
+    def bytes_peer_cross_rack(self) -> int:
+        """Peer bytes whose (src, dst) pair crosses a rack boundary under
+        the installed topology — the traffic the thin spine links carry,
+        and exactly what the hierarchical collectives minimize.  0 when no
+        topology is installed (a flat fabric has no boundaries)."""
+        if self.topology is None:
+            return 0
+        return sum(p.nbytes for p in self.peers
+                   if self.topology.covers(p.src, p.dst)
+                   and self.topology.cross_rack(p.src, p.dst))
+
+    def peer_link_for(self, src: int, dst: int) -> LinkModel:
+        """The link model timing one directed (src, dst) peer message:
+        the topology's per-pair link when one is installed, else the
+        uniform ``peer_link`` (host link as the final fallback)."""
+        if self.topology is not None and self.topology.covers(src, dst):
+            return self.topology.link_between(src, dst)
+        return self.peer_link or self.link
+
     def comm_time(self) -> float:
         """Total host-funnel communication time (serialized at the host NIC)."""
         wire = sum(self.link.time(t.nbytes, t.n_messages) for t in self.transfers)
@@ -321,12 +346,15 @@ class CostModel:
         """Peer-fabric communication time: links carry traffic concurrently,
         each directed (src, dst) link serializes its own messages — the max
         per-link sum is the collective's modeled duration (a D-device ring
-        takes one link's worth of time per round, not D)."""
-        plink = self.peer_link or self.link
+        takes one link's worth of time per round, not D).  Each directed
+        pair is priced by :meth:`peer_link_for`, so under a topology an
+        intra-rack and a spine message cost what *their* links charge."""
         per_link: Dict[Tuple[int, int], float] = {}
         for p in self.peers:
             k = (p.src, p.dst)
-            per_link[k] = per_link.get(k, 0.0) + plink.time(p.nbytes, p.n_messages)
+            per_link[k] = per_link.get(k, 0.0) \
+                + self.peer_link_for(p.src, p.dst).time(p.nbytes,
+                                                        p.n_messages)
         return max(per_link.values(), default=0.0)
 
     def compute_time(self) -> float:
@@ -357,7 +385,6 @@ class CostModel:
         """
         with self._lock:
             events = list(self.events)
-        plink = self.peer_link or self.link
         tx_t, rx_t = 0.0, 0.0
         dev_t: Dict[int, float] = {}          # compute / host-xfer occupancy
         dev_tx: Dict[int, float] = {}         # peer send side, full duplex
@@ -382,7 +409,8 @@ class CostModel:
                 start = max(link_t.get(lk, 0.0),
                             dev_t.get(e.src, 0.0), dev_tx.get(e.src, 0.0),
                             dev_t.get(e.device, 0.0), dev_rx.get(e.device, 0.0))
-                end = start + plink.time(e.nbytes, e.n_messages)
+                end = start + self.peer_link_for(e.src, e.device).time(
+                    e.nbytes, e.n_messages)
                 link_t[lk] = dev_tx[e.src] = dev_rx[e.device] = end
                 spans.append(TimelineSpan(start, end, f"p{e.src}>{e.device}", e))
             elif e.kind == "compute":
@@ -428,6 +456,7 @@ class CostModel:
             "bytes_to": float(self.bytes_moved("to")),
             "bytes_from": float(self.bytes_moved("from")),
             "bytes_peer": float(self.bytes_peer()),
+            "bytes_peer_cross_rack": float(self.bytes_peer_cross_rack()),
             "comm_s": self.comm_time(),
             "peer_s": self.peer_time(),
             "compute_s": self.compute_time(),

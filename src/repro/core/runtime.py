@@ -35,6 +35,7 @@ from .costmodel import CostModel, LinkModel, PAPER_ETHERNET
 from .device import DevicePool
 from .kernel_table import GLOBAL_KERNEL_TABLE, KernelTable
 from .target import MapSpec, Section, TargetExecutor
+from .topology import Topology
 from .transport import HostFunnelTransport, PeerTransport, Transport
 
 
@@ -47,6 +48,14 @@ class RuntimeConfig:
     # device↔device link for comm_mode="direct" (None: same fabric as `link`
     # — the paper's cluster is one Gbit Ethernet for every pair of nodes)
     peer_link: Optional[LinkModel] = None
+    # hierarchical fabric shape (None: flat, every pair priced by peer_link).
+    # A multi-rack Topology makes comm_mode="direct" rack-aware end to end:
+    # per-pair edge pricing in the cost model and placement policies,
+    # hierarchical collectives (reduce-within-rack → leader chain →
+    # broadcast-within-rack, still bit-identical to host-mediated), and
+    # compression-aware "peer+int8" edge routing where a link favors it.
+    # Must describe exactly the pool's device count.
+    topology: Optional[Topology] = None
     compress: bool = False
     max_host_threads: int = 16
     # resident-memory budget per device's present table, in bytes (None =
@@ -89,14 +98,24 @@ class ClusterRuntime:
                 capacity_bytes=cfg.device_capacity_bytes,
                 deadline_s=cfg.command_deadline_s)
         self.ex = TargetExecutor(self.pool, max_host_threads=cfg.max_host_threads)
+        if cfg.topology is not None \
+                and cfg.topology.n_devices != len(self.pool):
+            raise ValueError(
+                f"topology describes {cfg.topology.n_devices} devices but "
+                f"the pool has {len(self.pool)}")
         # the transport is what "direct" now *means*: a real peer fabric of
-        # SEND/RECV stream commands, not a byte-accounting credit
+        # SEND/RECV stream commands, not a byte-accounting credit.  The
+        # topology (when given) rides on both the cost model (per-pair
+        # peer timing, cross-rack byte accounting) and the transport
+        # (hierarchical collectives, compression-aware edge routing).
         self.pool.cost.peer_link = cfg.peer_link
+        self.pool.cost.topology = cfg.topology
         self.transport: Transport = (
             PeerTransport(cfg.peer_link, retries=cfg.transport_retries,
                           op_timeout_s=cfg.transport_op_timeout_s,
                           backoff_base_s=cfg.transport_backoff_base_s,
-                          seed=cfg.transport_backoff_seed)
+                          seed=cfg.transport_backoff_seed,
+                          topology=cfg.topology)
             if cfg.comm_mode == "direct" else HostFunnelTransport())
         self._ef_residual: Optional[Any] = None
         self._dps: Optional[Dict[str, Any]] = None   # data_parallel_step state

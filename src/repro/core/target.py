@@ -553,7 +553,8 @@ class TargetExecutor:
                 write_futs=[None] * len(hs), device_ahead=True))
 
     def propagate_resident(self, src: int, dst: int, name: str, *,
-                           transport: Any = None, tag: str = "peer") -> None:
+                           transport: Any = None, tag: str = "peer",
+                           compress_wire: bool = False) -> None:
         """Fulfill a present entry device→device: ``dst`` gains (or refreshes)
         entry ``name`` from ``src``'s device copy, without host reconciliation.
 
@@ -566,6 +567,14 @@ class TargetExecutor:
         caller.  ``transport`` defaults to a :class:`~repro.core.transport.
         PeerTransport`; pass a ``HostFunnelTransport`` to route the same
         fulfillment through the host NIC (the paper-faithful wire).
+
+        ``compress_wire=True`` accounts each leaf's message at its
+        block-int8 wire size (the transport topology's block, 256 without
+        one) instead of the raw bytes — *modeled* wire compression: the
+        payload itself still moves intact (``peer_copy``'s ``nbytes``
+        override), so the destination's value is bit-identical either way.
+        The graph runner sets this when the placement policy routed the
+        edge ``"peer+int8"``.
         """
         if src == dst:
             return
@@ -622,9 +631,18 @@ class TargetExecutor:
                                              tag=f"{tag}:{name}")
                             for dh, leaf in zip(dst_handles, snap.host_leaves)]
                 else:
+                    wires: List[Optional[int]] = [None] * len(specs)
+                    if compress_wire:
+                        from . import compression as _comp
+                        block = getattr(getattr(transport, "topology", None),
+                                        "block", 256)
+                        wires = [_comp.compressed_nbytes(jax.eval_shape(
+                            lambda x: _comp.compress(x, block), s))
+                            for s in specs]
                     futs = [transport.sendrecv(pool, src, sh, dst, dh,
-                                               tag=f"{tag}:{name}")
-                            for sh, dh in zip(src_handles, dst_handles)]
+                                               nbytes=w, tag=f"{tag}:{name}")
+                            for (sh, dh), w in zip(zip(src_handles,
+                                                       dst_handles), wires)]
                 if dent is None:
                     pool.present[dst].add(snap.peer_clone(dst_handles, futs))
                 else:

@@ -204,6 +204,11 @@ class PlacementContext:
     # must place only onto these; the runner refreshes the list per wave and
     # after every recovered failure.
     healthy: Optional[List[int]] = None
+    # the transport's repro.core.topology.Topology, when it has one (the
+    # runner mirrors it here): rack structure + per-pair link costs a
+    # policy may query directly — e.g. topology.same_rack(a, b) — beyond
+    # what edge pricing already folds in.
+    topology: Any = None
 
     def candidates(self) -> List[int]:
         """The devices a policy may place onto, always non-empty."""
@@ -228,7 +233,17 @@ class PlacementPolicy:
 
     def route_edge(self, ctx: PlacementContext, src: int, dst: int,
                    nbytes: int) -> str:
-        """``"peer"`` or ``"funnel"`` for one cross-device dependency edge."""
+        """Which wire carries one cross-device dependency edge:
+        ``"peer"`` (raw peer message), ``"peer+int8"`` (peer message under
+        the modeled block-int8 wire — chosen by the transport's topology
+        where the link's bandwidth-delay arithmetic says the byte savings
+        beat the quantize cost), or ``"funnel"`` (fetch + re-send on the
+        host NIC).  The base policy defers the peer/compressed choice to
+        the transport's own :meth:`~repro.core.transport.Transport.
+        edge_route`; without a topology that is always plain ``"peer"``.
+        """
+        if ctx.transport is not None:
+            return ctx.transport.edge_route(ctx.cost, src, dst, nbytes)[1]
         return "peer"
 
 
@@ -302,7 +317,12 @@ class HeftPlacement(PlacementPolicy):
     funnel (fetch + re-send on the NIC) and the peer fabric
     (:meth:`Transport.edge_time`) — the same comparison
     :meth:`route_edge` answers, so the runner moves each dependency over
-    the wire the policy priced.  Every decision is logged via
+    the wire the policy priced.  Under a transport with a
+    :class:`~repro.core.topology.Topology`, peer edges are priced per
+    device pair (fat intra-rack links vs the thin spine), so EFT naturally
+    packs hot producer→consumer chains into one rack and routes the edges
+    it must send cross-rack as ``"peer+int8"`` where the link favors the
+    compressed wire.  Every decision is logged via
     :meth:`CostModel.record_placement` for predicted-vs-observed reports.
     """
 
@@ -326,12 +346,17 @@ class HeftPlacement(PlacementPolicy):
     def _edge(self, ctx: PlacementContext, src: int, dst: int,
               nbytes: int) -> Tuple[float, str]:
         # the funnel price comes from the transport layer's own model, so
-        # the two can never drift apart
+        # the two can never drift apart; edge_route folds in the per-pair
+        # topology price AND the compression decision ("peer+int8" where
+        # the link is thin enough for the int8 wire to win), so HEFT packs
+        # hot edges intra-rack and compresses the ones it must send over
+        # the spine — one comparison decides placement and routing both
         funnel = self._FUNNEL.edge_time(ctx.cost, src, dst, nbytes)
         if ctx.peer and ctx.transport is not None:
-            peer_s = ctx.transport.edge_time(ctx.cost, src, dst, nbytes)
+            peer_s, wire = ctx.transport.edge_route(ctx.cost, src, dst,
+                                                    nbytes)
             if peer_s <= funnel:
-                return peer_s, "peer"
+                return peer_s, wire
         return funnel, "funnel"
 
     def route_edge(self, ctx: PlacementContext, src: int, dst: int,
@@ -681,12 +706,17 @@ def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
     policy = resolve_policy(policy)
     if peer and transport is None:
         from .transport import PeerTransport
-        transport = PeerTransport()
+        # inherit the pool's topology (ClusterRuntime installs it on the
+        # cost model) so the default peer fabric prices edges per pair and
+        # routes "peer+int8" where the link favors the compressed wire
+        transport = PeerTransport(
+            topology=getattr(ex.pool.cost, "topology", None))
     pool = ex.pool
     D = len(pool)
     ctx = PlacementContext(pool=pool, cost=pool.cost, D=D, peer=peer,
                            transport=transport,
-                           healthy=pool.health.healthy(D))
+                           healthy=pool.health.healthy(D),
+                           topology=getattr(transport, "topology", None))
     policy.begin(ctx)
 
     # peer mode: every (device, entry-name) this run pinned — producer
@@ -789,7 +819,8 @@ def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
                     pres[k] = entry
                 else:
                     nb = ctx.out_bytes.get(v.task, 0)
-                    if policy.route_edge(ctx, src_dev, dev, nb) == "funnel":
+                    route = policy.route_edge(ctx, src_dev, dev, nb)
+                    if route == "funnel":
                         # the policy priced the funnel cheaper for this edge:
                         # fetch + re-map, exactly the paper's wire — ONE
                         # fetch per producer (outputs are write-once here),
@@ -800,10 +831,16 @@ def run_graph(ex: TargetExecutor, graph: TaskGraph, *,
                     else:
                         # per-region edge tag: a later discard_tag of this
                         # region (a speculation loser) strikes these peer
-                        # records too, not only its funnel records
-                        ex.propagate_resident(src_dev, dev, entry,
-                                              transport=transport,
-                                              tag=f"{region_tag}:edge")
+                        # records too, not only its funnel records.
+                        # "peer+int8": the policy chose the block-int8 wire
+                        # for this pair's link — the accounted message size
+                        # shrinks to the compressed layout (the payload
+                        # moves intact: modeled wire compression, so
+                        # results stay bit-identical)
+                        ex.propagate_resident(
+                            src_dev, dev, entry, transport=transport,
+                            tag=f"{region_tag}:edge",
+                            compress_wire=(route == "peer+int8"))
                         peer_entries[(dev, entry)] = True
                         ctx.replicas.setdefault(v.task, set()).add(dev)
                         pres[k] = entry

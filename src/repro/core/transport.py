@@ -31,6 +31,21 @@ difference instead of a ``record_adjustment`` pretending it:
   device order, matching the host-mediated ``sum(views)/D`` exactly, so
   direct parameter averaging is *bit-identical* to the funnel path.
 
+**Hierarchical path** (rack-aware): installing a
+:class:`~repro.core.topology.Topology` with more than one rack on the
+transport makes every collective above dispatch to its hierarchical
+counterpart — reduce-within-rack onto each rack leader, *chain* the partial
+across the leaders in ascending order, then broadcast leader-to-leaders and
+within each rack.  Cross-rack traffic drops from the flat ring's
+``O(D·|buf|)`` to ``O(R·|buf|)`` (one partial up the chain, one result back
+down), and because the chain adds in ascending device order the result is
+**bitwise identical** to the serial left-associated sum — the same
+association :meth:`allreduce_mean`'s flat reduction and the host-mediated
+``sum(views)/D`` use, so flat, hierarchical and host-mediated paths all
+agree bit for bit.  (The flat *ring* all-reduce associates per ring
+position, so it agrees with the others only to float tolerance — the
+hierarchical path is the more-exact one.)
+
 All collectives operate on mediary handles already resident on the devices
 and compose with the dependency-aware stream: SEND reads, RECV writes, the
 on-device reduction EXECs read both operands and write back the accumulator,
@@ -55,6 +70,7 @@ from .costmodel import LinkModel
 ADD_KERNEL = "__transport_add"
 DIV_KERNEL = "__transport_div"
 Q8_KERNEL = "__transport_q8"
+ID_KERNEL = "__transport_id"
 
 
 def _ensure_kernels(pool) -> None:
@@ -63,13 +79,17 @@ def _ensure_kernels(pool) -> None:
         table.register(ADD_KERNEL, lambda a, b: a + b)
     if DIV_KERNEL not in table:
         table.register(DIV_KERNEL, lambda a, s: a / s)
+    if ID_KERNEL not in table:
+        # device-local move of a finished scratch accumulator into a live
+        # buffer (a stream writer, no wire traffic)
+        table.register(ID_KERNEL, lambda a: a)
     if Q8_KERNEL not in table:
         from . import compression as comp
 
-        def q8_roundtrip(a):
+        def q8_roundtrip(a, block=256):
             # what the wire does to a message under block-int8 compression:
             # quantize, (send,) dequantize — the lossy round trip, on-device
-            return comp.decompress(comp.compress(a), a.shape, a.dtype)
+            return comp.decompress(comp.compress(a, block), a.shape, a.dtype)
 
         table.register(Q8_KERNEL, q8_roundtrip)
 
@@ -82,6 +102,17 @@ class Transport:
     """
 
     kind = "abstract"
+
+    #: Optional :class:`~repro.core.topology.Topology`.  When set (and it
+    #: describes the pool with more than one rack) the collectives dispatch
+    #: hierarchically and :meth:`edge_time`/:meth:`edge_route` price per
+    #: device pair instead of uniformly.
+    topology = None
+
+    def _hier_ok(self, D: int) -> bool:
+        """Whether the hierarchical collective path applies at size ``D``."""
+        t = self.topology
+        return t is not None and t.n_racks > 1 and t.n_devices == D
 
     def sendrecv(self, pool, src: int, src_handle: int,
                  dst: int, dst_handle: int, *,
@@ -103,6 +134,18 @@ class Transport:
         copy is a fetch plus a re-send, two messages on the host NIC.
         """
         return cost.link.time(nbytes, 1) * 2
+
+    def edge_route(self, cost, src: int, dst: int,
+                   nbytes: int) -> "tuple[float, str]":
+        """``(seconds, wire)`` for one dependency edge over this fabric.
+
+        ``wire`` is the route string a placement policy hands the runner:
+        ``"peer"`` for a raw message, ``"peer+int8"`` where a topology-aware
+        transport decides the block-int8 wire beats the raw bytes on this
+        pair's link.  The base fabric has no per-pair knowledge: one raw
+        message at :meth:`edge_time`'s price.
+        """
+        return self.edge_time(cost, src, dst, nbytes), "peer"
 
     # -- collectives -----------------------------------------------------------
     def ring_allreduce(self, pool, handles: Sequence[Sequence[int]],
@@ -126,11 +169,19 @@ class Transport:
         ``wire_nbytes[j]`` overrides leaf ``j``'s accounted message size
         (modeled wire compression).  Returns the per-device per-leaf futures
         of the final accumulator writes (stream ordering for entry updates).
+
+        With a multi-rack :attr:`topology` installed this dispatches to
+        :meth:`hier_allreduce` — same in-place sum, ``O(R)`` instead of
+        ``O(D)`` cross-rack messages, and a *serial* (ascending) addition
+        order where the ring's is per-position.
         """
         D, L = len(handles), len(specs)
         last: List[List[Any]] = [[None] * L for _ in range(D)]
         if D <= 1:
             return last
+        if self._hier_ok(D):
+            return self.hier_allreduce(pool, handles, specs,
+                                       wire_nbytes=wire_nbytes, tag=tag)
         _ensure_kernels(pool)
         tmp = [[[pool.alloc(d, s.shape, s.dtype, tag=f"{tag}:tmp")
                  for s in specs] for d in range(D)] for _ in range(2)]
@@ -186,9 +237,13 @@ class Transport:
         """Ring-chain broadcast of ``root``'s buffer into every device's
         handles (root → root+1 → …).  Each hop's SEND reads the handle the
         previous hop's RECV wrote, so the chain pipelines per leaf.  Returns
-        per-device per-leaf futures of the destination writes."""
+        per-device per-leaf futures of the destination writes.  Dispatches
+        to :meth:`hier_broadcast` under a multi-rack :attr:`topology`."""
         D, L = len(handles), len(specs)
         last: List[List[Any]] = [[None] * L for _ in range(D)]
+        if self._hier_ok(D):
+            return self.hier_broadcast(pool, handles, specs, root=root,
+                                       tag=tag)
         chain = [(root + i) % D for i in range(D)]
         for prev, cur in zip(chain, chain[1:]):
             for j in range(L):
@@ -204,11 +259,19 @@ class Transport:
         Gather to ``root``, reduce there in ascending device order (the same
         association as the host's ``sum(views) / D``), divide by ``D``, then
         ring-broadcast the mean back into every device's handles.
+
+        With a multi-rack :attr:`topology` installed this dispatches to
+        :meth:`hier_allreduce_mean`, whose leader-chain reduction carries
+        the identical ascending association — still bit-identical to the
+        host-mediated path, with ``O(R)`` cross-rack messages.
         """
         D, L = len(handles), len(specs)
         last: List[List[Any]] = [[None] * L for _ in range(D)]
         if D <= 1:
             return last
+        if self._hier_ok(D):
+            return self.hier_allreduce_mean(pool, handles, specs, root=root,
+                                            tag=tag)
         _ensure_kernels(pool)
         scratch = self.gather(pool, handles, specs, root=root, tag=f"{tag}:gather")
         # accumulate in ASCENDING DEVICE order — device d's operand is its
@@ -244,27 +307,226 @@ class Transport:
                 last[d] = bcast[d]
         return last
 
+    # -- hierarchical collectives (rack-aware, beyond the flat ring) -----------
+    def _hier_chain_reduce(self, pool, handles, specs, wire_nbytes, tag,
+                           scratch):
+        """Serial-association hierarchical SUM: returns ``(root, total)``.
+
+        Per rack (contiguous ascending blocks — the Topology constructor
+        guarantees it): every non-leader member SENDs its buffer to the rack
+        leader (the intra-rack gathers of different racks run concurrently);
+        each leader then folds ``incoming partial + own buffer + member
+        copies`` left-to-right in ascending device order and SENDs the new
+        partial to the next rack's leader.  The one cross-rack message per
+        rack boundary is what replaces the flat ring's ``(D-1)`` crossings,
+        and the fold order makes the total *bitwise* equal to the serial
+        left-associated ascending sum ``((h_0 + h_1) + h_2) + …``.
+
+        ``total`` are per-leaf scratch handles on ``root`` (the last rack's
+        leader); live buffers are never written.  Every allocated slot is
+        appended to ``scratch`` as ``(device, handle)`` — the caller frees.
+        """
+        L = len(specs)
+        topo = self.topology
+        wb = (lambda j: None) if wire_nbytes is None \
+            else (lambda j: wire_nbytes[j])
+
+        def _alloc(dev, j, kind):
+            h = pool.alloc(dev, specs[j].shape, specs[j].dtype,
+                           tag=f"{tag}:{kind}")
+            scratch.append((dev, h))
+            return h
+
+        # 1) intra-rack gather onto each leader (all racks concurrent)
+        gathered: Dict[int, List[int]] = {}     # member -> handles at leader
+        for rack in topo.racks:
+            lead = rack[0]
+            for m in rack[1:]:
+                gathered[m] = [_alloc(lead, j, "up") for j in range(L)]
+                for j in range(L):
+                    self.sendrecv(pool, m, handles[m][j],
+                                  lead, gathered[m][j], nbytes=wb(j),
+                                  tag=f"{tag}:up")
+        # 2) fold + chain across leaders in ascending rack order
+        carry_dev, carry = None, None
+        for rack in topo.racks:
+            lead = rack[0]
+            incoming = None
+            if carry is not None:
+                incoming = [_alloc(lead, j, "chain") for j in range(L)]
+                for j in range(L):
+                    self.sendrecv(pool, carry_dev, carry[j],
+                                  lead, incoming[j], nbytes=wb(j),
+                                  tag=f"{tag}:chain")
+            acc: List[Optional[int]] = [None] * L
+            for j in range(L):
+                ops = ([] if incoming is None else [incoming[j]])
+                ops += [handles[m][j] if m == lead else gathered[m][j]
+                        for m in rack]
+                a = ops[0]
+                for b in ops[1:]:
+                    out = pool.exec_kernel(lead, ADD_KERNEL,
+                                           buffers={"a": a, "b": b},
+                                           tag=f"{tag}:add")
+                    if acc[j] is None:
+                        # partials park in scratch, never in a live buffer
+                        acc[j] = _alloc(lead, j, "acc")
+                    pool.transfer_to_writeback(lead, acc[j], out)
+                    a = acc[j]
+                if acc[j] is None:
+                    acc[j] = a   # singleton first rack: its live buffer IS
+                                 # the partial (read-only from here on)
+            carry_dev, carry = lead, acc
+        return carry_dev, carry
+
+    def hier_allreduce(self, pool, handles: Sequence[Sequence[int]],
+                       specs: Sequence[jax.ShapeDtypeStruct], *,
+                       wire_nbytes: Optional[Sequence[int]] = None,
+                       tag: str = "hier") -> List[List[Any]]:
+        """Rack-aware in-place sum (the :meth:`ring_allreduce` contract).
+
+        reduce-within-rack → chain-across-rack-leaders → move the total
+        into the final leader's live buffer → :meth:`hier_broadcast` it
+        back out.  Cross-rack messages: one partial per rack boundary up,
+        one result per boundary down — ``2·(R-1)`` of size ``|buf|``
+        against the flat ring's ``(D-1)`` per crossing link.  The chain's
+        ascending fold makes every device's result bitwise equal to the
+        serial ascending sum (see the module docstring).
+        """
+        D, L = len(handles), len(specs)
+        last: List[List[Any]] = [[None] * L for _ in range(D)]
+        if D <= 1:
+            return last
+        _ensure_kernels(pool)
+        scratch: List[Any] = []
+        try:
+            root, total = self._hier_chain_reduce(pool, handles, specs,
+                                                  wire_nbytes, tag, scratch)
+            for j in range(L):
+                out = pool.exec_kernel(root, ID_KERNEL,
+                                       buffers={"a": total[j]},
+                                       tag=f"{tag}:fin")
+                last[root][j] = pool.transfer_to_writeback(
+                    root, handles[root][j], out)
+            down = self.hier_broadcast(pool, handles, specs, root=root,
+                                       tag=f"{tag}:down",
+                                       wire_nbytes=wire_nbytes)
+            for d in range(D):
+                if d != root:
+                    last[d] = down[d]
+        finally:
+            for dev, h in scratch:
+                pool.free(dev, h)
+        return last
+
+    def hier_allreduce_mean(self, pool, handles: Sequence[Sequence[int]],
+                            specs: Sequence[jax.ShapeDtypeStruct], *,
+                            root: int = 0,
+                            tag: str = "havg") -> List[List[Any]]:
+        """Rack-aware mean, bit-identical to flat :meth:`allreduce_mean`
+        and to the host-mediated ``sum(views)/D``.
+
+        Same leader chain as :meth:`hier_allreduce` (the identical serial
+        association), then the final leader divides by ``D`` — its live
+        buffer written exactly once, by that divide, preserving the flat
+        path's all-or-nothing property — and :meth:`hier_broadcast`
+        distributes the mean.  ``root`` does not change the values (every
+        device receives identical bits), so the reduction is anchored at
+        the last rack's leader regardless.
+        """
+        D, L = len(handles), len(specs)
+        last: List[List[Any]] = [[None] * L for _ in range(D)]
+        if D <= 1:
+            return last
+        _ensure_kernels(pool)
+        scratch: List[Any] = []
+        try:
+            anchor, total = self._hier_chain_reduce(pool, handles, specs,
+                                                    None, tag, scratch)
+            for j in range(L):
+                out = pool.exec_kernel(anchor, DIV_KERNEL,
+                                       buffers={"a": total[j]},
+                                       firstprivate={"s": float(D)},
+                                       tag=f"{tag}:mean")
+                last[anchor][j] = pool.transfer_to_writeback(
+                    anchor, handles[anchor][j], out)
+            down = self.hier_broadcast(pool, handles, specs, root=anchor,
+                                       tag=f"{tag}:bcast")
+            for d in range(D):
+                if d != anchor:
+                    last[d] = down[d]
+        finally:
+            for dev, h in scratch:
+                pool.free(dev, h)
+        return last
+
+    def hier_broadcast(self, pool, handles: Sequence[Sequence[int]],
+                       specs: Sequence[jax.ShapeDtypeStruct], *,
+                       root: int = 0, tag: str = "hbcast",
+                       wire_nbytes: Optional[Sequence[int]] = None
+                       ) -> List[List[Any]]:
+        """Rack-aware broadcast of ``root``'s buffer into every handle.
+
+        The root's rack is served first; a leader chain carries the buffer
+        across the other racks (one cross-rack message per boundary), and
+        within each rack an intra-rack chain forwards it member to member —
+        every hop stream-ordered after the previous hop's RECV, so the
+        chains pipeline per leaf exactly like the flat ring broadcast.
+        """
+        D, L = len(handles), len(specs)
+        last: List[List[Any]] = [[None] * L for _ in range(D)]
+        topo = self.topology
+        wb = (lambda j: None) if wire_nbytes is None \
+            else (lambda j: wire_nbytes[j])
+        r0 = topo.rack_of(root)
+        order = [r0] + [r for r in range(topo.n_racks) if r != r0]
+        entry = {r0: root}
+        prev = root
+        for r in order[1:]:
+            lead = topo.leader(r)
+            for j in range(L):
+                last[lead][j] = self.sendrecv(pool, prev, handles[prev][j],
+                                              lead, handles[lead][j],
+                                              nbytes=wb(j), tag=f"{tag}:x")
+            entry[r] = lead
+            prev = lead
+        for r, rack in enumerate(topo.racks):
+            chain = [entry[r]] + [m for m in rack if m != entry[r]]
+            for p, c in zip(chain, chain[1:]):
+                for j in range(L):
+                    last[c][j] = self.sendrecv(pool, p, handles[p][j],
+                                               c, handles[c][j],
+                                               nbytes=wb(j), tag=f"{tag}:in")
+        return last
+
     def quantize_int8(self, pool, handles: Sequence[Sequence[int]],
                       specs: Sequence[jax.ShapeDtypeStruct], *,
-                      tag: str = "q8") -> List[int]:
+                      block: int = 256, tag: str = "q8") -> List[int]:
         """Apply the wire's block-int8 round trip to every device's buffer
         in place and return the per-leaf compressed message sizes, for use
-        as ``wire_nbytes`` in a following collective."""
-        import numpy as np
+        as ``wire_nbytes`` in a following collective.
+
+        The sizes are derived from :func:`~repro.core.compression.
+        compressed_nbytes` of the actual compressed spec (via
+        ``jax.eval_shape``), so they track ``block`` — a non-default block
+        cannot silently mis-account the wire credits against the 256-value
+        layout.
+        """
+        from . import compression as comp
 
         _ensure_kernels(pool)
+        block = int(block)
         for d in range(len(handles)):
             for j in range(len(specs)):
                 out = pool.exec_kernel(d, Q8_KERNEL,
                                        buffers={"a": handles[d][j]},
+                                       firstprivate={"block": block},
+                                       static_argnames=("block",),
                                        tag=f"{tag}:quantize")
                 pool.transfer_to_writeback(d, handles[d][j], out)
-        sizes = []
-        for s in specs:
-            n = int(np.prod(s.shape, dtype=np.int64)) if s.shape else 1
-            blocks = -(-n // 256)          # compression.compress block=256
-            sizes.append(blocks * 256 * 1 + blocks * 4)  # int8 payload + scales
-        return sizes
+        return [comp.compressed_nbytes(
+            jax.eval_shape(lambda x: comp.compress(x, block), s))
+            for s in specs]
 
 
 class HostFunnelTransport(Transport):
@@ -321,8 +583,12 @@ class PeerTransport(Transport):
     def __init__(self, link: Optional[LinkModel] = None,
                  retries: int = 0, *, op_timeout_s: Optional[float] = None,
                  backoff_base_s: float = 1e-3, backoff_cap_s: float = 0.1,
-                 seed: int = 0) -> None:
+                 seed: int = 0, topology=None) -> None:
         self.link = link
+        # a Topology makes the fabric hierarchical: per-pair edge pricing
+        # (intra vs inter rack), compression-aware edge routing, and
+        # rack-aware collective dispatch (see Transport._hier_ok)
+        self.topology = topology
         self.retries = retries
         self.op_timeout_s = op_timeout_s
         self.backoff_base_s = backoff_base_s
@@ -390,6 +656,24 @@ class PeerTransport(Transport):
             self._backoff(attempt)
 
     def edge_time(self, cost, src: int, dst: int, nbytes: int) -> float:
-        """One message on the directed (src, dst) peer link — no funnel hop."""
+        """One message on the directed (src, dst) peer link — no funnel hop.
+
+        With a :attr:`topology` covering both endpoints the price is
+        per-pair (intra-rack vs spine, plus any per-pair override) and
+        already reflects the cheaper of the raw and block-int8 wires —
+        the same number :meth:`edge_route` routes by, so placement and
+        routing can never disagree on what an edge costs.
+        """
+        if self.topology is not None and self.topology.covers(src, dst):
+            return self.topology.edge_seconds(src, dst, nbytes)[0]
         plink = self.link or cost.peer_link or cost.link
         return plink.time(nbytes, 1)
+
+    def edge_route(self, cost, src: int, dst: int, nbytes: int):
+        """Per-pair price and wire choice: ``"peer+int8"`` where the link's
+        bandwidth-delay arithmetic says compression wins (thin spine links,
+        big messages), plain ``"peer"`` everywhere else."""
+        if self.topology is not None and self.topology.covers(src, dst):
+            seconds, compressed = self.topology.edge_seconds(src, dst, nbytes)
+            return seconds, ("peer+int8" if compressed else "peer")
+        return self.edge_time(cost, src, dst, nbytes), "peer"
