@@ -4,9 +4,17 @@ Real TPU timing is unavailable here; this bench (a) times the *oracle* XLA
 paths on CPU as a regression canary, and (b) derives the Pallas kernels'
 static tile economics — VMEM working set per grid step and arithmetic
 intensity — which is how the BlockSpecs were chosen (DESIGN.md §kernels).
+
+``--json PATH`` writes the timed rows in the :class:`CalibrationProfile`
+schema (``repro.core.calibrate``) — the same JSON layout the cluster
+calibration pass persists, so downstream tooling (``benchmarks/roofline.py``,
+profile diffing) reads microbench output and cluster profiles identically.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 from typing import Dict, List
 
@@ -15,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def _time(fn, *args, reps: int = 5) -> float:
+def _time(fn, *args, reps: int = 5) -> Dict[str, float]:
     fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
         jax.block_until_ready(fn(*args))
     ts = []
@@ -23,7 +31,8 @@ def _time(fn, *args, reps: int = 5) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return {"seconds": float(np.median(ts)), "min_s": float(np.min(ts)),
+            "max_s": float(np.max(ts)), "reps": reps}
 
 
 def flash_tile_stats(block_q=128, block_kv=128, d=128, dtype_bytes=2) -> Dict:
@@ -62,8 +71,9 @@ def run() -> List[Dict]:
     k = jax.random.normal(ks[1], (1, 512, 2, 64))
     v = jax.random.normal(ks[2], (1, 512, 2, 64))
     attn = jax.jit(lambda q, k, v: blockwise_attention(q, k, v, causal=True))
+    st = _time(attn, q, k, v)
     rows.append({"kernel": "blockwise_attention(XLA,cpu)",
-                 "wall_ms": 1e3 * _time(attn, q, k, v)})
+                 "wall_ms": 1e3 * st["seconds"], "_timing": st})
 
     x = jax.random.normal(ks[0], (1, 512, 8, 32))
     dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 512, 8)))
@@ -71,19 +81,61 @@ def run() -> List[Dict]:
     B = jax.random.normal(ks[3], (1, 512, 2, 16))
     C = jax.random.normal(ks[4], (1, 512, 2, 16))
     ssd = jax.jit(lambda *a: ssd_chunked(*a, chunk=128))
+    st = _time(ssd, x, dt, A, B, C)
     rows.append({"kernel": "ssd_chunked(XLA,cpu)",
-                 "wall_ms": 1e3 * _time(ssd, x, dt, A, B, C)})
+                 "wall_ms": 1e3 * st["seconds"], "_timing": st})
     return rows
+
+
+def to_profile_dict(rows: List[Dict]) -> Dict:
+    """Timed rows as a CalibrationProfile JSON document (untimed tile-stat
+    rows land in ``skipped_kernels``; no pool was involved, so n_devices=0
+    and the link table is empty)."""
+    from repro.core.calibrate import (CalibrationProfile, KernelProfile,
+                                      host_info)
+    kernels = {}
+    skipped = []
+    for r in rows:
+        st = r.get("_timing")
+        if st is None:
+            skipped.append(r["kernel"])
+            continue
+        kernels[r["kernel"]] = KernelProfile(
+            name=r["kernel"], seconds=st["seconds"], reps=st["reps"],
+            min_s=st["min_s"], max_s=st["max_s"])
+    profile = CalibrationProfile(
+        version=1, created_unix=time.time(), host=host_info(),
+        n_devices=0, table_fingerprint="", topology=None,
+        kernels=kernels, skipped_kernels=skipped)
+    return profile.to_dict()
 
 
 def render(rows: List[Dict]) -> str:
     out = ["## kernel tile economics + oracle timings"]
     for r in rows:
         parts = [f"{k}={v:.2f}" if isinstance(v, float) else f"{k}={v}"
-                 for k, v in r.items() if k != "kernel"]
+                 for k, v in r.items() if k != "kernel"
+                 and not k.startswith("_")]
         out.append(f"  {r['kernel']:<32} " + "  ".join(parts))
     return "\n".join(out)
 
 
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the timed kernels as a "
+                         "CalibrationProfile-schema JSON")
+    args = ap.parse_args()
+    rows = run()
+    print(render(rows))
+    if args.json:
+        d = os.path.dirname(os.path.abspath(args.json))
+        os.makedirs(d, exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(to_profile_dict(rows), f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    return 0
+
+
 if __name__ == "__main__":
-    print(render(run()))
+    raise SystemExit(main())

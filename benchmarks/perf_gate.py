@@ -1,0 +1,379 @@
+"""Regression gate over the committed BENCH_*.json perf trajectory, plus the
+measured-calibration acceptance gate.
+
+Two halves, both exit-code enforced (CI job ``perf-gate``):
+
+1. **Trajectory gate** — re-runs the four bench entrypoints exactly as their
+   CI jobs do (``comm_modes --smoke``, ``sched_policies``, ``topo_collectives
+   --smoke``, ``serve_load --smoke``) and compares every *deterministic*
+   metric (modeled ``comm_s``/``peer_s``, byte counters, reduction
+   percentages) against the committed ``artifacts/bench/BENCH_*.json``
+   baselines within ``--noise-band`` percent.  Boolean invariants
+   (``tokens_identical``) must hold exactly.  Wall-clock metrics
+   (``tokens_per_s``, ``p99_ms``, ``makespan_overlap_s``) are NOT gated here
+   — the benches assert their own inline bounds, and a bench subprocess
+   failing *is* a gate failure.
+
+2. **Calibration gate** — the ISSUE acceptance criterion: on a synthetic
+   host whose true kernel/link costs diverge >=4x from the model defaults
+   (fast funnel, pathologically thin peer fabric, cheap kernels), HEFT
+   seeded from a :class:`~repro.core.calibrate.CalibrationProfile`
+   (``estimates="calibrated"`` after ``load_calibration``) must beat
+   uncalibrated HEFT (frozen defaults) by >= ``--min-win-pct`` percent of
+   *true-cost modeled makespan* on the sparselu wavefront (K=4, B=64, 4
+   devices) — with results bitwise identical either way (placement moves
+   bytes, never values).
+
+Side artifacts: a fresh real-host calibration profile under
+``artifacts/calibration/`` and the predicted-vs-observed placement roofline
+(``artifacts/roofline_placement.md``) for the CI upload.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_DIR = os.path.join(REPO, "artifacts", "bench")
+
+# (name, argv tail, committed baseline) — argv mirrors the CI jobs exactly.
+BENCHES = [
+    ("comm", ["benchmarks/comm_modes.py", "--smoke"], "BENCH_comm.json"),
+    ("sched", ["benchmarks/sched_policies.py"], "BENCH_sched.json"),
+    ("topo", ["benchmarks/topo_collectives.py", "--smoke"], "BENCH_topo.json"),
+    ("serve", ["benchmarks/serve_load.py", "--smoke"], "BENCH_serve.json"),
+]
+
+# Deterministic leaves gated within the noise band.  Everything timed by a
+# wall clock (tokens_per_s, p50/p99, wall_s, makespan_overlap_s) stays out.
+GATED_LEAVES = {
+    "comm": {"bytes_to", "bytes_from", "bytes_peer", "comm_s"},
+    "sched": {"bytes_to", "bytes_from", "bytes_peer", "reduction_pct",
+              "devs_used", "evictions", "total_MB"},
+    "topo": {"bytes_peer", "bytes_cross_rack", "peer_s", "comm_s"},
+    "serve": {"tokens", "requests"},
+}
+
+# Boolean invariants: must be True in the fresh run (and in the baseline).
+GATED_BOOLS = {
+    "serve": {"tokens_identical"},
+}
+
+# Fields that identify a row inside a JSON list (stable across runs).
+_ROW_KEYS = ("section", "update", "mode", "params", "mapping", "policy",
+             "dispatch", "devices", "elems", "steps", "tasks", "strips")
+
+
+def flatten(obj: Any, prefix: str = "") -> Dict[str, Any]:
+    """Flatten a bench JSON to {path: scalar}; list rows are keyed by their
+    identifying fields, not their index, so reordering never false-fails."""
+    out: Dict[str, Any] = {}
+    if isinstance(obj, dict):
+        for k in sorted(obj):
+            out.update(flatten(obj[k], f"{prefix}/{k}"))
+    elif isinstance(obj, list):
+        for i, row in enumerate(obj):
+            if isinstance(row, dict):
+                ident = ",".join(f"{k}={row[k]}" for k in _ROW_KEYS
+                                 if k in row) or str(i)
+                out.update(flatten(row, f"{prefix}[{ident}]"))
+            else:
+                out[f"{prefix}[{i}]"] = row
+    else:
+        out[prefix] = obj
+    return out
+
+
+def _leaf(path: str) -> str:
+    return path.rsplit("/", 1)[-1]
+
+
+def compare(name: str, base: Dict[str, Any], fresh: Dict[str, Any],
+            noise_band_pct: float) -> List[str]:
+    """Failures comparing a fresh bench run against its committed baseline."""
+    fails: List[str] = []
+    fb, ff = flatten(base), flatten(fresh)
+    gated = GATED_LEAVES.get(name, set())
+    bools = GATED_BOOLS.get(name, set())
+    for path, bval in sorted(fb.items()):
+        leaf = _leaf(path)
+        if leaf in bools:
+            fval = ff.get(path)
+            if bval is True and fval is not True:
+                fails.append(f"{name}:{path}: invariant was true, now {fval}")
+            continue
+        if leaf not in gated or not isinstance(bval, (int, float)) \
+                or isinstance(bval, bool):
+            continue
+        if path not in ff:
+            fails.append(f"{name}:{path}: metric missing from fresh run")
+            continue
+        fval = ff[path]
+        tol = abs(bval) * noise_band_pct / 100.0 + 1e-9
+        if abs(fval - bval) > tol:
+            fails.append(f"{name}:{path}: {bval:g} -> {fval:g} "
+                         f"(band ±{noise_band_pct:g}%)")
+    return fails
+
+
+def run_bench(argv_tail: List[str], json_out: str) -> Optional[str]:
+    """Run one bench subprocess; returns an error string on failure."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable] + argv_tail + ["--json", json_out]
+    proc = subprocess.run(cmd, cwd=REPO, env=env,
+                          capture_output=True, text=True)
+    if proc.returncode != 0:
+        return (f"{' '.join(argv_tail)} exited {proc.returncode}\n"
+                f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}")
+    return None
+
+
+def trajectory_gate(noise_band_pct: float) -> Tuple[List[str], Dict[str, Any]]:
+    fails: List[str] = []
+    detail: Dict[str, Any] = {}
+    for name, argv_tail, baseline_fn in BENCHES:
+        base_path = os.path.join(BENCH_DIR, baseline_fn)
+        if not os.path.exists(base_path):
+            fails.append(f"{name}: missing committed baseline {baseline_fn}")
+            continue
+        with open(base_path) as f:
+            base = json.load(f)
+        with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tf:
+            tmp = tf.name
+        try:
+            err = run_bench(argv_tail, tmp)
+            if err:
+                fails.append(f"{name}: bench failed: {err}")
+                detail[name] = {"status": "bench-failed"}
+                continue
+            with open(tmp) as f:
+                fresh = json.load(f)
+        finally:
+            os.unlink(tmp)
+        bench_fails = compare(name, base, fresh, noise_band_pct)
+        fails.extend(bench_fails)
+        n_gated = sum(1 for p, v in flatten(base).items()
+                      if _leaf(p) in GATED_LEAVES.get(name, set())
+                      and isinstance(v, (int, float))
+                      and not isinstance(v, bool))
+        detail[name] = {"status": "fail" if bench_fails else "ok",
+                        "gated_metrics": n_gated,
+                        "failures": bench_fails}
+    return fails, detail
+
+
+# ---------------------------------------------------------------------------
+# calibration acceptance gate
+# ---------------------------------------------------------------------------
+def _true_makespan(cost, true_funnel, true_peer,
+                   true_kernels: Dict[str, float]) -> float:
+    """Re-price a run's recorded traffic under the synthetic host's TRUE
+    costs: serialized host funnel + the busiest directed peer link + the
+    busiest device's compute (the same serial structure as
+    ``CostModel.makespan(overlap=False)``, with truth substituted)."""
+    comm = sum(true_funnel.time(t.nbytes, t.n_messages)
+               for t in cost.transfers)
+    per_link: Dict[Tuple[int, int], float] = {}
+    for p in cost.peers:
+        key = (p.src, p.dst)
+        per_link[key] = per_link.get(key, 0.0) \
+            + true_peer.time(p.nbytes, p.n_messages)
+    per_dev: Dict[int, float] = {}
+    for c in cost.compute:
+        per_dev[c.device] = per_dev.get(c.device, 0.0) \
+            + true_kernels.get(c.kernel, 30e-6)
+    return comm + max(per_link.values(), default=0.0) \
+        + max(per_dev.values(), default=0.0)
+
+
+def calibration_gate(min_win_pct: float, save_report: bool = True
+                     ) -> Tuple[List[str], Dict[str, Any]]:
+    import numpy as np
+
+    from bots_sparselu import _build_dag, _make_table, _matrix
+    from repro.core import (ClusterRuntime, HeftPlacement, RuntimeConfig,
+                            PAPER_ETHERNET)
+    from repro.core.calibrate import (CalibrationProfile, KernelProfile,
+                                      LinkProfile, host_info)
+    from repro.core.costmodel import LinkModel
+
+    K, B, n_dev = 4, 64, 4
+    # the synthetic TRUE host — every number >=4x off the model defaults
+    # (funnel default 125e6 Bps / 50µs, peer default = funnel, kernel
+    # default DEFAULT_KERNEL_TIME_S = 1e-3 s):
+    true_funnel = LinkModel("true-funnel", 1e9, 10e-6)     # 8x faster
+    true_peer = LinkModel("true-peer", 5e6, 1e-3)          # 25x slower, 20x lat
+    true_kernels = {"lu0": 30e-6, "fwd": 25e-6, "bdiv": 25e-6,
+                    "bmod": 35e-6}                         # ~30x cheaper
+
+    def run_arm(calibrated: bool):
+        mat = _matrix(K, B)
+        rt = ClusterRuntime(RuntimeConfig(n_virtual=n_dev,
+                                          link=PAPER_ETHERNET),
+                            table=_make_table(K))
+        if calibrated:
+            profile = CalibrationProfile(
+                version=1, created_unix=time.time(), host=host_info(),
+                n_devices=n_dev,
+                table_fingerprint=rt.pool.table.fingerprint(),
+                topology=None,
+                kernels={k: KernelProfile(name=k, seconds=s, reps=1,
+                                          min_s=s, max_s=s)
+                         for k, s in true_kernels.items()},
+                links={"funnel": LinkProfile("funnel",
+                                             true_funnel.bandwidth_Bps,
+                                             true_funnel.latency_s),
+                       "peer": LinkProfile("peer", true_peer.bandwidth_Bps,
+                                           true_peer.latency_s)})
+            rt.load_calibration(profile)
+            policy = HeftPlacement(estimates="calibrated")
+        else:
+            policy = HeftPlacement(estimates="frozen")
+        res = rt.wavefront_offload(_build_dag(mat, K, B), nowait=True,
+                                   peer=True, policy=policy)
+        values = {k: np.asarray(v) for k, v in res.items()}
+        makespan = _true_makespan(rt.cost, true_funnel, true_peer,
+                                  true_kernels)
+        report = rt.cost.placement_report(roofline=True) if calibrated \
+            else None
+        rt.shutdown()
+        return values, makespan, report
+
+    uncal_vals, uncal_s, _ = run_arm(calibrated=False)
+    cal_vals, cal_s, placement_report = run_arm(calibrated=True)
+
+    fails: List[str] = []
+    if sorted(uncal_vals) != sorted(cal_vals):
+        fails.append("calibration: result key sets differ between arms")
+    else:
+        for k in uncal_vals:
+            if uncal_vals[k].tobytes() != cal_vals[k].tobytes():
+                fails.append(f"calibration: result {k!r} not bit-identical "
+                             "across arms")
+                break
+    win_pct = (1.0 - cal_s / uncal_s) * 100.0 if uncal_s > 0 else 0.0
+    if win_pct < min_win_pct:
+        fails.append(
+            f"calibration: calibrated HEFT won only {win_pct:.1f}% of true "
+            f"modeled makespan (uncal {uncal_s * 1e3:.3f}ms -> cal "
+            f"{cal_s * 1e3:.3f}ms); gate requires >= {min_win_pct:g}%")
+
+    if save_report and placement_report is not None:
+        from roofline import render_placement_roofline
+        os.makedirs(os.path.join(REPO, "artifacts"), exist_ok=True)
+        with open(os.path.join(REPO, "artifacts",
+                               "roofline_placement.md"), "w") as f:
+            f.write("### calibrated sparselu: predicted-vs-observed "
+                    "placement roofline\n\n")
+            f.write(render_placement_roofline(placement_report) + "\n")
+
+    detail = {"status": "fail" if fails else "ok",
+              "uncalibrated_true_makespan_s": uncal_s,
+              "calibrated_true_makespan_s": cal_s,
+              "win_pct": win_pct, "min_win_pct": min_win_pct,
+              "bit_identical": not any("bit-identical" in f or
+                                       "key sets" in f for f in fails)}
+    return fails, detail
+
+
+def refresh_host_profile() -> Optional[str]:
+    """Calibrate this host against the sparselu kernel table and persist the
+    profile under artifacts/calibration/ (the CI artifact upload)."""
+    import jax.numpy as jnp
+
+    from bots_sparselu import _make_table, lu0_ref
+    from repro.core import ClusterRuntime, RuntimeConfig, PAPER_ETHERNET
+    from repro.core.calibrate import PROFILE_DIR
+
+    B = 64
+    a = jnp.eye(B, dtype=jnp.float32) * 4.0 + 0.01
+    lu = lu0_ref(a)
+    operands = {"lu0": (a,), "fwd": (lu, a), "bdiv": (lu, a),
+                "bmod": (a, a, a)}
+    rt = ClusterRuntime(RuntimeConfig(n_virtual=4, link=PAPER_ETHERNET),
+                        table=_make_table(4))
+    try:
+        profile = rt.calibrate(operands,
+                               save_dir=os.path.join(REPO, PROFILE_DIR))
+    finally:
+        rt.shutdown()
+    return os.path.join(REPO, PROFILE_DIR,
+                        f"{profile.host['hostname']}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--noise-band", type=float, default=15.0, metavar="PCT",
+                    help="allowed %% drift per deterministic metric vs the "
+                         "committed BENCH_*.json baseline (default 15)")
+    ap.add_argument("--min-win-pct", type=float, default=20.0, metavar="PCT",
+                    help="calibration gate: required true-makespan win of "
+                         "calibrated over uncalibrated HEFT (default 20)")
+    ap.add_argument("--skip-bench", action="store_true",
+                    help="skip the bench trajectory gate (calibration gate "
+                         "only)")
+    ap.add_argument("--skip-calibration", action="store_true",
+                    help="skip the calibration gate (trajectory gate only)")
+    ap.add_argument("--no-profile", action="store_true",
+                    help="do not refresh this host's calibration profile")
+    ap.add_argument("--report", metavar="PATH", default=None,
+                    help="write the gate report JSON here")
+    args = ap.parse_args()
+
+    fails: List[str] = []
+    report: Dict[str, Any] = {"noise_band_pct": args.noise_band}
+
+    if not args.skip_bench:
+        t_fails, t_detail = trajectory_gate(args.noise_band)
+        fails.extend(t_fails)
+        report["trajectory"] = t_detail
+        for name, d in t_detail.items():
+            print(f"[perf-gate] {name}: {d['status']} "
+                  f"({d.get('gated_metrics', 0)} gated metrics)")
+
+    if not args.skip_calibration:
+        c_fails, c_detail = calibration_gate(args.min_win_pct)
+        fails.extend(c_fails)
+        report["calibration"] = c_detail
+        print(f"[perf-gate] calibration: {c_detail['status']} "
+              f"(win {c_detail['win_pct']:.1f}% over uncalibrated, "
+              f"bit_identical={c_detail['bit_identical']})")
+
+    if not args.no_profile:
+        try:
+            path = refresh_host_profile()
+            report["host_profile"] = path
+            print(f"[perf-gate] host profile refreshed: {path}")
+        except Exception as e:           # profile refresh is best-effort
+            report["host_profile_error"] = repr(e)
+            print(f"[perf-gate] host profile refresh failed (non-fatal): "
+                  f"{e!r}")
+
+    report["failures"] = fails
+    report["ok"] = not fails
+    if args.report:
+        os.makedirs(os.path.dirname(os.path.abspath(args.report)),
+                    exist_ok=True)
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+    if fails:
+        print(f"\n[perf-gate] FAIL ({len(fails)}):")
+        for msg in fails:
+            print(f"  - {msg}")
+        return 1
+    print("\n[perf-gate] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -4,6 +4,14 @@ Reads every ``artifacts/dryrun/*.json`` written by ``repro.launch.dryrun``
 and renders the per-(arch × shape × mesh) three-term roofline table plus the
 bottleneck and MODEL_FLOPS/HLO_FLOPs ratio, in the exact form EXPERIMENTS.md
 §Roofline embeds.
+
+Also renders the *measured* side: every calibration profile under
+``artifacts/calibration/`` (written by ``repro.core.calibrate``) gets a
+per-kernel roofline table — median seconds, dry-run FLOPs/bytes, arithmetic
+intensity, achieved FLOP/s against the chip roof — plus the fitted link
+table, and ``render_placement_roofline`` turns a
+``CostModel.placement_report(roofline=True)`` payload into the
+predicted-vs-observed table the perf gate uploads.
 """
 from __future__ import annotations
 
@@ -11,6 +19,14 @@ import glob
 import json
 import os
 from typing import Dict, List, Optional
+
+# chip constants for the roof at a given intensity; keep the script usable
+# without PYTHONPATH=src by falling back to the same numbers hlo_analysis
+# hard-codes (TPU-v5e-class bf16 peak and HBM bandwidth)
+try:
+    from repro.core import PEAK_FLOPS_BF16, HBM_BW_Bps
+except ImportError:                                   # pragma: no cover
+    PEAK_FLOPS_BF16, HBM_BW_Bps = 197e12, 819e9
 
 
 def load(art_dir: str = "artifacts/dryrun",
@@ -54,6 +70,8 @@ def summarize(recs: List[Dict]) -> Dict[str, List[str]]:
     """Pick the hillclimb cells: worst fraction, most collective-bound."""
     single = [r for r in recs if r["mesh"] == "single" and r["rules"] == "default"]
     trains = [r for r in single if r["kind"] == "train"]
+    if not single or not trains:
+        return {"worst_fraction": [], "most_collective": []}
     worst = min(trains, key=lambda r: r["roofline_fraction"])
     coll = max(single, key=lambda r: (r["t_collective_s"] /
                                       max(r["t_compute_s"], 1e-12)))
@@ -61,18 +79,113 @@ def summarize(recs: List[Dict]) -> Dict[str, List[str]]:
             "most_collective": [coll["arch"], coll["shape"]]}
 
 
+# ---------------------------------------------------------------------------
+# measured side: calibration profiles + placement roofline
+# ---------------------------------------------------------------------------
+def load_profiles(art_dir: str = "artifacts/calibration") -> List[Dict]:
+    """Every per-host calibration profile JSON under ``art_dir``."""
+    out = []
+    for fn in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(fn) as f:
+            prof = json.load(f)
+        prof["_file"] = os.path.basename(fn)
+        out.append(prof)
+    return out
+
+
+def _fmt(v, spec: str = ".3g") -> str:
+    return format(v, spec) if isinstance(v, (int, float)) else "—"
+
+
+def render_calibration_table(prof: Dict) -> str:
+    """Per-kernel roofline table for one calibration profile dict."""
+    hdr = ("| kernel | median | reps | FLOPs | bytes | intensity "
+           "| achieved FLOP/s | roof FLOP/s | frac | bound |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for name in sorted(prof.get("kernels", {})):
+        k = prof["kernels"][name]
+        intensity = (k["flops"] / k["bytes_accessed"]
+                     if k.get("bytes_accessed") else 0.0)
+        achieved = (k["flops"] / k["seconds"]
+                    if k.get("flops") and k["seconds"] > 0 else None)
+        roof = (min(PEAK_FLOPS_BF16, intensity * HBM_BW_Bps)
+                if intensity else None)
+        frac = achieved / roof if achieved and roof else None
+        bound = (("compute" if intensity >= PEAK_FLOPS_BF16 / HBM_BW_Bps
+                  else "memory") if intensity else "—")
+        lines.append(
+            f"| {name} | {k['seconds'] * 1e6:.1f}µs | {k.get('reps', 1)} "
+            f"| {_fmt(k.get('flops', 0.0))} | {_fmt(k.get('bytes_accessed', 0.0))} "
+            f"| {_fmt(intensity)} | {_fmt(achieved)} | {_fmt(roof)} "
+            f"| {_fmt(frac)} | {bound} |")
+    skipped = prof.get("skipped_kernels", [])
+    if skipped:
+        lines.append(f"\nskipped (no operands): {', '.join(sorted(skipped))}")
+    return "\n".join(lines)
+
+
+def render_links_table(prof: Dict) -> str:
+    """Fitted alpha-beta link table for one calibration profile dict."""
+    hdr = ("| link | bandwidth | latency | samples |\n|---|---|---|---|")
+    lines = [hdr]
+    for name in sorted(prof.get("links", {})):
+        l = prof["links"][name]
+        lines.append(
+            f"| {name} | {l['bandwidth_Bps'] / 1e6:.1f} MB/s "
+            f"| {l['latency_s'] * 1e6:.1f}µs | {len(l.get('samples', []))} |")
+    return "\n".join(lines)
+
+
+def render_placement_roofline(report: Dict) -> str:
+    """Render ``CostModel.placement_report(roofline=True)`` output: the
+    per-kernel predicted-vs-observed rows (``model_ratio`` = observed /
+    calibrated — 1.0 means the calibrated model nailed the live run)."""
+    hdr = ("| kernel | obs | observed | calibrated | model ratio "
+           "| intensity | roofline frac | bound |\n"
+           "|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in report.get("roofline", []):
+        obs_s = (f"{r['observed_s'] * 1e6:.1f}µs"
+                 if r.get("observed_s") is not None else "—")
+        cal_s = (f"{r['calibrated_s'] * 1e6:.1f}µs"
+                 if r.get("calibrated_s") is not None else "—")
+        lines.append(
+            f"| {r['kernel']} | {r['observations']} | {obs_s} | {cal_s} "
+            f"| {_fmt(r.get('model_ratio'), '.2f')} "
+            f"| {_fmt(r.get('intensity'))} "
+            f"| {_fmt(r.get('roofline_fraction'))} "
+            f"| {r.get('bound') or '—'} |")
+    return "\n".join(lines)
+
+
 def main() -> int:
     recs = load()
+    out_lines: List[str] = []
     for mesh in ("single", "multi"):
         n = sum(1 for r in recs if r["mesh"] == mesh and r["rules"] == "default")
         print(f"\n### mesh={mesh} (default rules, {n} cells)\n")
         print(render_table(recs, mesh=mesh))
+        out_lines.append(f"\n### mesh={mesh} (default rules)\n")
+        out_lines.append(render_table(recs, mesh=mesh))
     print("\nhillclimb candidates:", json.dumps(summarize(recs)))
+    profiles = load_profiles()
+    for prof in profiles:
+        host = prof.get("host", {}).get("hostname", prof["_file"])
+        print(f"\n### calibration: {host} ({prof['_file']})\n")
+        print(render_calibration_table(prof))
+        print()
+        print(render_links_table(prof))
+        out_lines.append(f"\n### calibration: {host} ({prof['_file']})\n")
+        out_lines.append(render_calibration_table(prof))
+        out_lines.append("")
+        out_lines.append(render_links_table(prof))
+    if not profiles:
+        print("\n(no calibration profiles under artifacts/calibration/ — "
+              "run repro.core.calibrate or benchmarks/perf_gate.py)")
     os.makedirs("artifacts", exist_ok=True)
     with open("artifacts/roofline_table.md", "w") as f:
-        for mesh in ("single", "multi"):
-            f.write(f"\n### mesh={mesh} (default rules)\n\n")
-            f.write(render_table(recs, mesh=mesh) + "\n")
+        f.write("\n".join(out_lines) + "\n")
     return 0
 
 

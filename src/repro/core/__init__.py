@@ -12,10 +12,14 @@ Public API:
   Topology                     racks + per-pair link costs (hierarchical collectives,
                                compression-aware edge routing)
   ClusterRuntime / RuntimeConfig   deployable runtime, comm modes, cost model
+  CalibrationProfile / calibrate   measured kernel/link costs seeding the model
 """
-from .costmodel import (CostModel, Event, LinkModel, PAPER_ETHERNET,
-                        PeerRecord, TimelineSpan, TPU_DCN, TPU_ICI,
-                        PEAK_FLOPS_BF16, HBM_BW_Bps, ICI_BW_Bps)
+from .calibrate import (CalibrationProfile, KernelProfile, LinkProfile,
+                        RegionMarker, StaleProfileError, calibrate,
+                        fit_alpha_beta, profile_kernels, profile_links)
+from .costmodel import (CostModel, DEFAULT_KERNEL_TIME_S, Event, LinkModel,
+                        PAPER_ETHERNET, PeerRecord, TimelineSpan, TPU_DCN,
+                        TPU_ICI, PEAK_FLOPS_BF16, HBM_BW_Bps, ICI_BW_Bps)
 from .device import (Command, DeviceFailure, DevicePool, DeviceStoppedError,
                      HealthRegistry, NodeDevice, SLOT_STREAM, StragglerTimeout,
                      StreamTicket)
@@ -51,5 +55,8 @@ __all__ = [
     "Topology", "INTRA_RACK",
     "CostModel", "LinkModel", "Event", "PeerRecord", "TimelineSpan",
     "PAPER_ETHERNET", "TPU_ICI", "TPU_DCN",
-    "PEAK_FLOPS_BF16", "HBM_BW_Bps", "ICI_BW_Bps",
+    "PEAK_FLOPS_BF16", "HBM_BW_Bps", "ICI_BW_Bps", "DEFAULT_KERNEL_TIME_S",
+    "CalibrationProfile", "KernelProfile", "LinkProfile", "RegionMarker",
+    "StaleProfileError", "calibrate", "fit_alpha_beta",
+    "profile_kernels", "profile_links",
 ]

@@ -38,6 +38,13 @@ class LinkModel:
 
 # The paper's cluster: Gbit Ethernet (§5.2). ~125 MB/s peak, ~50us MPI latency.
 PAPER_ETHERNET = LinkModel("gbit-ethernet", 125e6, 50e-6)
+
+# The documented cold-start compute estimate: what a cost-driven policy
+# charges for a kernel with no observations AND no calibration-profile seed
+# (1 ms — the historical HeftPlacement default_task_s).  Every time the
+# fallback ladder bottoms out here the model counts a cold prediction
+# (``summary()["cold_predictions"]``) so a run placed blind is visible.
+DEFAULT_KERNEL_TIME_S = 1e-3
 # TPU v5e targets (system constants used throughout §Roofline).
 TPU_ICI = LinkModel("tpu-v5e-ici", 50e9, 1e-6)        # ~50 GB/s per link
 TPU_DCN = LinkModel("tpu-dcn", 25e9, 10e-6)           # cross-pod data-center network
@@ -144,6 +151,13 @@ class CostModel:
         # overrides) instead of the one uniform peer_link, and cross-rack
         # traffic is accounted separately (bytes_peer_cross_rack)
         self.topology = topology
+        # optional repro.core.calibrate.CalibrationProfile installed by
+        # load_profile(): seeds kernel_time (until live observations land)
+        # and replaced link/peer_link/topology-tier models with measured fits
+        self.profile = None
+        # how many kernel_time estimates bottomed out at the documented
+        # default — no observation, no calibration seed (blind placements)
+        self.cold_predictions = 0
         self.transfers: List[TransferRecord] = []
         self.compute: List[ComputeRecord] = []
         self.adjustments: List[TransferRecord] = []
@@ -160,6 +174,7 @@ class CostModel:
             self.peers.clear()
             self.events.clear()
             self.placements.clear()
+            self.cold_predictions = 0   # the installed profile survives reset
 
     # -- accounting ---------------------------------------------------------
     def record_transfer(self, direction: str, device: int, nbytes: int,
@@ -185,16 +200,36 @@ class CostModel:
             self.placements.append(PlacementRecord(task, device,
                                                    float(predicted_s), policy))
 
-    def kernel_time(self, kernel: str) -> Optional[float]:
-        """Mean observed compute seconds for ``kernel`` (None if never run).
+    def kernel_time(self, kernel: str, *,
+                    default: Optional[float] = None) -> float:
+        """Estimated compute seconds for ``kernel`` — never ``None``.
 
-        The estimate a cost-driven placement policy feeds its
-        earliest-finish-time clock; it sharpens as more regions of the same
-        kernel retire.
+        The fallback ladder (the estimate a cost-driven placement policy
+        feeds its earliest-finish-time clock):
+
+        1. mean of the live observations (sharpens as regions retire);
+        2. the installed calibration profile's measured seed
+           (:meth:`load_profile`);
+        3. ``default`` if the caller passed one (a policy's own
+           ``default_task_s``), else the documented
+           :data:`DEFAULT_KERNEL_TIME_S`.
+
+        Reaching rung 3 is a *cold prediction* — placement ran blind — and
+        is counted in ``summary()["cold_predictions"]``.  (Historically this
+        method returned ``None`` on zero observations, which silently
+        degraded HEFT to insertion order.)
         """
         with self._lock:
             ts = [c.seconds for c in self.compute if c.kernel == kernel]
-        return sum(ts) / len(ts) if ts else None
+        if ts:
+            return sum(ts) / len(ts)
+        if self.profile is not None:
+            seed = self.profile.kernel_seed(kernel)
+            if seed is not None:
+                return seed
+        with self._lock:
+            self.cold_predictions += 1
+        return default if default is not None else DEFAULT_KERNEL_TIME_S
 
     def kernel_observations(self, kernel: str) -> int:
         """How many retired regions back the :meth:`kernel_time` estimate.
@@ -205,7 +240,7 @@ class CostModel:
         with self._lock:
             return sum(1 for c in self.compute if c.kernel == kernel)
 
-    def placement_report(self) -> List[Dict[str, float]]:
+    def placement_report(self, *, roofline: bool = False):
         """Predicted-vs-observed accounting for cost-driven placements.
 
         Joins each :class:`PlacementRecord` with the compute records that ran
@@ -213,6 +248,11 @@ class CostModel:
         compute; ``predicted_s`` is the policy's modeled finish time (a clock
         value, not a duration — compare *orderings* and per-task compute, not
         absolute magnitudes).
+
+        ``roofline=True`` returns ``{"placements": rows, "roofline":
+        self.roofline_summary()}`` — the per-task join plus the per-kernel
+        predicted-vs-observed roofline (``benchmarks/roofline.py`` renders
+        it next to the dry-run table).
         """
         with self._lock:
             placements = list(self.placements)
@@ -226,7 +266,90 @@ class CostModel:
                 "observed_s": sum(c.seconds for c in obs),
                 "observed_device_ok": all(c.device == p.device for c in obs),
             })
+        if roofline:
+            return {"placements": report, "roofline": self.roofline_summary()}
         return report
+
+    def roofline_summary(self) -> List[Dict[str, object]]:
+        """Per-kernel predicted-vs-observed roofline rows.
+
+        For every kernel with live observations and/or a calibration-profile
+        entry: the calibrated seed vs the mean observed seconds
+        (``model_ratio`` = observed/calibrated, 1.0 = the model nailed it),
+        the dry-run FLOPs / bytes-accessed / arithmetic intensity, the
+        achieved FLOP/s, and the chip roofline bound at that intensity
+        (``min(peak, intensity × HBM bandwidth)`` with the §Roofline
+        TPU-v5e-class constants — "memory"-bound left of the ridge point,
+        "compute"-bound right of it).
+        """
+        with self._lock:
+            compute = list(self.compute)
+        prof_kernels = dict(getattr(self.profile, "kernels", None) or {})
+        names = sorted({c.kernel for c in compute if c.kernel}
+                       | set(prof_kernels))
+        rows: List[Dict[str, object]] = []
+        for name in names:
+            ts = [c.seconds for c in compute if c.kernel == name]
+            observed = sum(ts) / len(ts) if ts else None
+            kp = prof_kernels.get(name)
+            calibrated = kp.seconds if kp is not None else None
+            flops = kp.flops if kp is not None else 0.0
+            nbytes = kp.bytes_accessed if kp is not None else 0.0
+            intensity = flops / nbytes if nbytes else 0.0
+            roof = min(PEAK_FLOPS_BF16, intensity * HBM_BW_Bps) \
+                if intensity else None
+            achieved = flops / observed if (observed and flops) else None
+            rows.append({
+                "kernel": name, "observations": len(ts),
+                "observed_s": observed, "calibrated_s": calibrated,
+                "model_ratio": (observed / calibrated
+                                if observed and calibrated else None),
+                "flops": flops, "bytes_accessed": nbytes,
+                "intensity": intensity,
+                "achieved_flops_per_s": achieved,
+                "roof_flops_per_s": roof,
+                "roofline_fraction": (achieved / roof
+                                      if achieved and roof else None),
+                "bound": (("compute" if intensity >= PEAK_FLOPS_BF16
+                           / HBM_BW_Bps else "memory")
+                          if intensity else None),
+            })
+        return rows
+
+    def load_profile(self, profile, *, n_devices: Optional[int] = None,
+                     table_fingerprint: Optional[str] = None) -> None:
+        """Seed the model from a measured per-host CalibrationProfile.
+
+        After a staleness check (``profile.check`` — pool shape, topology
+        racks, kernel-table fingerprint, schema version must match;
+        :class:`~repro.core.calibrate.StaleProfileError` otherwise):
+
+        * :meth:`kernel_time` falls back to the profile's measured kernel
+          seconds until live observations land (rung 2 of the ladder);
+        * ``link`` (the host funnel) and ``peer_link`` are replaced by the
+          measured alpha-beta fits, so ``comm_time`` / ``edge_time`` /
+          :meth:`peer_link_for` — and through them HEFT's peer-vs-funnel
+          comparison and ``route_edge``'s ``"peer+int8"`` arithmetic — all
+          price with observations instead of constants;
+        * an installed :class:`~repro.core.topology.Topology` gets its
+          intra/inter tier links replaced by the per-tier measurements.
+        """
+        profile.check(n_devices=n_devices, topology=self.topology,
+                      table_fingerprint=table_fingerprint)
+        self.profile = profile
+        funnel = profile.link_model("funnel")
+        if funnel is not None:
+            self.link = funnel
+        peer = profile.link_model("peer") or profile.link_model("peer:intra")
+        if peer is not None:
+            self.peer_link = peer
+        if self.topology is not None:
+            intra = profile.link_model("peer:intra")
+            inter = profile.link_model("peer:inter")
+            if intra is not None:
+                self.topology.intra = intra
+            if inter is not None:
+                self.topology.inter = inter
 
     def record_peer(self, src: int, dst: int, nbytes: int,
                     n_messages: int = 1, tag: str = "") -> None:
@@ -462,4 +585,5 @@ class CostModel:
             "compute_s": self.compute_time(),
             "makespan_s": self.makespan(),
             "makespan_overlap_s": self.makespan(overlap=True),
+            "cold_predictions": float(self.cold_predictions),
         }

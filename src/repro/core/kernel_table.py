@@ -29,6 +29,11 @@ class KernelEntry:
     name: str
     fn: Callable
     signature: Optional[str] = None  # signature class for lax.switch dispatch
+    # zero-arg callable returning example operands (positional tuple or
+    # kwargs dict) — lets the calibration pass micro-benchmark the kernel
+    # without the caller supplying operand shapes.  Excluded from
+    # fingerprint(): it is measurement metadata, not dispatch identity.
+    example: Optional[Callable] = None
 
 
 class KernelTable:
@@ -46,19 +51,25 @@ class KernelTable:
         self._by_name: Dict[str, KernelEntry] = {}
 
     # -- registration -----------------------------------------------------
-    def register(self, name: str, fn: Callable, *, signature: Optional[str] = None) -> int:
+    def register(self, name: str, fn: Callable, *,
+                 signature: Optional[str] = None,
+                 example: Optional[Callable] = None) -> int:
         if name in self._by_name:
             raise ValueError(f"kernel {name!r} already registered")
-        entry = KernelEntry(index=len(self._entries), name=name, fn=fn, signature=signature)
+        entry = KernelEntry(index=len(self._entries), name=name, fn=fn,
+                            signature=signature, example=example)
         self._entries.append(entry)
         self._by_name[name] = entry
         return entry.index
 
-    def kernel(self, name: Optional[str] = None, *, signature: Optional[str] = None):
+    def kernel(self, name: Optional[str] = None, *,
+               signature: Optional[str] = None,
+               example: Optional[Callable] = None):
         """Decorator: ``@table.kernel()`` — the 'outlining' step of paper §4."""
 
         def deco(fn: Callable) -> Callable:
-            self.register(name or fn.__name__, fn, signature=signature)
+            self.register(name or fn.__name__, fn, signature=signature,
+                          example=example)
             return fn
 
         return deco

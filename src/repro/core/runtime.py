@@ -22,6 +22,7 @@ mode vocabulary so §Perf can compare like for like.
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -143,6 +144,40 @@ class ClusterRuntime:
                 and isinstance(self.transport, PeerTransport)):
             kw["transport"] = self.transport
         return wavefront_offload(self.ex, tasks, **kw)
+
+    def calibrate(self, operands: Optional[Dict[str, Any]] = None, *,
+                  reps: int = 5, warmup: int = 2,
+                  sizes: Sequence[int] = (1 << 14, 1 << 20, 1 << 23),
+                  save_dir: Optional[str] = None, load: bool = True):
+        """Run the measured-cost calibration pass over this runtime's pool.
+
+        Micro-benchmarks every registered kernel that has example operands
+        (``operands[name]`` or a table ``example=``) plus the funnel and
+        peer links per direction/tier, builds a per-host
+        :class:`~repro.core.calibrate.CalibrationProfile`, optionally
+        persists it (``save_dir``), and — unless ``load=False`` — installs
+        it on the cost model so placement/routing price with the measured
+        numbers.  Returns the profile.
+        """
+        from .calibrate import calibrate as _calibrate
+        profile = _calibrate(self.pool, operands, reps=reps, warmup=warmup,
+                             sizes=sizes, topology=self.cfg.topology,
+                             save_dir=save_dir)
+        if load:
+            self.load_calibration(profile)
+        return profile
+
+    def load_calibration(self, profile):
+        """Install a CalibrationProfile (object or JSON path) on the cost
+        model, after validating it against this pool's shape, topology and
+        kernel-table fingerprint (raises
+        :class:`~repro.core.calibrate.StaleProfileError` on mismatch)."""
+        from .calibrate import CalibrationProfile
+        if isinstance(profile, (str, bytes, os.PathLike)):
+            profile = CalibrationProfile.load(os.fspath(profile))
+        self.cost.load_profile(profile, n_devices=len(self.pool),
+                               table_fingerprint=self.pool.table.fingerprint())
+        return profile
 
     def memory_report(self) -> Dict[int, Dict[str, int]]:
         """Per-device present-table memory accounting.

@@ -329,17 +329,42 @@ class HeftPlacement(PlacementPolicy):
     name = "heft"
 
     def __init__(self, default_task_s: float = 1e-3,
-                 use_observed: bool = True) -> None:
+                 use_observed: bool = True,
+                 estimates: Optional[str] = None) -> None:
         self.default_task_s = default_task_s
         # use_observed=False freezes the compute estimate at
         # ``default_task_s`` — deterministic placement for tests/benchmarks
         # (measured timings on a shared host include jit-compile spikes that
         # would drown the modeled link and vary run to run)
         self.use_observed = use_observed
+        # estimates selects the compute-estimate source explicitly:
+        #   "observed"   — CostModel.kernel_time's full ladder: live mean →
+        #                  calibration seed → default_task_s (the default;
+        #                  live observations refine the calibrated seeds)
+        #   "calibrated" — the installed CalibrationProfile's seed only
+        #                  (→ default_task_s when unseeded): deterministic
+        #                  placement from measured numbers, immune to the
+        #                  same-host jit/timing noise "observed" ingests
+        #   "frozen"     — default_task_s always (== use_observed=False)
+        if estimates is None:
+            estimates = "observed" if use_observed else "frozen"
+        if estimates not in ("observed", "calibrated", "frozen"):
+            raise ValueError(f"unknown estimates mode {estimates!r}")
+        self.estimates = estimates
         self._ready: Dict[int, float] = {}
 
     def begin(self, ctx: PlacementContext) -> None:
         self._ready = {d: 0.0 for d in range(ctx.D)}
+
+    def _estimate(self, ctx: PlacementContext, kernel: str) -> float:
+        """The compute estimate for one node, per the estimates mode."""
+        if self.estimates == "frozen":
+            return self.default_task_s
+        if self.estimates == "calibrated":
+            profile = getattr(ctx.cost, "profile", None)
+            seed = profile.kernel_seed(kernel) if profile is not None else None
+            return seed if seed is not None else self.default_task_s
+        return ctx.cost.kernel_time(kernel, default=self.default_task_s)
 
     _FUNNEL = HostFunnelTransport()     # prices the fetch + re-send wire
 
@@ -365,9 +390,7 @@ class HeftPlacement(PlacementPolicy):
 
     def place(self, ctx: PlacementContext, node: TaskNode,
               ready_index: int, region_tag: str) -> int:
-        est = ctx.cost.kernel_time(node.kernel) if self.use_observed else None
-        if est is None:
-            est = self.default_task_s
+        est = self._estimate(ctx, node.kernel)
         cands = ctx.candidates()
         if node.device is not None and (ctx.healthy is None
                                         or node.device in cands):
@@ -434,8 +457,9 @@ class SloPlacement(HeftPlacement):
     name = "slo"
 
     def __init__(self, default_task_s: float = 1e-3,
-                 use_observed: bool = True) -> None:
-        super().__init__(default_task_s, use_observed)
+                 use_observed: bool = True,
+                 estimates: Optional[str] = None) -> None:
+        super().__init__(default_task_s, use_observed, estimates)
         self._backlog: Dict[int, float] = {}
         self._drained_at: Optional[float] = None
 
@@ -478,9 +502,7 @@ class SloPlacement(HeftPlacement):
 
     def place(self, ctx: PlacementContext, node: TaskNode,
               ready_index: int, region_tag: str) -> int:
-        est = ctx.cost.kernel_time(node.kernel) if self.use_observed else None
-        if est is None:
-            est = self.default_task_s
+        est = self._estimate(ctx, node.kernel)
         cands = ctx.candidates()
         if node.device is not None and (ctx.healthy is None
                                         or node.device in cands):

@@ -84,8 +84,13 @@ class StragglerDetector:
     def threshold(self, kernel: str) -> Optional[float]:
         """Seconds after which a task of ``kernel`` counts as a straggler
         (None = no usable estimate yet, never hedge)."""
-        est = self.cost.kernel_time(kernel)
-        if est is None or self.cost.kernel_observations(kernel) < self.min_observations:
+        # gate on observation count BEFORE consulting kernel_time: its
+        # fallback ladder (calibration seed → documented default) never
+        # returns None, and an un-observed kernel must use the explicit
+        # baseline here, not a cold default that would hedge healthy work
+        if self.cost.kernel_observations(kernel) >= self.min_observations:
+            est = self.cost.kernel_time(kernel)
+        else:
             est = self.baseline.get(kernel)
         if est is None:
             return None

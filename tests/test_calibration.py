@@ -1,0 +1,274 @@
+"""Measured cost calibration: profiles, seeding, staleness, bit-identity.
+
+The tentpole invariant, tested from three sides:
+
+* a saved profile round-trips losslessly and seeds ``kernel_time`` /
+  ``edge_time`` exactly as the in-memory one does;
+* a profile that describes a different pool shape, topology, kernel table
+  or schema version is rejected (:class:`StaleProfileError`), never
+  silently applied;
+* calibration reshapes *models only* — sparselu results are bitwise
+  identical with calibration on or off, under every placement policy.
+"""
+import os
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+
+from repro.core import (CalibrationProfile, ClusterRuntime, HeftPlacement,
+                        KernelProfile, LinkProfile, RuntimeConfig,
+                        StaleProfileError, Topology, fit_alpha_beta)
+from repro.core.calibrate import SCHEMA_VERSION, host_info
+from repro.core.costmodel import (CostModel, DEFAULT_KERNEL_TIME_S, LinkModel,
+                                  PAPER_ETHERNET)
+from repro.core.kernel_table import KernelTable
+from repro.ft.stragglers import StragglerDetector
+
+
+def _toy_table() -> KernelTable:
+    t = KernelTable()
+    t.register("axpy", lambda x, y: {"out": 2.0 * x + y},
+               example=lambda: (jnp.ones((64, 64), jnp.float32),
+                                jnp.ones((64, 64), jnp.float32)))
+    t.register("scale", lambda x: {"out": 3.0 * x},
+               example=lambda: jnp.ones((64, 64), jnp.float32))
+    return t
+
+
+def _synthetic_profile(n_devices, fingerprint, *, kernel_s=42e-6,
+                       funnel=(2e9, 5e-6), peer=(1e7, 2e-4),
+                       version=SCHEMA_VERSION, topology=None):
+    return CalibrationProfile(
+        version=version, created_unix=1.0, host=host_info(),
+        n_devices=n_devices, table_fingerprint=fingerprint,
+        topology=topology,
+        kernels={"axpy": KernelProfile(name="axpy", seconds=kernel_s),
+                 "scale": KernelProfile(name="scale", seconds=2 * kernel_s)},
+        links={"funnel": LinkProfile("funnel", *funnel),
+               "peer": LinkProfile("peer", *peer)})
+
+
+# ---------------------------------------------------------------------------
+# alpha-beta fit
+# ---------------------------------------------------------------------------
+def test_fit_alpha_beta_recovers_link():
+    bw, lat = 5e8, 2e-4
+    samples = [(n, lat + n / bw) for n in (1 << 14, 1 << 18, 1 << 22)] * 2
+    got_lat, got_bw = fit_alpha_beta(samples)
+    assert got_lat == pytest.approx(lat, rel=1e-6)
+    assert got_bw == pytest.approx(bw, rel=1e-6)
+
+
+def test_fit_alpha_beta_degenerate_clamps():
+    lat, bw = fit_alpha_beta([(1024, 1e-4), (1024, 1.2e-4)])
+    assert lat >= 0.0 and bw == 1e12
+    # noisy tiny messages where time *decreases* with size: bandwidth clamps
+    lat, bw = fit_alpha_beta([(1024, 2e-4), (4096, 1e-4)])
+    assert bw == 1e12 and lat >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# round trip + seeding
+# ---------------------------------------------------------------------------
+def test_profile_round_trip_seeds_identically(tmp_path):
+    rt = ClusterRuntime(RuntimeConfig(n_virtual=2, link=PAPER_ETHERNET),
+                        table=_toy_table())
+    try:
+        prof = rt.calibrate(reps=2, warmup=1, sizes=(1 << 12, 1 << 16),
+                            save_dir=str(tmp_path))
+        path = os.path.join(str(tmp_path), f"{prof.host['hostname']}.json")
+        assert os.path.exists(path)
+        loaded = CalibrationProfile.load(path)
+        assert loaded.to_dict() == prof.to_dict()
+
+        # a fresh runtime seeded from disk prices exactly like the live one
+        rt2 = ClusterRuntime(RuntimeConfig(n_virtual=2, link=PAPER_ETHERNET),
+                             table=_toy_table())
+        try:
+            rt2.load_calibration(path)
+            for k in ("axpy", "scale"):
+                assert rt2.cost.kernel_time(k) == prof.kernel_seed(k)
+            assert rt2.cost.link == prof.link_model("funnel")
+            nb = 1 << 16
+            assert rt2.cost.link.time(nb) == \
+                prof.link_model("funnel").time(nb)
+        finally:
+            rt2.shutdown()
+    finally:
+        rt.shutdown()
+
+
+def test_calibration_discards_its_own_traffic():
+    rt = ClusterRuntime(RuntimeConfig(n_virtual=2, link=PAPER_ETHERNET),
+                        table=_toy_table())
+    try:
+        rt.calibrate(reps=2, warmup=1, sizes=(1 << 12, 1 << 16),
+                     save_dir=None)
+        assert rt.cost.transfers == []
+        assert rt.cost.peers == []
+        assert rt.cost.compute == []
+    finally:
+        rt.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# staleness
+# ---------------------------------------------------------------------------
+def test_stale_profile_rejected():
+    rt = ClusterRuntime(RuntimeConfig(n_virtual=2, link=PAPER_ETHERNET),
+                        table=_toy_table())
+    try:
+        fp = rt.pool.table.fingerprint()
+        # matching profile loads fine
+        rt.load_calibration(_synthetic_profile(2, fp))
+        # wrong device count
+        with pytest.raises(StaleProfileError, match="devices"):
+            rt.load_calibration(_synthetic_profile(4, fp))
+        # wrong kernel table
+        with pytest.raises(StaleProfileError, match="fingerprint"):
+            rt.load_calibration(_synthetic_profile(2, "0" * 16))
+        # wrong schema version
+        with pytest.raises(StaleProfileError, match="schema"):
+            rt.load_calibration(_synthetic_profile(2, fp, version=-1))
+        # profiled under a topology this flat runtime does not have
+        topo = Topology.two_tier(1, 2).describe()
+        with pytest.raises(StaleProfileError, match="topology"):
+            rt.load_calibration(_synthetic_profile(2, fp, topology=topo))
+    finally:
+        rt.shutdown()
+
+
+def test_stale_topology_racks_mismatch():
+    topo = Topology.two_tier(2, 2)
+    rt = ClusterRuntime(RuntimeConfig(n_virtual=4, link=PAPER_ETHERNET,
+                                      comm_mode="direct", topology=topo),
+                        table=_toy_table())
+    try:
+        fp = rt.pool.table.fingerprint()
+        ok = _synthetic_profile(4, fp, topology=topo.describe())
+        rt.load_calibration(ok)
+        other = Topology.two_tier(4, 1).describe()
+        with pytest.raises(StaleProfileError, match="racks"):
+            rt.load_calibration(_synthetic_profile(4, fp, topology=other))
+    finally:
+        rt.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# kernel_time fallback ladder
+# ---------------------------------------------------------------------------
+def test_kernel_time_never_none_and_counts_cold():
+    cost = CostModel()
+    assert cost.kernel_time("nope") == DEFAULT_KERNEL_TIME_S
+    assert cost.kernel_time("nope", default=7e-4) == 7e-4
+    assert cost.summary()["cold_predictions"] == 2.0
+
+    cost.profile = _synthetic_profile(1, None)
+    assert cost.kernel_time("axpy") == 42e-6        # profile seed, not cold
+    assert cost.summary()["cold_predictions"] == 2.0
+
+    cost.record_compute(0, 1e-2, kernel="axpy")
+    cost.record_compute(0, 2e-2, kernel="axpy")
+    assert cost.kernel_time("axpy") == pytest.approx(1.5e-2)  # live wins
+    assert cost.summary()["cold_predictions"] == 2.0
+
+
+def test_reset_keeps_profile_clears_cold_counter():
+    cost = CostModel()
+    cost.profile = _synthetic_profile(1, None)
+    cost.kernel_time("unseeded")
+    assert cost.cold_predictions == 1
+    cost.reset()
+    assert cost.cold_predictions == 0
+    assert cost.kernel_time("axpy") == 42e-6
+
+
+def test_straggler_threshold_ignores_cold_default():
+    cost = CostModel()
+    det = StragglerDetector(cost, min_observations=2, grace_s=0.0)
+    # no observations, no baseline: never hedge (despite kernel_time's
+    # never-None ladder)
+    assert det.threshold("axpy") is None
+    det2 = StragglerDetector(cost, min_observations=2, grace_s=0.0,
+                             baseline={"axpy": 1e-2})
+    assert det2.threshold("axpy") == pytest.approx(3.0 * 1e-2)
+
+
+# ---------------------------------------------------------------------------
+# bit identity + determinism across policies
+# ---------------------------------------------------------------------------
+def _sparselu_run(policy, profile):
+    from bots_sparselu import _build_dag, _make_table, _matrix
+    K, B = 3, 16
+    mat = _matrix(K, B)
+    rt = ClusterRuntime(RuntimeConfig(n_virtual=3, link=PAPER_ETHERNET),
+                        table=_make_table(K))
+    try:
+        if profile:
+            prof = _synthetic_profile(3, rt.pool.table.fingerprint())
+            prof.kernels = {k: KernelProfile(name=k, seconds=30e-6)
+                            for k in ("lu0", "fwd", "bdiv", "bmod")}
+            rt.load_calibration(prof)
+        res = rt.wavefront_offload(_build_dag(mat, K, B), nowait=True,
+                                   peer=True, policy=policy)
+        values = {k: np.asarray(v) for k, v in res.items()}
+        placements = [(p.task, p.device) for p in rt.cost.placements]
+    finally:
+        rt.shutdown()
+    return values, placements
+
+
+@pytest.mark.parametrize("policy", [
+    "round-robin", "locality",
+    HeftPlacement(default_task_s=5e-6, use_observed=False)],
+    ids=["round-robin", "locality", "heft-frozen"])
+def test_results_bit_identical_calibration_on_off(policy):
+    base, _ = _sparselu_run(policy, profile=False)
+    cal_policy = HeftPlacement(estimates="calibrated") \
+        if isinstance(policy, HeftPlacement) else policy
+    cal, _ = _sparselu_run(cal_policy, profile=True)
+    assert sorted(base) == sorted(cal)
+    for k in base:
+        assert base[k].tobytes() == cal[k].tobytes(), k
+
+
+def test_calibrated_estimates_are_deterministic():
+    runs = [_sparselu_run(HeftPlacement(estimates="calibrated"),
+                          profile=True) for _ in range(2)]
+    assert runs[0][1] == runs[1][1]          # identical placement decisions
+    for k in runs[0][0]:
+        assert runs[0][0][k].tobytes() == runs[1][0][k].tobytes()
+
+
+def test_heft_estimates_modes_validated():
+    with pytest.raises(ValueError, match="estimates"):
+        HeftPlacement(estimates="vibes")
+    assert HeftPlacement(use_observed=False).estimates == "frozen"
+    assert HeftPlacement().estimates == "observed"
+
+
+# ---------------------------------------------------------------------------
+# roofline report plumbing
+# ---------------------------------------------------------------------------
+def test_placement_report_roofline_payload():
+    cost = CostModel()
+    cost.profile = _synthetic_profile(1, None)
+    cost.profile.kernels["axpy"].flops = 8192.0
+    cost.profile.kernels["axpy"].bytes_accessed = 49152.0
+    cost.record_compute(0, 50e-6, kernel="axpy")
+    rep = cost.placement_report(roofline=True)
+    assert set(rep) == {"placements", "roofline"}
+    rows = {r["kernel"]: r for r in rep["roofline"]}
+    axpy = rows["axpy"]
+    assert axpy["observed_s"] == pytest.approx(50e-6)
+    assert axpy["calibrated_s"] == pytest.approx(42e-6)
+    assert axpy["model_ratio"] == pytest.approx(50e-6 / 42e-6)
+    assert axpy["intensity"] == pytest.approx(8192.0 / 49152.0)
+    assert axpy["bound"] == "memory"
+    # seeded-but-never-run kernel still shows up, with no observed side
+    assert rows["scale"]["observed_s"] is None
+    assert rows["scale"]["calibrated_s"] == pytest.approx(84e-6)
